@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: wall time of the compiled CPU paths (jnp) and
+interpret-mode correctness deltas vs ref -- correctness-grade numbers on
+this box; real perf comes from the roofline terms.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_attention():
+    from repro.kernels.flash_attention import ops, ref
+
+    rows = []
+    rng = np.random.RandomState(0)
+    for (B, S, H, Hkv, Dh) in [(1, 512, 8, 2, 64), (2, 1024, 8, 8, 64)]:
+        q = jnp.asarray(rng.randn(B, S, H, Dh), jnp.float32)
+        k = jnp.asarray(rng.randn(B, S, Hkv, Dh), jnp.float32)
+        v = jnp.asarray(rng.randn(B, S, Hkv, Dh), jnp.float32)
+        chunked = jax.jit(lambda q, k, v: ops._chunked_mha(q, k, v, True, 0.0, 0))
+        us = _timeit(chunked, q, k, v)
+        want = ref.mha_reference(q, k, v)
+        err = float(jnp.max(jnp.abs(chunked(q, k, v) - want)))
+        rows.append((f"attn_chunked_B{B}_S{S}_H{H}", us, f"max_err={err:.1e}"))
+    return rows
+
+
+def bench_rmsnorm():
+    from repro.kernels.rmsnorm import ops, ref
+
+    rows = []
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(64, 512, 1024), jnp.float32)
+    w = jnp.asarray(rng.randn(1024), jnp.float32)
+    f = jax.jit(lambda x, w: ops.rmsnorm(x, w))
+    us = _timeit(f, x, w)
+    err = float(jnp.max(jnp.abs(f(x, w) - ref.rmsnorm_reference(x, w))))
+    rows.append(("rmsnorm_64x512x1024", us, f"max_err={err:.1e}"))
+    return rows
+
+
+def bench_ssm():
+    from repro.kernels.ssm_scan import ops, ref
+
+    rows = []
+    rng = np.random.RandomState(0)
+    B, S, H, P, N = 2, 512, 8, 64, 64
+    x = jnp.asarray(rng.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(B, S, H)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.randn(H)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    D = jnp.asarray(rng.randn(H), jnp.float32)
+    chunked = jax.jit(lambda *a: ops._chunked_jnp(*a))
+    seq = jax.jit(lambda *a: ref.selective_scan_reference(*a))
+    us_c = _timeit(chunked, x, dt, A, Bm, Cm, D)
+    us_s = _timeit(seq, x, dt, A, Bm, Cm, D)
+    err = float(jnp.max(jnp.abs(chunked(x, dt, A, Bm, Cm, D)
+                                - seq(x, dt, A, Bm, Cm, D))))
+    rows.append((f"ssm_chunked_S{S}", us_c,
+                 f"sequential_us={us_s:.0f};speedup={us_s/us_c:.1f}x;err={err:.1e}"))
+    return rows
+
+
+ALL_BENCHES = [bench_attention, bench_rmsnorm, bench_ssm]

@@ -1,0 +1,154 @@
+"""The paper's analyses as executable tables.
+
+One function per claim/analysis in the paper; each returns a list of
+(name, value, derived) rows for the CSV printer in run.py.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import schedules as S
+from repro.core.planner import best_plan, enumerate_plans
+from repro.core.simulator import evaluate, simulate_async, simulate_rounds
+from repro.core.topology import paper_smp_cluster, tpu_v5e_cluster
+
+
+def _t(fn, *a, **k):
+    t0 = time.perf_counter()
+    out = fn(*a, **k)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def table_c1_broadcast_intra_machine():
+    """C1: intra-machine broadcast is O(1) writes vs O(log n) messages."""
+    rows = []
+    for cores in [2, 4, 8, 16, 32]:
+        topo = paper_smp_cluster(n_machines=1, cores=cores, nics=1)
+        flat = S.build(topo, "broadcast", "flat", 4096.0)
+        hier = S.build(topo, "broadcast", "hier_par", 4096.0)
+        rows.append((
+            f"c1_bcast_cores{cores}",
+            simulate_rounds(hier) * 1e6,
+            f"hier_rounds={hier.n_rounds};flat_rounds={flat.n_rounds};"
+            f"expected_flat={math.ceil(math.log2(cores))}",
+        ))
+    return rows
+
+
+def table_c2_gather_asymmetry():
+    """C2: gather is not inverse broadcast; rounds and cost per direction."""
+    rows = []
+    for m in [1024.0, 65536.0, 1048576.0]:
+        topo = paper_smp_cluster(n_machines=5, cores=4, nics=4)
+        bc = S.build(topo, "broadcast", "hier_par", m)
+        ga = S.build(topo, "gather", "hier_par", m)
+        rows.append((
+            f"c2_asym_m{int(m)}",
+            simulate_rounds(ga) * 1e6,
+            f"bcast_us={simulate_rounds(bc)*1e6:.1f};"
+            f"bcast_rounds={bc.n_rounds};gather_rounds={ga.n_rounds}",
+        ))
+    return rows
+
+
+def table_c3_heuristics():
+    """C3/Rule 3: parallel egress vs single-leader hierarchical broadcast."""
+    rows = []
+    for M, d in [(9, 2), (27, 8), (64, 8)]:
+        topo = paper_smp_cluster(n_machines=M, cores=max(d, 4), nics=d)
+        seq = simulate_rounds(S.build(topo, "broadcast", "hier_seq", 4096.0))
+        par = simulate_rounds(S.build(topo, "broadcast", "hier_par", 4096.0))
+        rows.append((
+            f"c3_bcast_M{M}_d{d}",
+            par * 1e6,
+            f"hier_seq_us={seq*1e6:.1f};speedup={seq/par:.2f}x",
+        ))
+    return rows
+
+
+def table_c4_alltoall_gain():
+    """C4 anchor: Kumar et al. measured ~55% all-to-all improvement; the
+    model reproduces a gain of that magnitude in the consolidation regime."""
+    rows = []
+    topo = paper_smp_cluster(n_machines=8, cores=4, nics=2)
+    for m in [64.0, 512.0, 4096.0, 65536.0, 1048576.0]:
+        flat = simulate_rounds(S.build(topo, "all_to_all", "flat", m))
+        hier = simulate_rounds(S.build(topo, "all_to_all", "hier_par", m))
+        rows.append((
+            f"c4_a2a_m{int(m)}",
+            hier * 1e6,
+            f"flat_us={flat*1e6:.1f};gain={100*(1-hier/flat):.1f}%",
+        ))
+    return rows
+
+
+def table_model_vs_async():
+    """Round-based model vs dependency-driven simulation (model validation)."""
+    rows = []
+    topo = paper_smp_cluster(n_machines=8, cores=4, nics=2)
+    for coll, strat in [("broadcast", "hier_par"), ("gather", "hier_par"),
+                        ("all_reduce", "hier_par"), ("all_reduce", "hier_par_bw"),
+                        ("all_to_all", "hier_par"), ("all_gather", "hier_par")]:
+        sched = S.build(topo, coll, strat, 65536.0)
+        tr = simulate_rounds(sched)
+        ta = simulate_async(sched)
+        rows.append((
+            f"model_{coll}_{strat}",
+            tr * 1e6,
+            f"async_us={ta*1e6:.1f};ratio={ta/tr:.3f}",
+        ))
+    return rows
+
+
+def table_planner_tpu():
+    """Planner decisions on the production TPU topology (2 pods)."""
+    rows = []
+    topo = tpu_v5e_cluster(n_pods=2)
+    for coll in ["broadcast", "gather", "all_gather", "all_reduce", "all_to_all"]:
+        for nbytes in [1e4, 1e6, 1e8, 4e9]:
+            t0 = time.perf_counter()
+            plans = enumerate_plans(topo, coll, nbytes,
+                                    lossy_ok=(coll == "all_reduce"))
+            us = (time.perf_counter() - t0) * 1e6
+            best, worst = plans[0], plans[-1]
+            rows.append((
+                f"plan_{coll}_{nbytes:.0e}",
+                us,
+                f"best={best.strategy};t={best.t_rounds*1e3:.3f}ms;"
+                f"vs_worst={worst.t_rounds/best.t_rounds:.1f}x",
+            ))
+    return rows
+
+
+def table_gradsync_scenarios():
+    """End-to-end gradient-sync planning for the assigned archs' grad sizes
+    (f32 bytes), 2-pod cluster: the paper's model vs the flat baseline."""
+    rows = []
+    topo = tpu_v5e_cluster(n_pods=2)
+    from repro.configs import ARCH_IDS, get_config
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        gbytes = cfg.param_count() * 4.0 / 256  # FSDP shard per chip crosses
+        plans = enumerate_plans(topo, "all_reduce", gbytes, lossy_ok=True)
+        flat = next(p for p in plans if p.strategy == "flat")
+        best = plans[0]
+        rows.append((
+            f"gradsync_{arch}",
+            best.t_rounds * 1e6,
+            f"strategy={best.strategy};flat_ms={flat.t_rounds*1e3:.2f};"
+            f"speedup={flat.t_rounds/best.t_rounds:.1f}x",
+        ))
+    return rows
+
+
+ALL_TABLES = [
+    table_c1_broadcast_intra_machine,
+    table_c2_gather_asymmetry,
+    table_c3_heuristics,
+    table_c4_alltoall_gain,
+    table_model_vs_async,
+    table_planner_tpu,
+    table_gradsync_scenarios,
+]

@@ -1,0 +1,186 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md SRoofline).
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = analytic model FLOPs / (chips * 197 TF/s)
+                    (XLA's cost_analysis undercounts while-loop bodies, so
+                    the compute term uses the standard analytic accounting;
+                    the HLO number is reported alongside.)
+  memory term     = HLO bytes-accessed / (chips * 819 GB/s)   [CPU upper
+                    bound: bf16 temps are stored f32 on CPU]
+  collective term = per-device wire bytes / 50 GB/s ICI (assignment formula)
+                    raw + bf16-corrected; multi-pod adds the two-tier DCN
+                    term crossing/(pods*64 NICs*25GB/s) per the paper model.
+
+Dominant term => the bottleneck; MODEL_FLOPS/HLO_FLOPs*chips => useful ratio.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.core.topology import (
+    V5E_DCN_BW_PER_HOST,
+    V5E_HBM_BW,
+    V5E_HOSTS_PER_POD,
+    V5E_ICI_BW,
+    V5E_PEAK_FLOPS,
+)
+
+CHIPS = {"single": 256, "multi": 512}
+PODS = {"single": 1, "multi": 2}
+
+
+def model_flops(arch: str, shape_name: str, accum_meta: dict | None = None) -> float:
+    """Analytic model FLOPs for one step of this cell (whole cluster)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    n_attn = 0 if cfg.family == "ssm" else (
+        L // max(cfg.attn_every, 1) if cfg.family == "hybrid" else L
+    )
+    # causal self-attention fwd FLOPs per layer: qk + av, halved by causality
+    attn_fwd = 2.0 * B * H * Dh * S * S
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * N * tokens + 3.0 * n_attn * attn_fwd  # fwd + 2x bwd
+        if cfg.family == "encdec":
+            # encoder self-attn (non-causal, 2x) + decoder cross-attn
+            flops += 3.0 * cfg.n_enc_layers * 2 * attn_fwd
+            flops += 3.0 * L * 2 * attn_fwd
+        return flops
+    if shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * N * tokens + n_attn * attn_fwd
+        if cfg.family == "encdec":
+            flops += cfg.n_enc_layers * 2 * attn_fwd + L * 2 * attn_fwd
+        return flops
+    # decode: one token against an S-long cache
+    flops = 2.0 * N * B
+    if cfg.family == "hybrid":
+        W = min(S, 4096)
+        flops += 4.0 * (L // cfg.attn_every) * H * Dh * W * B
+    elif cfg.family != "ssm":
+        flops += 4.0 * L * H * Dh * S * B
+    return flops
+
+
+def load_cells(outdir: str = "results/dryrun", tag: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(Path(outdir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag", "") != tag:
+            continue
+        if rec.get("skipped") or not rec.get("ok"):
+            rows.append(rec)
+            continue
+        rows.append(analyse(rec))
+    return rows
+
+
+def analyse(rec: dict) -> dict:
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    chips = CHIPS[mesh]
+    pods = PODS[mesh]
+    mf = model_flops(arch, shape)
+    t_compute = mf / (chips * V5E_PEAK_FLOPS)
+    hlo_flops = rec["cost"]["flops"] * chips  # cost_analysis is per-partition
+    bytes_acc = rec["cost"]["bytes_accessed"]
+    t_memory = bytes_acc / V5E_HBM_BW          # per device already
+    coll = rec["collectives"]
+    wire = coll["wire_bytes_per_device"]
+    wire_c = coll.get("wire_bytes_bf16_corrected", wire)
+    t_coll_raw = wire / V5E_ICI_BW
+    t_coll = wire_c / V5E_ICI_BW
+    t_dcn = 0.0
+    if pods > 1:
+        t_dcn = coll["pod_crossing_bytes_total"] / (
+            pods * V5E_HOSTS_PER_POD * V5E_DCN_BW_PER_HOST
+        )
+    terms = {"compute": t_compute, "memory": t_memory / 2,  # bf16-on-TPU est.
+             "collective": t_coll, "dcn": t_dcn}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    rec["roofline"] = {
+        "model_flops": mf,
+        "hlo_flops_total": hlo_flops,
+        "useful_ratio": mf / hlo_flops if hlo_flops else 0.0,
+        "t_compute_s": t_compute,
+        "t_memory_s_raw": t_memory,
+        "t_memory_s": t_memory / 2,
+        "t_collective_s_raw": t_coll_raw,
+        "t_collective_s": t_coll,
+        "t_dcn_s": t_dcn,
+        "dominant": dominant,
+        "roofline_fraction": t_compute / step_time if step_time else 0.0,
+    }
+    return rec
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':21s} {'shape':12s} {'mesh':6s} {'mem/dev':>8s} "
+           f"{'t_comp':>8s} {'t_mem':>8s} {'t_coll':>8s} {'t_dcn':>8s} "
+           f"{'domin.':>7s} {'frac':>5s} {'useful':>6s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"{r['arch']:21s} {r['shape']:12s} {r['mesh']:6s} "
+                       f"{'SKIP':>8s}  ({r['reason'][:60]})")
+            continue
+        if not r.get("ok"):
+            out.append(f"{r['arch']:21s} {r['shape']:12s} {r['mesh']:6s} FAIL")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["peak_per_device_bytes"] / 2**30
+        out.append(
+            f"{r['arch']:21s} {r['shape']:12s} {r['mesh']:6s} {mem:7.1f}G "
+            f"{rf['t_compute_s']*1e3:7.1f}m {rf['t_memory_s']*1e3:7.1f}m "
+            f"{rf['t_collective_s']*1e3:7.1f}m {rf['t_dcn_s']*1e3:7.1f}m "
+            f"{rf['dominant'][:7]:>7s} {rf['roofline_fraction']:5.2f} "
+            f"{rf['useful_ratio']:6.2f}"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = load_cells()
+    print(table(rows))
+    Path("results").mkdir(exist_ok=True)
+    Path("results/roofline.txt").write_text(table(rows))
+    # csv for EXPERIMENTS.md
+    import csv
+
+    with open("results/roofline.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["arch", "shape", "mesh", "mem_gib", "t_compute_ms",
+                    "t_memory_ms", "t_collective_ms", "t_dcn_ms",
+                    "dominant", "roofline_fraction", "useful_ratio",
+                    "skipped"])
+        for r in rows:
+            if r.get("skipped") or not r.get("ok"):
+                w.writerow([r["arch"], r["shape"], r["mesh"]] + [""] * 8 +
+                           [r.get("reason", r.get("error", ""))[:80]])
+                continue
+            rf = r["roofline"]
+            w.writerow([
+                r["arch"], r["shape"], r["mesh"],
+                round(r["memory"]["peak_per_device_bytes"] / 2**30, 2),
+                round(rf["t_compute_s"] * 1e3, 3),
+                round(rf["t_memory_s"] * 1e3, 3),
+                round(rf["t_collective_s"] * 1e3, 3),
+                round(rf["t_dcn_s"] * 1e3, 3),
+                rf["dominant"],
+                round(rf["roofline_fraction"], 3),
+                round(rf["useful_ratio"], 3),
+                "",
+            ])
+    print("\nwrote results/roofline.{txt,csv}")
+
+
+if __name__ == "__main__":
+    main()

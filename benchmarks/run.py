@@ -1,0 +1,43 @@
+"""Benchmark runner: one function per paper table/figure plus kernel
+micro-benchmarks and the roofline extraction.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract), then the
+roofline table if dry-run artifacts exist.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> None:
+    from benchmarks.kernel_bench import ALL_BENCHES
+    from benchmarks.paper_tables import ALL_TABLES
+    from benchmarks.vmem_check import rows as vmem_rows
+
+    print("name,us_per_call,derived")
+    for fn in ALL_TABLES:
+        for name, us, derived in fn():
+            print(f"{name},{us:.2f},{derived}")
+    for fn in ALL_BENCHES:
+        for name, us, derived in fn():
+            print(f"{name},{us:.2f},{derived}")
+    for name, kib, derived in vmem_rows():
+        print(f"vmem_{name},{kib:.1f},{derived}")
+
+    # roofline table (requires results/dryrun/*.json from launch.dryrun)
+    if Path("results/dryrun").exists():
+        from benchmarks import roofline
+
+        rows = roofline.load_cells()
+        done = [r for r in rows if r.get("ok")]
+        if done:
+            print()
+            print(roofline.table(rows))
+
+
+if __name__ == "__main__":
+    main()

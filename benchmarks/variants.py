@@ -1,0 +1,37 @@
+"""Summarize tagged dry-run variants (the §Perf data provenance table)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def main(outdir: str = "results/dryrun") -> None:
+    rows = []
+    for f in sorted(Path(outdir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped") or not rec.get("ok"):
+            continue
+        c = rec["collectives"]
+        rows.append((
+            rec["arch"], rec["shape"], rec["mesh"], rec.get("tag", "") or "base",
+            rec["memory"]["peak_per_device_bytes"] / 2**30,
+            c.get("wire_bytes_bf16_corrected", c["wire_bytes_per_device"]) / 1e9,
+            c["pod_crossing_bytes_total"] / 1e9,
+            rec.get("meta", {}),
+        ))
+    print(f"{'arch':21s} {'shape':12s} {'mesh':6s} {'variant':9s} "
+          f"{'mem GiB':>8s} {'wire GB':>9s} {'cross GB':>9s}")
+    for a, s, m, t, mem, w, x, meta in rows:
+        if t == "base":
+            continue
+        # find the base row
+        base = next((r for r in rows if r[:3] == (a, s, m) and r[3] == "base"),
+                    None)
+        bw = f"{base[5]:9.1f}" if base else "        -"
+        print(f"{a:21s} {s:12s} {m:6s} {t:9s} {mem:8.2f} {w:9.1f} {x:9.1f}"
+              f"   (base wire {bw})")
+
+
+if __name__ == "__main__":
+    main()

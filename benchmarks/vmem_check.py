@@ -1,0 +1,76 @@
+"""Structural VMEM budgeting for the Pallas kernels (no hardware needed).
+
+For each kernel and each production shape it will face, compute the VMEM
+working set implied by the BlockSpecs (inputs + outputs + scratch per grid
+step, double-buffered) and check it against the ~16 MiB v5e VMEM budget.
+This is the dry-run analogue of a VMEM OOM check, and documents why the
+default block shapes are what they are (MXU-aligned 128-multiples).
+"""
+
+from __future__ import annotations
+
+VMEM_BYTES = 16 * 2**20          # v5e VMEM per core
+DB = 2                           # double buffering factor for HBM->VMEM
+
+
+def flash_attention_vmem(bq=128, bk=128, dh=128, dtype_bytes=2):
+    q = bq * dh * dtype_bytes
+    k = bk * dh * dtype_bytes
+    v = bk * dh * dtype_bytes
+    o = bq * dh * dtype_bytes
+    scratch = bq * 1 * 4 * 2 + bq * dh * 4     # m, l (f32) + acc (f32)
+    logits = bq * bk * 4                        # transient [BQ, BK] f32
+    total = DB * (q + k + v + o) + scratch + logits
+    return total
+
+
+def rmsnorm_vmem(rows=256, d=8192, dtype_bytes=2):
+    return DB * (2 * rows * d * dtype_bytes) + d * 4
+
+
+def ssd_vmem(q=128, p=64, n=64, dtype_bytes=4):
+    x = q * p * dtype_bytes
+    bc = 2 * q * n * dtype_bytes
+    dt = 2 * q * dtype_bytes
+    o = q * p * dtype_bytes
+    scratch = n * p * 4
+    seg = q * q * 4                              # [Q,Q] decay matrix f32
+    return DB * (x + bc + dt + o) + scratch + seg
+
+
+def rows():
+    out = []
+    # attention blocks across the assigned head dims (64..128 padded to 128)
+    for bq, bk, dh in [(128, 128, 128), (256, 256, 128), (512, 512, 128),
+                       (128, 128, 256)]:
+        b = flash_attention_vmem(bq, bk, dh)
+        out.append((f"flash_bq{bq}_bk{bk}_dh{dh}", b / 2**10,
+                    f"fits={b < VMEM_BYTES};frac={b/VMEM_BYTES:.3f}"))
+    # rmsnorm across the assigned d_models (adaptive row blocks: the kernel
+    # caps block_rows so the working set stays within ~half of VMEM)
+    for d in [2048, 3072, 4096, 6144, 8192]:
+        rows_adaptive = min(256, max(8, (1 << 23) // (8 * d)))
+        b = rmsnorm_vmem(rows_adaptive, d)
+        out.append((f"rmsnorm_rows{rows_adaptive}_d{d}", b / 2**10,
+                    f"fits={b < VMEM_BYTES};frac={b/VMEM_BYTES:.3f}"))
+    # ssd scan: zamba2 heads (P=64, N=64) at various chunks
+    for q in [64, 128, 256]:
+        b = ssd_vmem(q)
+        out.append((f"ssd_chunk{q}_p64_n64", b / 2**10,
+                    f"fits={b < VMEM_BYTES};frac={b/VMEM_BYTES:.3f}"))
+    return out
+
+
+def main():
+    print("kernel_block,KiB,derived")
+    bad = 0
+    for name, kib, derived in rows():
+        print(f"{name},{kib:.1f},{derived}")
+        if "fits=False" in derived:
+            bad += 1
+    assert bad == 0, f"{bad} block configurations exceed VMEM"
+    print(f"# all block configurations fit in {VMEM_BYTES/2**20:.0f} MiB VMEM")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Beyond-paper feature demo: int8-compressed DCN gradient sync.
+
+Trains the same tiny model twice on 8 fake devices (2 pods x 2 data x 2
+model) -- once with full-precision pod sync, once with q8 -- and compares
+loss curves: the compressed run tracks the exact one while moving ~4x
+fewer bytes across the pod tier (the dry-run HLO in EXPERIMENTS.md
+quantifies the wire savings at production scale).
+
+Run:  PYTHONPATH=src python examples/gradient_compression.py
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+body = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.models import lm
+from repro.models.config import reduced_for_smoke
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.train import steps as T
+
+cfg = reduced_for_smoke(get_config("llama3_2_1b")).with_(compute_dtype="float32")
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                global_batch=8, seed=5))
+for sync in ["flat", "q8"]:
+    tcfg = T.TrainConfig(pod_mode="manual", pod_sync=sync, use_kernel=False)
+    step, bspecs = T.make_train_step(cfg, tcfg, adamw.AdamWConfig(lr=3e-3),
+                                     mesh, rules.ShardingPolicy())
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params)
+    with jax.set_mesh(mesh):
+        n = lambda s: jax.tree.map(lambda sp: NamedSharding(mesh, sp), s,
+                                   is_leaf=lambda x: isinstance(x, P))
+        jstep = jax.jit(step)
+        losses = []
+        for i in range(30):
+            b = jax.device_put(data.batch(i), n(bspecs))
+            params, opt, m = jstep(params, opt, b)
+            losses.append(float(m["loss"]))
+    print(f"pod_sync={sync:4s}  loss {losses[0]:.3f} -> {losses[-1]:.3f}  "
+          f"(last5 mean {np.mean(losses[-5:]):.3f})")
+print("q8 tracks flat while crossing the DCN tier with ~1/4 the bytes.")
+"""
+env = dict(os.environ)
+env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+env["PYTHONPATH"] = str(REPO / "src")
+subprocess.run([sys.executable, "-c", textwrap.dedent(body)], env=env, check=True)

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's contribution in 60 lines.
+
+Builds the two-tier cluster model, compares collective schedules under it,
+lets the planner pick, and shows the decision changing with message size
+and topology -- the whole point of Task & Chauhan's model.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import enumerate_plans, paper_smp_cluster, tpu_v5e_cluster
+from repro.core.schedules import build
+from repro.core.simulator import evaluate
+
+# ----------------------------------------------------------------------
+# 1. A 2008-style cluster: 8 machines x 4 cores, 2 NICs each.
+# ----------------------------------------------------------------------
+topo = paper_smp_cluster(n_machines=8, cores=4, nics=2)
+print("== broadcast on an 8x4 SMP cluster (64 KiB) ==")
+for strat in ["flat", "hier_seq", "hier_par"]:
+    r = evaluate(build(topo, "broadcast", strat, 64 * 1024))
+    print(f"  {strat:10s} rounds={r.n_rounds:3d} t={r.t_rounds*1e6:8.1f}us "
+          f"global_bytes={r.global_bytes/1e3:8.1f}kB")
+
+# ----------------------------------------------------------------------
+# 2. The paper's C2: gather is NOT inverse broadcast.
+# ----------------------------------------------------------------------
+bc = evaluate(build(topo, "broadcast", "hier_par", 64 * 1024))
+ga = evaluate(build(topo, "gather", "hier_par", 64 * 1024))
+print(f"\n== C2 asymmetry ==\n  broadcast: {bc.n_rounds} rounds; "
+      f"gather: {ga.n_rounds} rounds (reads are not writes)")
+
+# ----------------------------------------------------------------------
+# 3. The planner on the production TPU topology (2 pods x 256 chips).
+# ----------------------------------------------------------------------
+tpu = tpu_v5e_cluster(n_pods=2)
+print("\n== planner decisions, all_reduce on 2x256 TPU ==")
+for nbytes in [1e4, 1e6, 1e9]:
+    plans = enumerate_plans(tpu, "all_reduce", nbytes, lossy_ok=True)
+    best, flat = plans[0], next(p for p in plans if p.strategy == "flat")
+    print(f"  {nbytes:9.0e} B -> {best.strategy:15s} "
+          f"{best.t_rounds*1e3:9.3f}ms  (flat: {flat.t_rounds*1e3:9.3f}ms, "
+          f"{flat.t_rounds/best.t_rounds:4.1f}x slower)")
+
+print("\nThe hierarchical schedules here are the same ones the trainer runs "
+      "(core/collectives.py) and the dry-run measures in HLO.")

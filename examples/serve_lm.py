@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + greedy decode with the sharded
+KV-cache machinery (the decode_32k / long_500k dry-run cells use the same
+serve_step)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+arch = sys.argv[1] if len(sys.argv) > 1 else "zamba2-2.7b"
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", arch, "--reduced", "--batch", "4",
+     "--prompt-len", "64", "--gen", "24"],
+    env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+         "HOME": "/root"},
+    check=True,
+)

@@ -1,0 +1,34 @@
+"""End-to-end training driver: a ~100M-parameter llama-style model on the
+synthetic pipeline with checkpointing and resume.
+
+The same launcher scales to the production mesh (launch/train.py
+--production-mesh); reduced dims keep this demo CPU-sized.  Use --steps to
+train longer; --d-model 768 --layers 12 gives the full ~100M config.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+steps = "60"
+if "--steps" in sys.argv:
+    steps = sys.argv[sys.argv.index("--steps") + 1]
+size = ["--d-model", "256", "--layers", "4"]
+if "--full" in sys.argv:  # the real ~100M run (slow on 1 CPU core)
+    size = ["--d-model", "768", "--layers", "12"]
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train",
+     "--arch", "llama3.2-1b", "--reduced", "--steps", steps,
+     "--global-batch", "8", "--seq", "256",
+     "--ckpt-dir", "/tmp/repro_example_ckpt", "--ckpt-every", "25",
+     *size],
+    env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+         "HOME": "/root"},
+    check=True,
+)
+print("\nRe-running resumes from the newest checkpoint (fault tolerance);\n"
+      "try killing it mid-run and re-launching.")

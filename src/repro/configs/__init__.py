@@ -1,0 +1,77 @@
+"""Assigned-architecture configs (exact dims from the assignment) + shapes.
+
+Every entry is selectable via ``--arch <id>`` in the launchers.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "llama3_2_3b",
+    "command_r_35b",
+    "granite_3_8b",
+    "llama3_2_1b",
+    "zamba2_2_7b",
+    "qwen2_vl_72b",
+    "seamless_m4t_medium",
+    "grok_1_314b",
+    "qwen2_moe_a2_7b",
+    "rwkv6_1_6b",
+]
+
+# canonical external ids (assignment spelling) -> module name
+ALIASES = {
+    "llama3.2-3b": "llama3_2_3b",
+    "command-r-35b": "command_r_35b",
+    "granite-3-8b": "granite_3_8b",
+    "llama3.2-1b": "llama3_2_1b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "grok-1-314b": "grok_1_314b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, and why not if it doesn't."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode skipped (see DESIGN.md)"
+    return True, ""
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            yield arch, cfg, shape, ok, why

@@ -1,0 +1,23 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2.  [hf:xai-org/grok-1; unverified]
+
+Grok-style attention logit soft-capping (tanh at 30).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    head_dim=128,
+    n_experts=8,
+    n_experts_per_tok=2,
+    moe_d_ff=32768,
+    attn_logit_softcap=30.0,
+    rope_theta=10000.0,
+)

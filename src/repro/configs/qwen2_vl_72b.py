@@ -1,0 +1,22 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 -- M-RoPE, dynamic resolution.  [arXiv:2409.12191; hf]
+
+Backbone only: the vision frontend is a stub; ``input_specs`` provides
+precomputed patch embeddings and [3, B, S] M-RoPE position grids.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    head_dim=128,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+)

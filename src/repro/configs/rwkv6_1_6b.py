@@ -1,0 +1,19 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 -- Finch: data-dependent decay.  [arXiv:2404.05892; unverified]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,          # wkv heads = d_model / ssm_head_dim
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    head_dim=64,
+    ssm_state=64,
+    ssm_head_dim=64,
+    tie_embeddings=True,
+)

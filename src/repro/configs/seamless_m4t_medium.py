@@ -1,0 +1,22 @@
+"""seamless-m4t-medium [audio]: 12L d_model=1024 16H (GQA kv=16) d_ff=4096
+vocab=256206 -- enc-dec, multimodal.  [arXiv:2308.11596; hf]
+
+Backbone only: 12 encoder + 12 decoder layers; the speech frontend is a
+stub; ``input_specs`` provides precomputed frame embeddings [B, S, D].
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,
+    n_enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    head_dim=64,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,29 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64 -- Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]
+
+The shared attention+MLP block (one set of params) is applied every 6 mamba
+layers (54 / 6 = 9 applications).  For ``long_500k`` the launcher overrides
+``sliding_window=4096`` so the shared block's KV stays bounded (the paper-
+assigned sub-quadratic path).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    head_dim=80,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    conv_width=4,
+    attn_every=6,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)

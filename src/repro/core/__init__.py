@@ -1,0 +1,24 @@
+"""The paper's primary contribution: a communication model for clusters of
+multi-core machines (Task & Chauhan, 2008), realized as
+
+  * a formal two-tier cost model with the paper's three rules
+    (``topology``, ``simulator``),
+  * explicit collective schedules under that model (``schedules``),
+  * a cost-driven planner that picks the best schedule per topology and
+    message size (``planner``),
+  * runnable shard_map realizations of the chosen schedules (``collectives``).
+"""
+
+from .planner import (  # noqa: F401
+    CollectivePolicy,
+    Plan,
+    best_plan,
+    enumerate_plans,
+    make_policy,
+)
+from .topology import (  # noqa: F401
+    ClusterTopology,
+    LinkTier,
+    paper_smp_cluster,
+    tpu_v5e_cluster,
+)

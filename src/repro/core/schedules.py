@@ -1,0 +1,850 @@
+"""Collective-communication schedules under the multi-core cluster model.
+
+A Schedule is an explicit, validatable plan: a sequence of rounds, each round
+holding point-to-point transfers (telephone edges, local or global) and
+shared-memory writes (paper Rule 1).  Generators below produce schedules for
+broadcast / gather / all-gather / all-reduce / all-to-all in three styles:
+
+  * ``flat``       -- hierarchy-oblivious (what classic algorithms do; the
+                      paper's strawman),
+  * ``hier_seq``   -- hierarchical with single-leader machines (the "previous
+                      approaches" of [3] the paper criticizes),
+  * ``hier_par``   -- hierarchy- and Rule-3-aware: parallel egress, local
+                      writes for fan-out, clique reads for fan-in (the
+                      paper's proposal).
+
+Payloads are modelled as frozensets of chunk ids so the simulator can check
+collective *semantics* (who must know what at the end).  Building payload
+sets is O(P^2) memory for some collectives, so every generator takes
+``payloads=False`` to produce a structurally identical schedule with empty
+payloads -- the planner uses that cheap mode on production-size topologies
+(512 chips), while tests verify on small topologies that both modes have
+identical rounds/bytes/cost.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+from .topology import ClusterTopology
+
+EMPTY = frozenset()
+
+
+# ----------------------------------------------------------------------
+# Schedule IR
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Send:
+    """Point-to-point transfer of a payload (one telephone edge).
+
+    Local sends (same machine) are Rule-1 *reads*: the destination reads the
+    source's buffer across the intra-machine clique.
+    """
+
+    src: int
+    dst: int
+    nbytes: float
+    payload: frozenset = EMPTY
+
+
+@dataclass(frozen=True)
+class LocalWrite:
+    """Rule 1: the writer publishes a payload to co-located readers in O(1)."""
+
+    writer: int
+    readers: tuple
+    nbytes: float
+    payload: frozenset = EMPTY
+
+
+Op = Send | LocalWrite
+
+
+@dataclass
+class Round:
+    ops: list = field(default_factory=list)
+
+    def add(self, op: Op) -> None:
+        self.ops.append(op)
+
+
+@dataclass
+class Schedule:
+    name: str
+    collective: str
+    topo: ClusterTopology
+    nbytes: float                      # per-chunk message size m
+    rounds: list = field(default_factory=list)
+    root: int = 0
+
+    def new_round(self) -> Round:
+        r = Round()
+        self.rounds.append(r)
+        return r
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def all_ops(self) -> Iterable[Op]:
+        for r in self.rounds:
+            yield from r.ops
+
+    def total_global_bytes(self) -> float:
+        return sum(
+            op.nbytes
+            for op in self.all_ops()
+            if isinstance(op, Send) and not self.topo.co_located(op.src, op.dst)
+        )
+
+    def total_local_bytes(self) -> float:
+        return sum(
+            op.nbytes
+            for op in self.all_ops()
+            if isinstance(op, Send) and self.topo.co_located(op.src, op.dst)
+        )
+
+
+def _pay(payloads: bool, items) -> frozenset:
+    return frozenset(items) if payloads else EMPTY
+
+
+# ======================================================================
+# BROADCAST
+# ======================================================================
+
+def bcast_flat_binomial(
+    topo: ClusterTopology, m: float, root: int = 0, payloads: bool = True
+) -> Schedule:
+    """Hierarchy-oblivious binomial broadcast over all P procs.
+
+    ceil(log2 P) rounds; edges are local or global by accident of rank
+    numbering -- this is the paper's motivating bad baseline.
+    """
+    sched = Schedule("bcast_flat_binomial", "broadcast", topo, m, root=root)
+    P = topo.n_procs
+    payload = _pay(payloads, [("bcast", root)])
+    have = [root]
+    others = [p for p in range(P) if p != root]
+    while others:
+        rnd = sched.new_round()
+        n = min(len(have), len(others))
+        batch, others = others[:n], others[n:]
+        for s, d in zip(have, batch):
+            rnd.add(Send(s, d, m, payload))
+        have.extend(batch)
+    return sched
+
+
+def bcast_hier_seq(
+    topo: ClusterTopology, m: float, root: int = 0, payloads: bool = True
+) -> Schedule:
+    """Hierarchical-with-single-leader broadcast ("previous approaches" [3]).
+
+    Machines are opaque nodes: binomial tree over machine leaders (one egress
+    link each -- ignores Rule 3), then one local write per machine (Rule 1).
+    """
+    sched = Schedule("bcast_hier_seq", "broadcast", topo, m, root=root)
+    payload = _pay(payloads, [("bcast", root)])
+    M = topo.n_machines
+    root_mach = topo.machine_of(root)
+    leaders = {root_mach: root}
+    covered = [root_mach]
+    remaining = [j for j in range(M) if j != root_mach]
+    while remaining:
+        rnd = sched.new_round()
+        n = min(len(covered), len(remaining))
+        batch, remaining = remaining[:n], remaining[n:]
+        for src_mach, dst_mach in zip(covered, batch):
+            leader = next(iter(topo.procs_of(dst_mach)))
+            rnd.add(Send(leaders[src_mach], leader, m, payload))
+            leaders[dst_mach] = leader
+        covered.extend(batch)
+    rnd = sched.new_round()
+    for mach, leader in leaders.items():
+        readers = tuple(p for p in topo.procs_of(mach) if p != leader)
+        if readers:
+            rnd.add(LocalWrite(leader, readers, m, payload))
+    return sched
+
+
+def bcast_hier_par(
+    topo: ClusterTopology, m: float, root: int = 0, payloads: bool = True
+) -> Schedule:
+    """The paper's broadcast: local write + degree-parallel egress.
+
+    Once a machine holds the value every proc holds it (Rule 1 write), so the
+    machine can seed up to ``degree`` new machines per round (Rule 3):
+    coverage multiplies by (degree+1) per global round ==>
+    ceil(log_{d+1}(M)) global rounds.
+    """
+    sched = Schedule("bcast_hier_par", "broadcast", topo, m, root=root)
+    payload = _pay(payloads, [("bcast", root)])
+    d = min(topo.degree, topo.procs_per_machine)
+    root_mach = topo.machine_of(root)
+
+    # Round 0: publish inside the root machine so all its procs can send.
+    rnd = sched.new_round()
+    readers = tuple(p for p in topo.procs_of(root_mach) if p != root)
+    if readers:
+        rnd.add(LocalWrite(root, readers, m, payload))
+
+    covered = [root_mach]
+    remaining = [j for j in range(topo.n_machines) if j != root_mach]
+    while remaining:
+        rnd = sched.new_round()
+        new = []
+        k = 0
+        for src_mach in covered:
+            for s in list(topo.procs_of(src_mach))[:d]:
+                if k >= len(remaining):
+                    break
+                dst_mach = remaining[k]
+                leader = next(iter(topo.procs_of(dst_mach)))
+                rnd.add(Send(s, leader, m, payload))
+                # Rule 2: intra-machine publish chains inside the same global
+                # round (internal edges hide in the round length).
+                lw = tuple(p for p in topo.procs_of(dst_mach) if p != leader)
+                if lw:
+                    rnd.add(LocalWrite(leader, lw, m, payload))
+                new.append(dst_mach)
+                k += 1
+            if k >= len(remaining):
+                break
+        covered.extend(new)
+        remaining = remaining[k:]
+    return sched
+
+
+# ======================================================================
+# GATHER  (root ends with every proc's chunk; payloads concatenate)
+# ======================================================================
+
+def gather_flat_binomial(
+    topo: ClusterTopology, m: float, root: int = 0, payloads: bool = True
+) -> Schedule:
+    """Inverse binomial tree to root, hierarchy-oblivious."""
+    sched = Schedule("gather_flat_binomial", "gather", topo, m, root=root)
+    P = topo.n_procs
+    unrel = lambda r: (r + root) % P
+    counts = {p: 1 for p in range(P)}
+    know = {p: {p} for p in range(P)} if payloads else None
+    k = 0
+    while (1 << k) < P:
+        rnd = sched.new_round()
+        for r in range(1 << k, P, 1 << (k + 1)):
+            src, dst = unrel(r), unrel(r - (1 << k))
+            pay = _pay(payloads, know[src]) if payloads else EMPTY
+            rnd.add(Send(src, dst, m * counts[src], pay))
+            counts[dst] += counts[src]
+            if payloads:
+                know[dst] |= know[src]
+        k += 1
+    return sched
+
+
+def _lockstep_local_combine(
+    sched: Schedule,
+    topo: ClusterTopology,
+    heads: dict,
+    counts: dict,
+    know,
+    m: float,
+    payloads: bool,
+    concat: bool,
+) -> None:
+    """Tree-combine each machine's procs onto its head, machines in lockstep.
+
+    Rule 1 reads: each combine step is a local Send (clique read).  For
+    ``concat`` collectives (gather) bytes grow with chunk counts; for
+    reductions bytes stay m.
+    """
+    lives = {}
+    for mach in range(topo.n_machines):
+        head = heads[mach]
+        lives[mach] = [head] + [p for p in topo.procs_of(mach) if p != head]
+    while any(len(v) > 1 for v in lives.values()):
+        rnd = sched.new_round()
+        for mach, live in lives.items():
+            if len(live) <= 1:
+                continue
+            half = (len(live) + 1) // 2
+            for i in range(len(live) - half):
+                src, dst = live[half + i], live[i]
+                nb = m * counts[src] if concat else m
+                pay = _pay(payloads, know[src]) if payloads else EMPTY
+                rnd.add(Send(src, dst, nb, pay))
+                counts[dst] += counts[src]
+                if payloads:
+                    know[dst] |= know[src]
+            lives[mach] = live[:half]
+
+
+def gather_hier_par(
+    topo: ClusterTopology, m: float, root: int = 0, payloads: bool = True
+) -> Schedule:
+    """The paper's gather: clique-read local combine, then parallel ingress.
+
+    Rule 1 says reads are NOT free: each machine tree-combines its procs'
+    chunks over local clique edges (ceil(log2 c) local rounds), then machine
+    buffers flow to the root machine, which ingests on up to ``degree`` links
+    per round (Rule 3) into distinct procs, which the root finally reads.
+    This schedule is *not* the inverse of the broadcast tree -- reproducing
+    the paper's C2 asymmetry.
+    """
+    sched = Schedule("gather_hier_par", "gather", topo, m, root=root)
+    c = topo.procs_per_machine
+    M = topo.n_machines
+    root_mach = topo.machine_of(root)
+    d = min(topo.degree, c)
+
+    counts = {p: 1 for p in range(topo.n_procs)}
+    know = {p: {p} for p in range(topo.n_procs)} if payloads else None
+    heads = {
+        mach: (root if mach == root_mach else next(iter(topo.procs_of(mach))))
+        for mach in range(M)
+    }
+    _lockstep_local_combine(sched, topo, heads, counts, know, m, payloads, concat=True)
+
+    # Phase 2: machines ship combined buffers to the root machine.  Each
+    # machine buffer is STRIPED across up to d ingress links landing on
+    # distinct procs of the root machine (Rule 3 parallel ingress) -- this is
+    # where gather stops being the inverse of broadcast: the root machine can
+    # ingest on all links at once, but the root proc still has to *read*
+    # every stripe (Rule 1).
+    pending = [mach for mach in range(M) if mach != root_mach]
+    recv_procs = [p for p in topo.procs_of(root_mach) if p != root] or [root]
+    n_stripes = max(1, min(d, len(recv_procs)))
+    ingress: list[tuple] = []
+    if pending:
+        # Rule 1 write: every remote head publishes its machine buffer so d
+        # co-located procs can stripe it out in parallel (one shared round).
+        if n_stripes > 1:
+            rnd = sched.new_round()
+            for mach in pending:
+                head = heads[mach]
+                readers = tuple(
+                    p for p in list(topo.procs_of(mach))[:n_stripes] if p != head
+                )
+                if readers:
+                    pay = _pay(payloads, know[head]) if payloads else EMPTY
+                    rnd.add(LocalWrite(head, readers, m * counts[head], pay))
+        # One transfer round per remote machine: its buffer striped across
+        # the root machine's ingress links (Rule 3).
+        for mach in pending:
+            src_procs = list(topo.procs_of(mach))[:n_stripes]
+            chunks = (
+                sorted(know[heads[mach]])
+                if payloads
+                else [None] * counts[heads[mach]]
+            )
+            per = math.ceil(len(chunks) / len(src_procs))
+            rnd = sched.new_round()
+            for k, src in enumerate(src_procs):
+                stripe = chunks[k * per:(k + 1) * per]
+                if not stripe:
+                    continue
+                dst = recv_procs[k % len(recv_procs)]
+                pay = _pay(payloads, [ch for ch in stripe if ch is not None])
+                rnd.add(Send(src, dst, m * len(stripe), pay))
+                if payloads:
+                    know[dst] |= set(pay)
+                ingress.append((dst, len(stripe), pay))
+
+    # Phase 3: root reads the ingress procs' buffers (clique reads; the
+    # root's receive port admits one read per round).
+    for dst, cnt, pay in ingress:
+        if dst == root:
+            continue
+        rnd = sched.new_round()
+        rnd.add(Send(dst, root, m * cnt, pay))
+        counts[root] += cnt
+        if payloads:
+            know[root] |= set(pay)
+    return sched
+
+
+# ======================================================================
+# ALL-GATHER
+# ======================================================================
+
+def allgather_flat_ring(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Classic ring all-gather: P-1 rounds of m bytes, hierarchy-oblivious."""
+    sched = Schedule("allgather_flat_ring", "all_gather", topo, m)
+    P = topo.n_procs
+    for step in range(P - 1):
+        rnd = sched.new_round()
+        for p in range(P):
+            chunk_id = (p - step) % P
+            rnd.add(Send(p, (p + 1) % P, m, _pay(payloads, [chunk_id])))
+    return sched
+
+
+def allgather_hier_par(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Two-tier all-gather: local clique all-gather, striped machine ring,
+    local write.
+
+    Phase 2 stripes each machine's consolidated c*m buffer across d egress
+    procs: d parallel machine-level rings each carrying ~c*m/d per step
+    (Rule 3).  Phase 3 publishes received stripes via shared-memory writes
+    (Rule 1).
+    """
+    sched = Schedule("allgather_hier_par", "all_gather", topo, m)
+    c = topo.procs_per_machine
+    M = topo.n_machines
+    d = min(topo.degree, c)
+    P = topo.n_procs
+    know = {p: {p} for p in range(P)} if payloads else None
+    counts = {p: 1 for p in range(P)}
+
+    # Phase 1: local all-gather over the clique.  Recursive doubling when c
+    # is a power of two, ring otherwise.
+    if c > 1 and (c & (c - 1)) == 0:
+        step = 1
+        while step < c:
+            rnd = sched.new_round()
+            for mach in range(M):
+                procs = list(topo.procs_of(mach))
+                for i in range(c):
+                    j = i ^ step
+                    if i < j:
+                        p, q = procs[i], procs[j]
+                        pp = _pay(payloads, know[p]) if payloads else EMPTY
+                        pq = _pay(payloads, know[q]) if payloads else EMPTY
+                        rnd.add(Send(p, q, m * counts[p], pp))
+                        rnd.add(Send(q, p, m * counts[q], pq))
+                        tot = counts[p] + counts[q]
+                        counts[p] = counts[q] = tot
+                        if payloads:
+                            merged = know[p] | know[q]
+                            know[p] = set(merged)
+                            know[q] = set(merged)
+            step <<= 1
+    elif c > 1:
+        for step in range(c - 1):
+            rnd = sched.new_round()
+            for mach in range(M):
+                procs = list(topo.procs_of(mach))
+                moves = []
+                for i in range(c):
+                    p, q = procs[i], procs[(i + 1) % c]
+                    src_chunk = procs[(i - step) % c]
+                    moves.append((p, q, src_chunk))
+                    rnd.add(Send(p, q, m, _pay(payloads, [src_chunk])))
+                for p, q, ch in moves:
+                    counts[q] += 1
+                    if payloads:
+                        know[q].add(ch)
+
+    if M > 1:
+        # Phase 2: striped ring over machines.  Egress proc k of machine i
+        # sends stripe k of the machine's buffer to proc k of machine i+1.
+        stripe_chunks: dict[tuple[int, int], list] = {}
+        for mach in range(M):
+            procs = list(topo.procs_of(mach))
+            per = math.ceil(c / d)
+            for k in range(d):
+                stripe_chunks[(mach, k)] = procs[k * per:(k + 1) * per]
+        carry = dict(stripe_chunks)
+        for _ in range(M - 1):
+            rnd = sched.new_round()
+            new_carry = {}
+            for mach in range(M):
+                nxt = (mach + 1) % M
+                src_procs = list(topo.procs_of(mach))[:d]
+                dst_procs = list(topo.procs_of(nxt))[:d]
+                for k in range(d):
+                    chunks = carry[(mach, k)]
+                    if not chunks:
+                        new_carry[(nxt, k)] = []
+                        continue
+                    rnd.add(
+                        Send(
+                            src_procs[k],
+                            dst_procs[k],
+                            m * len(chunks),
+                            _pay(payloads, chunks),
+                        )
+                    )
+                    counts[dst_procs[k]] += len(chunks)
+                    if payloads:
+                        know[dst_procs[k]] |= set(chunks)
+                    new_carry[(nxt, k)] = chunks
+            carry = new_carry
+
+        # Phase 3: every egress proc publishes everything it accumulated.
+        rnd = sched.new_round()
+        for mach in range(M):
+            procs = list(topo.procs_of(mach))
+            for k in range(d):
+                w = procs[k]
+                readers = tuple(p for p in procs if p != w)
+                if readers:
+                    pay = _pay(payloads, know[w]) if payloads else EMPTY
+                    rnd.add(LocalWrite(w, readers, m * counts[w], pay))
+                    if payloads:
+                        for p in readers:
+                            know[p] |= know[w]
+    return sched
+
+
+# ======================================================================
+# ALL-REDUCE  (payload = contribution sets; message size fixed at m)
+# ======================================================================
+
+def allreduce_flat_ring(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Classic flat ring all-reduce: reduce-scatter then all-gather.
+
+    2*(P-1) rounds of m/P bytes; ~2m bytes on the wire per proc, blind to
+    which edges cross machines.
+    """
+    sched = Schedule("allreduce_flat_ring", "all_reduce", topo, m)
+    P = topo.n_procs
+    shard_m = m / P
+    holdings = (
+        [{s: {("rs", s, p)} for s in range(P)} for p in range(P)]
+        if payloads
+        else None
+    )
+    for phase in range(2):  # 0 = reduce-scatter, 1 = all-gather
+        for step in range(P - 1):
+            rnd = sched.new_round()
+            moves = []
+            for p in range(P):
+                if phase == 0:
+                    shard = (p - step) % P
+                else:
+                    shard = (p + 1 - step) % P
+                if payloads:
+                    pay = frozenset(holdings[p][shard])
+                else:
+                    pay = EMPTY
+                moves.append((p, (p + 1) % P, shard, pay))
+                rnd.add(Send(p, (p + 1) % P, shard_m, pay))
+            if payloads:
+                for p, q, shard, pay in moves:
+                    holdings[q][shard] |= set(pay)
+    return sched
+
+
+def allreduce_hier_par(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """The paper's all-reduce on a two-tier cluster.
+
+    Phase 1 (Rule 1 reads):   local tree-reduce within each machine.
+    Phase 2 (Rule 1 write):   head publishes so d egress procs hold the
+                              machine vector, striped m/d each.
+    Phase 3 (Rule 3):         inter-machine reduce-scatter + all-gather ring
+                              run independently per stripe -- all d global
+                              links busy every round.
+    Phase 4 (Rule 1 write):   egress procs publish the reduced result.
+
+    Global bytes per machine ~ 2*m*(M-1)/M (bandwidth-optimal), wall-clock
+    divided by d.
+    """
+    sched = Schedule("allreduce_hier_par", "all_reduce", topo, m)
+    c = topo.procs_per_machine
+    M = topo.n_machines
+    d = min(topo.degree, c)
+    counts = {p: 1 for p in range(topo.n_procs)}
+    know = (
+        {p: {("ar", p)} for p in range(topo.n_procs)} if payloads else None
+    )
+    heads = {mach: next(iter(topo.procs_of(mach))) for mach in range(M)}
+    _lockstep_local_combine(sched, topo, heads, counts, know, m, payloads, concat=False)
+
+    if M == 1:
+        rnd = sched.new_round()
+        head = heads[0]
+        readers = tuple(p for p in topo.procs_of(0) if p != head)
+        if readers:
+            pay = _pay(payloads, know[head]) if payloads else EMPTY
+            rnd.add(LocalWrite(head, readers, m, pay))
+        return sched
+
+    # Phase 2: stripe distribution by shared-memory write.
+    if d > 1:
+        rnd = sched.new_round()
+        for mach in range(M):
+            head = heads[mach]
+            egress = list(topo.procs_of(mach))[:d]
+            readers = tuple(p for p in egress if p != head)
+            if readers:
+                pay = _pay(payloads, know[head]) if payloads else EMPTY
+                rnd.add(LocalWrite(head, readers, m, pay))
+                if payloads:
+                    for p in readers:
+                        know[p] |= know[head]
+
+    # Phase 3: striped machine-level ring reduce-scatter + all-gather.
+    stripe_m = m / d
+    shard_m = stripe_m / M
+    for phase in ("rs", "ag"):
+        for step in range(M - 1):
+            rnd = sched.new_round()
+            for mach in range(M):
+                nxt = (mach + 1) % M
+                for k in range(d):
+                    src = list(topo.procs_of(mach))[k]
+                    dst = list(topo.procs_of(nxt))[k]
+                    rnd.add(
+                        Send(
+                            src,
+                            dst,
+                            shard_m,
+                            _pay(payloads, [("arstripe", phase, step, mach, k)]),
+                        )
+                    )
+
+    # Phase 4: publish.
+    rnd = sched.new_round()
+    for mach in range(M):
+        procs = list(topo.procs_of(mach))
+        for k in range(d):
+            w = procs[k]
+            readers = tuple(p for p in procs if p != w)
+            if readers:
+                rnd.add(
+                    LocalWrite(
+                        w, readers, stripe_m, _pay(payloads, [("arfinal", k)])
+                    )
+                )
+    return sched
+
+
+def allreduce_hier_par_bw(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Bandwidth-optimal two-tier all-reduce (large-message regime).
+
+    Found *with* the paper's cost model (see EXPERIMENTS.md): the tree-based
+    ``allreduce_hier_par`` moves the full vector log2(c) times inside each
+    machine, so at large m the local tier dominates.  This variant:
+
+    Phase 1: intra-machine ring reduce-scatter -- (c-1) local rounds of m/c;
+             proc i of each machine ends holding reduced local shard i.
+    Phase 2: every proc ring-exchanges ITS shard across machines
+             (reduce-scatter + all-gather over M, sub-shards m/(c*M)).
+             All c procs hit the NICs at once; the simulator charges the
+             ceil(c/degree) NIC serialization (Rule 3 as a limit), which
+             still beats funnelling through one leader by ~degree.
+    Phase 3: intra-machine ring all-gather -- (c-1) local rounds of m/c.
+
+    Local bytes/proc ~ 2m, global bytes/machine ~ 2m(M-1)/M: both optimal.
+    """
+    sched = Schedule("allreduce_hier_par_bw", "all_reduce", topo, m)
+    c = topo.procs_per_machine
+    M = topo.n_machines
+    P = topo.n_procs
+    shard_m = m / c
+    holdings = (
+        [
+            {s: {("lrs", topo.machine_of(p), s, p % c)} for s in range(c)}
+            for p in range(P)
+        ]
+        if payloads
+        else None
+    )
+
+    # Phase 1: local ring reduce-scatter (per machine, lockstep).
+    if c > 1:
+        for step in range(c - 1):
+            rnd = sched.new_round()
+            moves = []
+            for mach in range(M):
+                procs = list(topo.procs_of(mach))
+                for i in range(c):
+                    p, q = procs[i], procs[(i + 1) % c]
+                    shard = (i - step) % c
+                    pay = (
+                        frozenset(holdings[p][shard]) if payloads else EMPTY
+                    )
+                    rnd.add(Send(p, q, shard_m, pay))
+                    moves.append((q, shard, pay))
+            if payloads:
+                for q, shard, pay in moves:
+                    holdings[q][shard] |= set(pay)
+
+    # Phase 2: cross-machine ring RS + AG per shard (all shards in parallel).
+    if M > 1:
+        sub_m = shard_m / M
+        for phase in ("rs", "ag"):
+            for step in range(M - 1):
+                rnd = sched.new_round()
+                for mach in range(M):
+                    nxt = (mach + 1) % M
+                    for i in range(c):
+                        src = list(topo.procs_of(mach))[i]
+                        dst = list(topo.procs_of(nxt))[i]
+                        rnd.add(
+                            Send(
+                                src,
+                                dst,
+                                sub_m,
+                                _pay(payloads, [("xstripe", phase, step, mach, i)]),
+                            )
+                        )
+
+    # Phase 3: local ring all-gather of the reduced shards.
+    if c > 1:
+        for step in range(c - 1):
+            rnd = sched.new_round()
+            for mach in range(M):
+                procs = list(topo.procs_of(mach))
+                for i in range(c):
+                    p, q = procs[i], procs[(i + 1) % c]
+                    shard = (i + 1 - step) % c
+                    rnd.add(
+                        Send(
+                            p, q, shard_m, _pay(payloads, [("fin", mach, shard)])
+                        )
+                    )
+    return sched
+
+
+# ======================================================================
+# ALL-TO-ALL  (chunk (s, d) of m bytes must travel from proc s to proc d)
+# ======================================================================
+
+def alltoall_flat_pairwise(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Classic rotation all-to-all: P-1 rounds, proc p sends to p+r.
+
+    Every (s,d) chunk crosses the network individually.  When a machine's c
+    procs all send globally in one round they oversubscribe its ``degree``
+    shared NICs; the simulator charges the ceil(c/degree) serialization --
+    exactly the hidden cost the paper says flat algorithms suffer on
+    multi-core clusters.
+    """
+    sched = Schedule("alltoall_flat_pairwise", "all_to_all", topo, m)
+    P = topo.n_procs
+    for r in range(1, P):
+        rnd = sched.new_round()
+        for p in range(P):
+            q = (p + r) % P
+            rnd.add(Send(p, q, m, _pay(payloads, [("a2a", p, q)])))
+    return sched
+
+
+def alltoall_hier_par(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Kumar-style [3] two-tier all-to-all under the paper's model.
+
+    Phase 1: intra-machine consolidation -- clique reads redistribute traffic
+             so each of the d egress procs holds the outgoing stripes.
+    Phase 2: machine-pair exchange, (M-1) rounds; round r machine i sends its
+             consolidated c^2*m buffer for machine i+r striped over d egress
+             procs (Rule 3).
+    Phase 3: receiving procs publish to destinations by local writes (Rule 1).
+    """
+    sched = Schedule("alltoall_hier_par", "all_to_all", topo, m)
+    c = topo.procs_per_machine
+    M = topo.n_machines
+    d = min(topo.degree, c)
+
+    # Phase 1: local redistribution (ring over the clique, c-1 local rounds;
+    # each proc forwards the bundle destined to egress proc p+1: M*m bytes).
+    if c > 1:
+        for step in range(c - 1):
+            rnd = sched.new_round()
+            for mach in range(M):
+                procs = list(topo.procs_of(mach))
+                for i in range(c):
+                    p, q = procs[i], procs[(i + 1) % c]
+                    rnd.add(
+                        Send(
+                            p, q, m * M, _pay(payloads, [("a2a_loc", p, q, step)])
+                        )
+                    )
+
+    # Phase 2: machine-pair exchanges with striped egress.
+    if M > 1:
+        consolidated = c * c * m
+        stripe = consolidated / d
+        for r in range(1, M):
+            rnd = sched.new_round()
+            for mach in range(M):
+                dst_mach = (mach + r) % M
+                src_procs = list(topo.procs_of(mach))[:d]
+                dst_procs = list(topo.procs_of(dst_mach))[:d]
+                for k in range(d):
+                    rnd.add(
+                        Send(
+                            src_procs[k],
+                            dst_procs[k],
+                            stripe,
+                            _pay(payloads, [("a2a_glob", mach, dst_mach, k)]),
+                        )
+                    )
+
+        # Phase 3: publish received stripes (Rule 1 writes).
+        rnd = sched.new_round()
+        for mach in range(M):
+            procs = list(topo.procs_of(mach))
+            for k in range(d):
+                w = procs[k]
+                readers = tuple(p for p in procs if p != w)
+                if readers:
+                    rnd.add(
+                        LocalWrite(
+                            w, readers, c * m, _pay(payloads, [("a2a_pub", mach, k)])
+                        )
+                    )
+    return sched
+
+
+# ----------------------------------------------------------------------
+# Registry used by the planner
+# ----------------------------------------------------------------------
+
+GENERATORS: dict[str, dict[str, Callable]] = {
+    "broadcast": {
+        "flat": bcast_flat_binomial,
+        "hier_seq": bcast_hier_seq,
+        "hier_par": bcast_hier_par,
+    },
+    "gather": {
+        "flat": gather_flat_binomial,
+        "hier_par": gather_hier_par,
+    },
+    "all_gather": {
+        "flat": allgather_flat_ring,
+        "hier_par": allgather_hier_par,
+    },
+    "all_reduce": {
+        "flat": allreduce_flat_ring,
+        "hier_par": allreduce_hier_par,
+        "hier_par_bw": allreduce_hier_par_bw,
+    },
+    "all_to_all": {
+        "flat": alltoall_flat_pairwise,
+        "hier_par": alltoall_hier_par,
+    },
+}
+
+
+def build(
+    topo: ClusterTopology,
+    collective: str,
+    strategy: str,
+    m: float,
+    root: int = 0,
+    payloads: bool = True,
+) -> Schedule:
+    gen = GENERATORS[collective][strategy]
+    if collective in ("broadcast", "gather"):
+        return gen(topo, m, root=root, payloads=payloads)
+    return gen(topo, m, payloads=payloads)

@@ -1,0 +1,390 @@
+"""Discrete simulator for Schedules under the multi-core cluster model.
+
+Two timing views:
+
+* ``simulate_rounds``  -- the paper's round-based telephone view: rounds are
+  globally synchronous; a round's duration is the cost of its most expensive
+  op (plus a write-slack term when shared-memory publication chains onto a
+  global receive, per the paper's "internal edges hide in the round length").
+
+* ``simulate_async``   -- a LogP-style continuous view: ops start as soon as
+  their data, their endpoints' ports, and a machine egress link are free.
+  This is the "more realistic cost model" the paper points to as future work.
+
+``validate`` enforces the model's structural rules:
+
+  R0 (telephone, full-duplex single-port): per round each proc is the source
+     of <=1 transfer and the destination of <=1 transfer; a LocalWrite
+     occupies the writer's source port.
+  R1 (read-is-not-write): LocalWrite readers must be co-located with the
+     writer; readers' ports are NOT occupied (shared memory).  Local Sends
+     are *reads* and do occupy ports.
+  R3 (parallel egress): a machine's global transfers share its ``degree``
+     external links.  Schedules designed for the model keep <= degree
+     concurrent global transfers per machine per round (checked with
+     ``strict_egress=True``); hierarchy-oblivious schedules may oversubscribe,
+     in which case the simulators charge the ceil(usage/degree) serialization
+     instead of rejecting -- this is precisely the hidden cost the paper says
+     flat algorithms pay on multi-core clusters.
+
+``check_semantics`` replays payload knowledge and asserts the collective's
+postcondition (who must know what).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from collections import defaultdict
+from dataclasses import dataclass
+
+from .schedules import LocalWrite, Schedule, Send
+from .topology import ClusterTopology
+
+
+class ScheduleError(ValueError):
+    pass
+
+
+# ----------------------------------------------------------------------
+# Structural validation (the model's rules)
+# ----------------------------------------------------------------------
+
+def validate(sched: Schedule, strict_egress: bool = False) -> None:
+    topo = sched.topo
+    for rix, rnd in enumerate(sched.rounds):
+        src_used: dict[int, int] = defaultdict(int)
+        dst_used: dict[int, int] = defaultdict(int)
+        mach_out: dict[int, int] = defaultdict(int)
+        mach_in: dict[int, int] = defaultdict(int)
+        for op in rnd.ops:
+            if isinstance(op, Send):
+                if op.src == op.dst:
+                    raise ScheduleError(f"round {rix}: self-send at {op.src}")
+                src_used[op.src] += 1
+                dst_used[op.dst] += 1
+                if not topo.co_located(op.src, op.dst):
+                    mach_out[topo.machine_of(op.src)] += 1
+                    mach_in[topo.machine_of(op.dst)] += 1
+            elif isinstance(op, LocalWrite):
+                src_used[op.writer] += 1
+                for r in op.readers:
+                    if not topo.co_located(op.writer, r):
+                        raise ScheduleError(
+                            f"round {rix}: LocalWrite crosses machines "
+                            f"({op.writer} -> {r})"
+                        )
+            else:  # pragma: no cover
+                raise ScheduleError(f"round {rix}: unknown op {op!r}")
+        for p, n in src_used.items():
+            if n > 1:
+                raise ScheduleError(f"round {rix}: proc {p} sources {n} ops")
+        for p, n in dst_used.items():
+            if n > 1:
+                raise ScheduleError(f"round {rix}: proc {p} receives {n} ops")
+        if strict_egress:
+            for mach, n in mach_out.items():
+                if n > topo.degree:
+                    raise ScheduleError(
+                        f"round {rix}: machine {mach} uses {n} egress links "
+                        f"(degree {topo.degree})"
+                    )
+            for mach, n in mach_in.items():
+                if n > topo.degree:
+                    raise ScheduleError(
+                        f"round {rix}: machine {mach} uses {n} ingress links "
+                        f"(degree {topo.degree})"
+                    )
+
+
+# ----------------------------------------------------------------------
+# Timing
+# ----------------------------------------------------------------------
+
+def _op_cost(topo: ClusterTopology, op) -> float:
+    if isinstance(op, LocalWrite):
+        return topo.write_cost
+    tier = topo.tier(op.src, op.dst)
+    return tier.transfer_time(op.nbytes) + topo.assemble_cost
+
+
+def simulate_rounds(sched: Schedule, check: bool = True) -> float:
+    """Round-based (telephone) simulated completion time, seconds.
+
+    A round's duration is its most expensive op, multiplied by the NIC
+    serialization factor when a machine's global transfers oversubscribe its
+    ``degree`` shared links (the paper's shared-connection rule).
+    """
+    if check:
+        validate(sched)
+    topo = sched.topo
+    total = 0.0
+    for rnd in sched.rounds:
+        if not rnd.ops:
+            continue
+        dur = max(_op_cost(topo, op) for op in rnd.ops)
+        mach_out: dict[int, int] = defaultdict(int)
+        mach_in: dict[int, int] = defaultdict(int)
+        has_global = False
+        has_write = False
+        for op in rnd.ops:
+            if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
+                has_global = True
+                mach_out[topo.machine_of(op.src)] += 1
+                mach_in[topo.machine_of(op.dst)] += 1
+            elif isinstance(op, LocalWrite):
+                has_write = True
+        serial = 1
+        for n in list(mach_out.values()) + list(mach_in.values()):
+            serial = max(serial, math.ceil(n / topo.degree))
+        dur *= serial
+        if has_global and has_write:
+            # chained shared-memory publish hides inside the round slack
+            dur += topo.write_cost
+        total += dur
+    return total
+
+
+def simulate_async(sched: Schedule, check: bool = True) -> float:
+    """Continuous (LogP-style) simulated completion time, seconds.
+
+    Ops are processed in schedule order; each starts when (a) every payload
+    chunk it carries is known at the source, (b) the source's send port and
+    destination's receive port are free, (c) for global transfers, an egress
+    link of the source machine and an ingress link of the destination machine
+    are free.  Chunks never seen before count as origin data (ready at t=0).
+    """
+    if check:
+        validate(sched)
+    topo = sched.topo
+    P = topo.n_procs
+    d = topo.degree
+    src_free = [0.0] * P
+    dst_free = [0.0] * P
+    # per machine: d egress and d ingress links, each a next-free time
+    out_links = [[0.0] * d for _ in range(topo.n_machines)]
+    in_links = [[0.0] * d for _ in range(topo.n_machines)]
+    known: dict[tuple[int, object], float] = {}
+
+    def chunk_ready(proc: int, payload) -> float:
+        t = 0.0
+        for ch in payload:
+            t = max(t, known.get((proc, ch), 0.0))
+        return t
+
+    def learn(proc: int, payload, t: float) -> None:
+        for ch in payload:
+            cur = known.get((proc, ch))
+            if cur is None or t < cur:
+                known[(proc, ch)] = t
+
+    finish = 0.0
+    for rnd in sched.rounds:
+        for op in rnd.ops:
+            if isinstance(op, LocalWrite):
+                start = max(chunk_ready(op.writer, op.payload), src_free[op.writer])
+                end = start + topo.write_cost
+                src_free[op.writer] = end
+                learn(op.writer, op.payload, start)
+                for r in op.readers:
+                    learn(r, op.payload, end)
+            else:
+                tier = topo.tier(op.src, op.dst)
+                start = max(
+                    chunk_ready(op.src, op.payload),
+                    src_free[op.src],
+                    dst_free[op.dst],
+                )
+                if tier is topo.global_:
+                    mo = out_links[topo.machine_of(op.src)]
+                    mi = in_links[topo.machine_of(op.dst)]
+                    ko = min(range(d), key=lambda k: mo[k])
+                    ki = min(range(d), key=lambda k: mi[k])
+                    start = max(start, mo[ko], mi[ki])
+                end = start + tier.transfer_time(op.nbytes) + topo.assemble_cost
+                if tier is topo.global_:
+                    mo[ko] = end
+                    mi[ki] = end
+                src_free[op.src] = end
+                dst_free[op.dst] = end
+                learn(op.dst, op.payload, end)
+            finish = max(finish, end)
+    return finish
+
+
+# ----------------------------------------------------------------------
+# Collective semantics
+# ----------------------------------------------------------------------
+
+def _replay_knowledge(sched: Schedule) -> dict[int, set]:
+    know: dict[int, set] = defaultdict(set)
+    # endowments
+    P = sched.topo.n_procs
+    if sched.collective == "broadcast":
+        know[sched.root].add(("bcast", sched.root))
+    elif sched.collective in ("gather", "all_gather"):
+        for p in range(P):
+            know[p].add(p)
+    elif sched.collective == "all_reduce":
+        c = sched.topo.procs_per_machine
+        for p in range(P):
+            for s in range(P):
+                know[p].add(("rs", s, p))
+            know[p].add(("ar", p))
+            for s in range(c):
+                know[p].add(("lrs", sched.topo.machine_of(p), s, p % c))
+    elif sched.collective == "all_to_all":
+        for p in range(P):
+            for q in range(P):
+                know[p].add(("a2a", p, q))
+    for rnd in sched.rounds:
+        recv: list[tuple[int, frozenset]] = []
+        for op in rnd.ops:
+            if isinstance(op, Send):
+                recv.append((op.dst, op.payload))
+            else:
+                for r in op.readers:
+                    recv.append((r, op.payload))
+                recv.append((op.writer, op.payload))
+        for dst, pay in recv:
+            know[dst] |= set(pay)
+    return know
+
+
+def check_semantics(sched: Schedule) -> None:
+    """Assert the collective's postcondition where payloads are concrete."""
+    topo = sched.topo
+    P = topo.n_procs
+    know = _replay_knowledge(sched)
+    if sched.collective == "broadcast":
+        tok = ("bcast", sched.root)
+        missing = [p for p in range(P) if tok not in know[p]]
+        if missing:
+            raise ScheduleError(f"broadcast incomplete: missing at {missing}")
+    elif sched.collective == "gather":
+        missing = [p for p in range(P) if p not in know[sched.root]]
+        if missing:
+            raise ScheduleError(f"gather incomplete: root lacks {missing}")
+    elif sched.collective == "all_gather":
+        for p in range(P):
+            lack = [q for q in range(P) if q not in know[p]]
+            if lack:
+                raise ScheduleError(f"all_gather incomplete: {p} lacks {lack}")
+    elif sched.collective == "all_reduce":
+        _check_allreduce(sched, know)
+    elif sched.collective == "all_to_all":
+        _check_alltoall(sched)
+    else:  # pragma: no cover
+        raise ScheduleError(f"unknown collective {sched.collective}")
+
+
+def _check_allreduce(sched: Schedule, know) -> None:
+    topo = sched.topo
+    P = topo.n_procs
+    if sched.name == "allreduce_flat_ring":
+        for p in range(P):
+            for s in range(P):
+                lack = [q for q in range(P) if ("rs", s, q) not in know[p]]
+                if lack:
+                    raise ScheduleError(
+                        f"all_reduce: proc {p} shard {s} missing contribs {lack}"
+                    )
+    elif sched.name == "allreduce_hier_par_bw":
+        # Phase-1 local reduce-scatter completeness (real payloads), plus
+        # inter-machine volume lower bound for the synthetic phases.
+        M, c, m = topo.n_machines, topo.procs_per_machine, sched.nbytes
+        for mach in range(M):
+            procs = list(topo.procs_of(mach))
+            for i, p in enumerate(procs):
+                shard = (i + 1) % c
+                lack = [
+                    j
+                    for j in range(c)
+                    if ("lrs", mach, shard, j) not in know[p]
+                ]
+                if lack:
+                    raise ScheduleError(
+                        f"all_reduce bw: machine {mach} proc {p} shard {shard} "
+                        f"missing local contribs {lack}"
+                    )
+        if M > 1:
+            gbytes = sched.total_global_bytes()
+            need = M * 2 * m * (M - 1) / M * 0.999
+            if gbytes < need:
+                raise ScheduleError(
+                    f"all_reduce bw: global bytes {gbytes} < required {need}"
+                )
+    else:
+        # hierarchical: check (a) local reduce completeness via real payloads,
+        # (b) inter-machine byte volume >= ring-optimal 2*m*(M-1)/M per
+        # machine boundary pair, (c) every proc touched by a final publish.
+        M, c, m = topo.n_machines, topo.procs_per_machine, sched.nbytes
+        for mach in range(M):
+            head = next(iter(topo.procs_of(mach)))
+            lack = [q for q in topo.procs_of(mach) if ("ar", q) not in know[head]]
+            if lack:
+                raise ScheduleError(
+                    f"all_reduce: machine {mach} local reduce missing {lack}"
+                )
+        if M > 1:
+            gbytes = sched.total_global_bytes()
+            need = M * 2 * m * (M - 1) / M * 0.999  # all machines, RS+AG
+            if gbytes < need:
+                raise ScheduleError(
+                    f"all_reduce: global bytes {gbytes} < required {need}"
+                )
+
+
+def _check_alltoall(sched: Schedule) -> None:
+    topo = sched.topo
+    m = sched.nbytes
+    M, c = topo.n_machines, topo.procs_per_machine
+    if sched.name == "alltoall_flat_pairwise":
+        know = _replay_knowledge(sched)
+        P = topo.n_procs
+        for q in range(P):
+            lack = [p for p in range(P) if p != q and ("a2a", p, q) not in know[q]]
+            if lack:
+                raise ScheduleError(f"all_to_all: {q} missing from {lack}")
+    else:
+        # volume check: every ordered machine pair must move c*c*m bytes
+        pair_bytes: dict[tuple[int, int], float] = defaultdict(float)
+        for op in sched.all_ops():
+            if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
+                key = (topo.machine_of(op.src), topo.machine_of(op.dst))
+                pair_bytes[key] += op.nbytes
+        for i in range(M):
+            for j in range(M):
+                if i == j:
+                    continue
+                if pair_bytes[(i, j)] < c * c * m * 0.999:
+                    raise ScheduleError(
+                        f"all_to_all: machines {i}->{j} moved "
+                        f"{pair_bytes[(i, j)]} < {c * c * m}"
+                    )
+
+
+@dataclass(frozen=True)
+class SimResult:
+    name: str
+    collective: str
+    t_rounds: float
+    t_async: float
+    n_rounds: int
+    global_bytes: float
+    local_bytes: float
+
+
+def evaluate(sched: Schedule) -> SimResult:
+    """Validate, semantics-check, and time a schedule under both views."""
+    validate(sched)
+    check_semantics(sched)
+    return SimResult(
+        name=sched.name,
+        collective=sched.collective,
+        t_rounds=simulate_rounds(sched, check=False),
+        t_async=simulate_async(sched, check=False),
+        n_rounds=sched.n_rounds,
+        global_bytes=sched.total_global_bytes(),
+        local_bytes=sched.total_local_bytes(),
+    )

@@ -1,0 +1,166 @@
+"""Cluster topology description for the multi-core communication model.
+
+The paper's object of study is a cluster of machines, each machine holding
+several processes that share memory and share the machine's external network
+links.  We keep the paper's vocabulary (machine / process / degree) and map it
+onto the TPU hierarchy (pod / chip / pod-egress links) via presets at the
+bottom of this file.
+
+Everything here is plain Python (no jax) so the planner can run anywhere,
+including inside launcher processes before jax initializes devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LinkTier:
+    """One tier of the two-tier network (paper Rule 2).
+
+    alpha:  per-message startup latency, seconds.
+    beta:   per-byte transfer time, seconds/byte (1 / bandwidth).
+    """
+
+    name: str
+    alpha: float
+    beta: float
+
+    @property
+    def bandwidth(self) -> float:
+        return 1.0 / self.beta
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.alpha + nbytes * self.beta
+
+
+@dataclass(frozen=True)
+class ClusterTopology:
+    """A homogeneous cluster of multi-core machines.
+
+    n_machines:         number of machines (TPU: pods).
+    procs_per_machine:  processes per machine (TPU: chips per pod).
+    degree:             external links usable *simultaneously* by one machine
+                        (paper Rule 3; TPU: host NICs per pod).
+    local / global_:    link tiers (paper Rule 2).
+    write_cost:         constant time for a shared-memory write visible to any
+                        subset of co-located processes (paper Rule 1, "write").
+    assemble_cost:      per-message assembly time charged when a process's
+                        buffer must be *read* (paper Rule 1, "read").
+    """
+
+    n_machines: int
+    procs_per_machine: int
+    degree: int
+    local: LinkTier
+    global_: LinkTier
+    write_cost: float
+    assemble_cost: float
+
+    def __post_init__(self) -> None:
+        if self.n_machines < 1:
+            raise ValueError("n_machines must be >= 1")
+        if self.procs_per_machine < 1:
+            raise ValueError("procs_per_machine must be >= 1")
+        if not (1 <= self.degree):
+            raise ValueError("degree must be >= 1")
+        if self.local.alpha > self.global_.alpha or self.local.beta > self.global_.beta:
+            # Rule 2: local edges are short, global edges are long.
+            raise ValueError("local tier must be at least as fast as global tier")
+
+    # ------------------------------------------------------------------
+    # process <-> machine arithmetic
+    # ------------------------------------------------------------------
+    @property
+    def n_procs(self) -> int:
+        return self.n_machines * self.procs_per_machine
+
+    def machine_of(self, proc: int) -> int:
+        return proc // self.procs_per_machine
+
+    def procs_of(self, machine: int) -> range:
+        base = machine * self.procs_per_machine
+        return range(base, base + self.procs_per_machine)
+
+    def co_located(self, p: int, q: int) -> bool:
+        return self.machine_of(p) == self.machine_of(q)
+
+    def tier(self, p: int, q: int) -> LinkTier:
+        return self.local if self.co_located(p, q) else self.global_
+
+    # ------------------------------------------------------------------
+    # round-based view (telephone model + the paper's three rules)
+    # ------------------------------------------------------------------
+    def global_round_time(self, nbytes: float) -> float:
+        """Duration of one *global* round for an nbytes message.
+
+        Paper: "we'll assume any number of internal edges may be traversed
+        during a single round and include this extra cost in our round length
+        estimate" -- the round length is the global transfer plus the local
+        slack that hides any intra-machine pattern.
+        """
+        local_slack = self.write_cost + math.ceil(
+            math.log2(max(self.procs_per_machine, 2))
+        ) * self.local.transfer_time(nbytes)
+        return self.global_.transfer_time(nbytes) + self.assemble_cost + local_slack
+
+    def local_round_time(self, nbytes: float) -> float:
+        """Duration of one *local* round (one clique edge, Rule 1 'read')."""
+        return self.local.transfer_time(nbytes) + self.assemble_cost
+
+    def with_(self, **kw) -> "ClusterTopology":
+        return dataclasses.replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# Presets
+# ----------------------------------------------------------------------
+
+def paper_smp_cluster(
+    n_machines: int = 16,
+    cores: int = 4,
+    nics: int = 1,
+) -> ClusterTopology:
+    """A 2008-era cluster of SMP workstations: GigE network, shared memory.
+
+    GigE: ~50us latency, ~125 MB/s.  Shared memory: ~1us, ~2 GB/s.
+    """
+    return ClusterTopology(
+        n_machines=n_machines,
+        procs_per_machine=cores,
+        degree=nics,
+        local=LinkTier("shm", alpha=1e-6, beta=1.0 / 2.0e9),
+        global_=LinkTier("gige", alpha=50e-6, beta=1.0 / 125.0e6),
+        write_cost=1e-6,
+        assemble_cost=2e-6,
+    )
+
+
+# Hardware constants for the roofline target (TPU v5e, per assignment):
+#   197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BW = 819e9
+V5E_ICI_BW = 50e9          # per link
+V5E_DCN_BW_PER_HOST = 25e9  # per-host NIC aggregate (4 chips/host on v5e)
+V5E_HOSTS_PER_POD = 64
+V5E_CHIPS_PER_POD = 256
+
+
+def tpu_v5e_cluster(n_pods: int = 2) -> ClusterTopology:
+    """Multi-pod TPU v5e, the production target of this framework.
+
+    machine = pod; proc = chip; degree = host NICs per pod (parallel egress).
+    local tier = ICI (per-hop), global tier = DCN (per host NIC).
+    """
+    return ClusterTopology(
+        n_machines=n_pods,
+        procs_per_machine=V5E_CHIPS_PER_POD,
+        degree=V5E_HOSTS_PER_POD,
+        local=LinkTier("ici", alpha=1e-6, beta=1.0 / V5E_ICI_BW),
+        global_=LinkTier("dcn", alpha=10e-6, beta=1.0 / V5E_DCN_BW_PER_HOST),
+        write_cost=1e-6,
+        assemble_cost=1e-6,
+    )

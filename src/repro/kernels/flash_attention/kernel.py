@@ -1,0 +1,152 @@
+"""Pallas TPU flash-attention kernel (blocked online softmax, GQA).
+
+TPU adaptation notes (vs the CUDA flash-attention the technique comes from):
+  * blocks are MXU-aligned: BQ x Dh and BK x Dh tiles with Dh padded to a
+    multiple of 128; the [BQ, BK] logit tile feeds the 128x128 systolic
+    array directly,
+  * the online-softmax running state (m, l, acc) lives in VMEM scratch and
+    is carried across the *sequential* innermost grid dimension (kv blocks),
+    replacing CUDA's per-warp shared-memory accumulation,
+  * no atomics / warp shuffles: the TPU grid is executed in order per core,
+    so @pl.when(first/last kv block) handles init and finalization.
+
+Validated with interpret=True on CPU against ``ref.mha_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, logit_softcap, sliding_window, bq, bk, seq_k,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                   # [BQ, Dh]
+    k = k_ref[0, 0]                   # [BK, Dh]
+    v = v_ref[0, 0]                   # [BK, Dh]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                          # [BQ, BK]
+    if logit_softcap:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_k                      # padding
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window:
+        mask &= kpos > qpos - sliding_window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                      # [BQ, 1]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (all NEG_INF) against exp overflow/nan
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _fini():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    logit_softcap: float = 0.0,
+    sliding_window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, Sq, H, Dh]; k, v: [B, Sk, Hkv, Dh] -> [B, Sq, H, Dh].
+
+    Handles GQA via the k/v BlockSpec index map; pads S and Dh to block /
+    lane multiples.  Sq must equal Sk (self-attention) for the causal path.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    dh_pad = (-Dh) % 128 if not interpret else 0
+    sq_pad = (-Sq) % bq
+    sk_pad = (-Sk) % bk
+
+    qp = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, dh_pad)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, dh_pad)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, dh_pad)))
+    # layout: [B, H, S, Dh] so blocks are [S-block, Dh] tiles
+    qp = qp.transpose(0, 2, 1, 3)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    Dp = Dh + dh_pad
+    nq = (Sq + sq_pad) // bq
+    nk = (Sk + sk_pad) // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        logit_softcap=logit_softcap,
+        sliding_window=sliding_window,
+        bq=bq,
+        bk=bk,
+        seq_k=Sk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, Dp), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dp), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + sq_pad, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dp), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :Sq, :, :Dh]

@@ -1,0 +1,153 @@
+"""Dispatching wrapper for attention.
+
+Paths:
+  * Pallas kernel (``kernel.flash_mha``)   -- TPU, or interpret=True in tests.
+  * Chunked online-softmax in pure jnp     -- compiled path on CPU and the
+    memory-sane fallback for long sequences (never materializes [Sq, Sk]).
+  * Naive reference (``ref.mha_reference``) -- tiny shapes / oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import ref
+from .kernel import flash_mha
+
+_CHUNK = 1024
+NEG_INF = -1e30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _chunked_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool,
+    logit_softcap: float,
+    sliding_window: int,
+    chunk: int = _CHUNK,
+) -> jax.Array:
+    """Flash-style attention as a lax.scan over KV chunks (pure jnp).
+
+    Identical math to the Pallas kernel; O(Sq * chunk) live memory.  Used as
+    the compiled CPU path so that 32k-500k dry-runs have sane footprints.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    ck = min(chunk, Sk)
+    pad = (-Sk) % ck
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (Sk + pad) // ck
+    kp = kp.reshape(B, nk, ck, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vp = vp.reshape(B, nk, ck, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+
+    qh = q.reshape(B, Sq, Hkv, g, Dh)
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        ikc, kc, vc = xs
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qh, kc.astype(qh.dtype),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        kpos = ikc * ck + jnp.arange(ck)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if sliding_window:
+            mask &= kpos[None, :] > qpos[:, None] - sliding_window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.where(mask[None, None, None], jnp.exp(logits - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha[..., 0][..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, g, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (jnp.arange(nk), kp, vp))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_diff(q, k, v, causal, logit_softcap, sliding_window, interpret):
+    """Kernel forward + XLA (chunked) backward.
+
+    Pallas cannot JVP through the scratch-carrying flash kernel; the
+    standard pattern is a custom VJP: run the kernel forward, differentiate
+    the mathematically identical chunked formulation for the backward."""
+    return flash_mha(
+        q, k, v, causal=causal, logit_softcap=logit_softcap,
+        sliding_window=sliding_window, interpret=interpret,
+    )
+
+
+def _flash_diff_fwd(q, k, v, causal, logit_softcap, sliding_window, interpret):
+    out = _flash_diff(q, k, v, causal, logit_softcap, sliding_window, interpret)
+    return out, (q, k, v)
+
+
+def _flash_diff_bwd(causal, logit_softcap, sliding_window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _chunked_mha(
+            q_, k_, v_, causal, logit_softcap, sliding_window
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    logit_softcap: float = 0.0,
+    sliding_window: int = 0,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Attention entry point used by the model zoo."""
+    if interpret is None:
+        interpret = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+    if use_kernel and (_on_tpu() or interpret):
+        return _flash_diff(
+            q, k, v, causal, logit_softcap, sliding_window, interpret
+        )
+    if q.shape[1] * k.shape[1] <= 256 * 256:
+        return ref.mha_reference(
+            q, k, v, causal=causal, logit_softcap=logit_softcap,
+            sliding_window=sliding_window,
+        )
+    return _chunked_mha(
+        q, k, v, causal=causal, logit_softcap=logit_softcap,
+        sliding_window=sliding_window,
+    )

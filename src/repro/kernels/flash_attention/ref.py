@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for blocked causal GQA attention.
+
+Materializes the full [B, H, Sq, Sk] logits -- use only at test scale.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    logit_softcap: float = 0.0,
+    sliding_window: int = 0,
+) -> jax.Array:
+    """q: [B, Sq, H, Dh]; k, v: [B, Sk, Hkv, Dh] -> [B, Sq, H, Dh].
+
+    GQA: query head h attends to kv head h // (H // Hkv).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    qh = q.reshape(B, Sq, Hkv, g, Dh)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qh, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(Dh)
+    if logit_softcap:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window:
+        mask &= kpos > qpos - sliding_window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Dispatching wrapper for RMSNorm: Pallas on TPU / interpret, jnp otherwise."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    interpret = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+    if _on_tpu() or interpret:
+        return kernel.rmsnorm(x, w, eps=eps, interpret=interpret)
+    return ref.rmsnorm_reference(x, w, eps=eps)

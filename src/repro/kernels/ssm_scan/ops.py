@@ -1,0 +1,135 @@
+"""Dispatching wrapper for the selective scan.
+
+The chunked-jnp path mirrors the kernel's SSD math with lax.scan over
+chunks -- compiled CPU path with compact HLO (one chunk body), used by the
+dry-run so 500k-sequence lowering stays small.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _chunked_jnp(x, dt, A, B, C, D, chunk: int = 128) -> jax.Array:
+    """SSD chunked scan in pure jnp (same math as the Pallas kernel)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    q = min(chunk, S)
+    pad = (-S) % q
+    Sp = S + pad
+    nC = Sp // q
+    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtf = jnp.pad(dt.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Bf = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Cf = jnp.pad(C.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    xc = xf.reshape(Bt, nC, q, H, P).transpose(1, 0, 3, 2, 4)   # [nC,B,H,Q,P]
+    dtc = dtf.reshape(Bt, nC, q, H).transpose(1, 0, 3, 2)        # [nC,B,H,Q]
+    Bc = Bf.reshape(Bt, nC, q, N).transpose(1, 0, 2, 3)          # [nC,B,Q,N]
+    Cc = Cf.reshape(Bt, nC, q, N).transpose(1, 0, 2, 3)
+
+    ii = jnp.arange(q)[None, :]
+    jj = jnp.arange(q)[:, None]
+    causal = jj >= ii
+
+    def step(h, xs):
+        xq, dtq, bq, cq = xs                     # [B,H,Q,P],[B,H,Q],[B,Q,N]x2
+        a = dtq * A[None, :, None]               # [B,H,Q]
+        cum = jnp.cumsum(a, axis=-1)
+        G = jnp.einsum("bjn,bin->bji", cq, bq)   # [B,Q,Q]
+        seg = jnp.where(
+            causal[None, None],
+            jnp.exp(cum[..., :, None] - cum[..., None, :]),
+            0.0,
+        )                                        # [B,H,Q,Q]
+        W = G[:, None] * seg
+        y = jnp.einsum("bhji,bhip->bhjp", W, xq * dtq[..., None])
+        y += jnp.einsum(
+            "bjn,bhj,bhnp->bhjp", cq, jnp.exp(cum), h
+        )
+        w = jnp.exp(cum[..., -1:] - cum) * dtq   # [B,H,Q]
+        h = (
+            jnp.exp(cum[..., -1])[..., None, None] * h
+            + jnp.einsum("bin,bhi,bhip->bhnp", bq, w, xq)
+        )
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    _, ys = lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bt, Sp, H, P)[:, :S]
+    return (y + D[None, None, :, None] * x.astype(jnp.float32)).astype(x.dtype)
+
+
+def selective_scan(x, dt, A, B, C, D, chunk: int = 128) -> jax.Array:
+    interpret = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+    if _on_tpu() or interpret:
+        return kernel.ssd_scan(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
+    if x.shape[1] <= 64:
+        return ref.selective_scan_reference(x, dt, A, B, C, D)
+    return _chunked_jnp(x, dt, A, B, C, D, chunk=chunk)
+
+
+def final_state(x, dt, A, B, chunk: int = 128) -> jax.Array:
+    """Final SSM state after scanning the whole sequence (for prefill).
+
+    h_S = sum_i exp(sum_{k>i} a_k) dt_i B_i (x) x_i, computed chunk-wise.
+    Returns [Bt, H, N, P] f32.
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    q = min(chunk, S)
+    pad = (-S) % q
+    Sp = S + pad
+    nC = Sp // q
+    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtf = jnp.pad(dt.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Bf = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    xc = xf.reshape(Bt, nC, q, H, P).transpose(1, 0, 3, 2, 4)
+    dtc = dtf.reshape(Bt, nC, q, H).transpose(1, 0, 3, 2)
+    Bc = Bf.reshape(Bt, nC, q, N).transpose(1, 0, 2, 3)
+
+    def step(h, xs):
+        xq, dtq, bq = xs
+        a = dtq * A[None, :, None]
+        cum = jnp.cumsum(a, axis=-1)
+        w = jnp.exp(cum[..., -1:] - cum) * dtq
+        h = (
+            jnp.exp(cum[..., -1])[..., None, None] * h
+            + jnp.einsum("bin,bhi,bhip->bhnp", bq, w, xq)
+        )
+        return h, None
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    h, _ = lax.scan(step, h0, (xc, dtc, Bc))
+    return h
+
+
+def selective_scan_with_state(x, dt, A, B, C, D, chunk: int = 128):
+    """(y, final_state) -- y via the dispatched path, state via chunked jnp."""
+    y = selective_scan(x, dt, A, B, C, D, chunk=chunk)
+    return y, final_state(x, dt, A, B, chunk=chunk)
+
+
+def decode_step(x, dt, A, B, C, D, state):
+    """Single-token state update for serving.
+
+    x [Bt,H,P], dt [Bt,H], B/C [Bt,N], state [Bt,H,N,P] ->
+    (y [Bt,H,P], new_state).
+    """
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)                     # [B,H]
+    upd = jnp.einsum("bn,bhp->bhnp", B.astype(jnp.float32), xf * dtf[..., None])
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), state)
+    y = y + D[None, :, None] * xf
+    return y.astype(x.dtype), state

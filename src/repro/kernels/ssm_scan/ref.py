@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Mamba2 selective state-space scan.
+
+Sequential time recurrence (the mathematical definition):
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t (x) x_t      (outer product)
+    y_t = C_t . h_t + D_h * x_t
+
+Shapes: x [B,S,H,P], dt [B,S,H] (positive), A [H] (negative), B/C [B,S,N],
+D [H].  State h: [B,H,N,P].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def selective_scan_reference(x, dt, A, B, C, D) -> jax.Array:
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, t):
+        xt = x[:, t].astype(jnp.float32)        # [B,H,P]
+        dtt = dt[:, t].astype(jnp.float32)      # [B,H]
+        Btv = B[:, t].astype(jnp.float32)       # [B,N]
+        Ctv = C[:, t].astype(jnp.float32)       # [B,N]
+        decay = jnp.exp(dtt * A)                # [B,H]
+        upd = jnp.einsum("bn,bhp->bhnp", Btv, xt * dtt[..., None])
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Ctv, h) + D[None, :, None] * xt
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    _, ys = lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # [B,S,H,P]

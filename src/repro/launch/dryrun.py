@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, extract cost/memory/collective statistics, write one JSON per cell.
+
+MUST be run as its own process (the device-count flag above is set before
+any other import, including jax).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \\
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached by cell name; --force recompiles.
+"""
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax            # noqa: E402
+
+from repro.configs import ALIASES, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch import hlo_stats, specs  # noqa: E402
+from repro.launch.mesh import POD_CHIPS, make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
+             force: bool = False, pod_mode: str | None = None,
+             pod_sync: str = "flat", accum=None, remat=None,
+             policy: str = "default", tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    suffix = f"_{tag}" if tag else ""
+    out_path = outdir / f"{arch}_{shape_name}_{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    if not ok:
+        rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+                   skipped=True, reason=why)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind, skipped=False,
+               n_devices=int(n_dev), tag=tag)
+    try:
+        kw = {}
+        if shape.kind == "train":
+            if pod_mode:
+                kw["pod_mode"] = pod_mode
+            kw["pod_sync"] = pod_sync
+            if accum is not None:
+                kw["accum"] = accum
+            if remat is not None:
+                kw["remat"] = remat
+            if policy != "default":
+                kw["policy"] = policy
+        cell = specs.build_cell(cfg, shape, mesh, **kw)
+        rec["meta"] = cell.meta
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.meta.get("donate", ()),
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        rec["memory"]["peak_per_device_bytes"] = (
+            rec["memory"]["argument_bytes"]
+            + rec["memory"]["output_bytes"]
+            + rec["memory"]["temp_bytes"]
+        )
+        flops = float(cost.get("flops", 0.0)) if cost else 0.0
+        bytes_acc = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+        rec["cost"] = {"flops": flops, "bytes_accessed": bytes_acc}
+
+        hlo = compiled.as_text()
+        import gzip
+        (outdir / f"{arch}_{shape_name}_{mesh_kind}{suffix}.hlo.gz").write_bytes(
+            gzip.compress(hlo.encode())
+        )
+        st = hlo_stats.parse_collectives(hlo, n_dev, POD_CHIPS)
+        rec["collectives"] = {
+            "by_kind": st.by_kind(),
+            "wire_bytes_per_device": st.total_wire_bytes_per_device(),
+            "wire_bytes_bf16_corrected": st.total_wire_bf16_corrected(),
+            "pod_crossing_bytes_total": st.total_crossing_bytes(),
+            "n_ops": len(st.ops),
+        }
+        rec["parser"] = "loop-aware-v2"
+        rec["hlo_bytes"] = len(hlo)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--pod-mode", default=None, choices=[None, "gspmd", "manual"])
+    ap.add_argument("--pod-sync", default="flat", choices=["flat", "q8"])
+    ap.add_argument("--policy", default="default", choices=["default", "dp256"])
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ALIASES:
+            for shape in SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mk in cells:
+        rec = run_cell(arch, shape, mk, outdir, force=args.force,
+                       pod_mode=args.pod_mode, pod_sync=args.pod_sync,
+                       accum=args.accum, remat=args.remat,
+                       policy=args.policy, tag=args.tag)
+        if rec.get("skipped"):
+            n_skip += 1
+            status = "SKIP"
+        elif rec.get("ok"):
+            n_ok += 1
+            status = "OK"
+        else:
+            n_fail += 1
+            status = "FAIL"
+        mem = rec.get("memory", {}).get("peak_per_device_bytes", 0) / 2**30
+        fl = rec.get("cost", {}).get("flops", 0)
+        print(
+            f"[{status}] {arch:20s} {shape:12s} {mk:6s} "
+            f"mem/dev={mem:7.2f}GiB flops={fl:.3e} t={rec.get('total_s', 0)}s"
+            + ("" if rec.get("ok") or rec.get("skipped") else f"  ERR={rec.get('error','')[:120]}"),
+            flush=True,
+        )
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Parse compiled (partitioned) HLO for collective statistics.
+
+Extracts every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, with per-participant wire bytes (bandwidth-optimal
+algorithm accounting) and, on multi-pod meshes, the bytes that must cross
+the pod seam (the paper's *global edges*), computed from replica groups.
+
+Device-id convention (launch/mesh.py): id = pod*256 + data*16 + model.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[0-9, {}]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([0-9,{} ]*)\}")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum of sizes of all shapes in a shape string like
+    '(f32[8,128], f32[8,128])' or 'bf16[2048,128]'."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str, n_devices: int) -> list[list[int]]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        total = math.prod(dims)
+        import numpy as np
+
+        ids = np.arange(total).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(g, n)
+        return ids.tolist()
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        inner = m.group(1)
+        return [
+            [int(x) for x in grp.split(",") if x.strip()]
+            for grp in re.findall(r"\{([0-9, ]*)\}", inner)
+        ]
+    return [list(range(n_devices))]
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    per_device_bytes: float      # operand bytes on one participant
+    group_size: int
+    n_groups: int
+    wire_bytes_per_device: float
+    crossing_bytes_total: float  # bytes crossing the pod seam (all groups)
+    dtype: str = ""
+    line: str = ""
+
+
+@dataclass
+class CollectiveStats:
+    ops: list = field(default_factory=list)
+
+    def total_wire_bytes_per_device(self) -> float:
+        return sum(o.wire_bytes_per_device for o in self.ops)
+
+    def total_crossing_bytes(self) -> float:
+        return sum(o.crossing_bytes_total for o in self.ops)
+
+    def total_wire_bf16_corrected(self) -> float:
+        """TPU-corrected wire bytes: XLA:CPU's float-normalization upcasts
+        bf16 values to f32, so f32 collectives on the CPU dry-run would be
+        bf16 on TPU (our matmuls/activations are bf16; see EXPERIMENTS.md).
+        Gradient reduce-scatters are genuinely f32 when accum_dtype=f32, so
+        this is a lower bound; the raw number is the upper bound."""
+        tot = 0.0
+        for o in self.ops:
+            f = 0.5 if o.dtype == "f32" else 1.0
+            tot += o.wire_bytes_per_device * f
+        return tot
+
+    def by_kind(self) -> dict:
+        agg = defaultdict(lambda: dict(count=0, wire=0.0, crossing=0.0))
+        for o in self.ops:
+            a = agg[o.kind]
+            a["count"] += 1
+            a["wire"] += o.wire_bytes_per_device
+            a["crossing"] += o.crossing_bytes_total
+        return dict(agg)
+
+
+def _pod_of(dev: int, chips_per_pod: int) -> int:
+    return dev // chips_per_pod
+
+
+def _crossing_bytes(kind: str, groups, per_dev: float, chips_per_pod: int,
+                    line: str = "") -> float:
+    """Hierarchical-optimal bytes across the pod seam, per op (all groups)."""
+    total = 0.0
+    if kind == "collective-permute":
+        m = _SRC_TGT_RE.search(line)
+        if m:
+            pairs = re.findall(r"\{(\d+),\s*(\d+)\}", m.group(0))
+            for s, t in pairs:
+                if _pod_of(int(s), chips_per_pod) != _pod_of(int(t), chips_per_pod):
+                    total += per_dev
+        return total
+    for grp in groups:
+        pods = defaultdict(int)
+        for d in grp:
+            pods[_pod_of(d, chips_per_pod)] += 1
+        npods = len(pods)
+        if npods <= 1:
+            continue
+        g = len(grp)
+        if kind == "all-reduce":
+            # hierarchical-optimal: one reduced partial crosses each seam in
+            # each direction
+            total += 2 * per_dev * (npods - 1)
+        elif kind == "all-gather":
+            # every pod must import the shards held by the other pods
+            for cnt in pods.values():
+                total += per_dev * (g - cnt)
+        elif kind in ("reduce-scatter", "all-to-all"):
+            # each participant's contribution homed in other pods crosses once
+            for cnt in pods.values():
+                total += cnt * per_dev * (g - cnt) / g
+    return total
+
+
+def _wire_bytes(kind: str, per_dev: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2 * per_dev * (g - 1) / g
+    if kind == "all-gather":
+        # per_dev = operand (shard); receives (g-1) shards
+        return per_dev * (g - 1)
+    if kind == "reduce-scatter":
+        return per_dev * (g - 1) / g
+    if kind == "all-to-all":
+        return per_dev * (g - 1) / g
+    if kind == "collective-permute":
+        return per_dev
+    return 0.0
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> tuple:
+    """-> (comps: name -> lines, entry_name)."""
+    comps: dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _loop_multipliers(hlo_text: str, comps: dict, entry=None) -> dict:
+    """Estimated execution count per computation: product of trip counts of
+    enclosing while loops.  Trip counts come from the largest constant in
+    the loop's condition computation (the induction-variable bound); this is
+    exact for scan-lowered loops.  Best effort, >= 1."""
+    mult = {name: 1 for name in comps}
+
+    # call graph: computation -> called computations
+    calls: dict[str, set] = {name: set() for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            for callee in _CALL_RE.findall(line):
+                if callee in comps:
+                    calls[name].add(callee)
+
+    # trip count per while body
+    body_trip: dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                mb = _WHILE_BODY_RE.search(line)
+                mc = _WHILE_COND_RE.search(line)
+                if not (mb and mc):
+                    continue
+                body, cond = mb.group(1), mc.group(1)
+                trips = [int(x) for x in _TRIP_RE.findall(
+                    "\n".join(comps.get(cond, []))
+                )]
+                body_trip[body] = max([t for t in trips if t > 1] or [1])
+
+    # propagate multipliers down the call graph from ENTRY
+    import collections
+
+    roots = [entry] if entry else [n for n in comps
+                                   if not any(n in c for c in calls.values())]
+    seen: dict[str, int] = {}
+    queue = collections.deque((r, 1) for r in roots if r)
+    while queue:
+        name, factor = queue.popleft()
+        if seen.get(name, 0) >= factor:
+            continue
+        seen[name] = factor
+        mult[name] = max(mult.get(name, 1), factor)
+        for callee in calls.get(name, ()):  # body gets x trip count
+            f = factor * body_trip.get(callee, 1)
+            queue.append((callee, f))
+    return mult
+
+
+def parse_collectives(
+    hlo_text: str, n_devices: int, chips_per_pod: int = 256
+) -> CollectiveStats:
+    """Loop-aware: collectives inside while bodies (layer scans, microbatch
+    accumulation) are counted trip-count times."""
+    stats = CollectiveStats()
+    comps, entry = _split_computations(hlo_text)
+    mult = _loop_multipliers(hlo_text, comps, entry)
+
+    def scan_lines(lines, factor):
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            result_bytes = _shape_bytes(m.group(1))
+            dm = _SHAPE_RE.search(m.group(1))
+            dtype = dm.group(1) if dm else ""
+            kind = m.group(2)
+            groups = _parse_groups(line, n_devices)
+            g = len(groups[0]) if groups else 1
+            # derive the per-participant OPERAND bytes from the result shape
+            if kind == "all-gather":
+                per_dev = result_bytes / max(g, 1)
+            elif kind == "reduce-scatter":
+                per_dev = result_bytes * g
+            else:
+                per_dev = result_bytes
+            stats.ops.append(
+                CollectiveOp(
+                    kind=kind,
+                    per_device_bytes=per_dev,
+                    group_size=g,
+                    n_groups=len(groups),
+                    wire_bytes_per_device=_wire_bytes(kind, per_dev, g) * factor,
+                    crossing_bytes_total=_crossing_bytes(
+                        kind, groups, per_dev, chips_per_pod, line
+                    ) * factor,
+                    dtype=dtype,
+                    line=line.strip()[:200],
+                )
+            )
+
+    if comps:
+        for name, lines in comps.items():
+            scan_lines(lines, mult.get(name, 1))
+    else:
+        scan_lines(hlo_text.splitlines(), 1)
+    return stats

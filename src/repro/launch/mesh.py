@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16)    axes ("data", "model")        -- 256 chips.
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") -- 512 chips.
+
+Device order is row-major, so chip id = pod*256 + data*16 + model; the
+roofline tier classifier (benchmarks/hlo_collectives.py) relies on this to
+decide which replica groups cross the pod seam (the paper's global edges).
+
+``make_production_mesh`` is a function (never a module constant): importing
+this module must not touch jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+POD_CHIPS = 256
+N_PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (N_PODS, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for multi-device subprocess tests (8 fake devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

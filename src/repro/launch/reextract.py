@@ -1,0 +1,39 @@
+"""Re-parse saved .hlo.gz files and update the dry-run JSONs in place
+(parser iterations without recompiling)."""
+
+import argparse
+import gzip
+import json
+from pathlib import Path
+
+from repro.launch import hlo_stats
+from repro.launch.mesh import POD_CHIPS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    for hz in sorted(Path(args.out).glob("*.hlo.gz")):
+        jf = hz.with_suffix("").with_suffix(".json")
+        if not jf.exists():
+            continue
+        rec = json.loads(jf.read_text())
+        n_dev = rec.get("n_devices", 256)
+        hlo = gzip.decompress(hz.read_bytes()).decode()
+        st = hlo_stats.parse_collectives(hlo, n_dev, POD_CHIPS)
+        rec["collectives"] = {
+            "by_kind": st.by_kind(),
+            "wire_bytes_per_device": st.total_wire_bytes_per_device(),
+            "wire_bytes_bf16_corrected": st.total_wire_bf16_corrected(),
+            "pod_crossing_bytes_total": st.total_crossing_bytes(),
+            "n_ops": len(st.ops),
+        }
+        rec["parser"] = "loop-aware-v2"
+        jf.write_text(json.dumps(rec, indent=1))
+        print(f"{jf.name}: wire/dev={st.total_wire_bytes_per_device()/1e9:.2f}GB "
+              f"crossing={st.total_crossing_bytes()/1e9:.2f}GB ops={len(st.ops)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Serving launcher: batched prefill + decode with the sharded KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \\
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.config import reduced_for_smoke
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_for_smoke(cfg)
+    cfg = cfg.with_(compute_dtype="float32")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    B, S = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    enc = (
+        jax.random.normal(key, (B, S, cfg.d_model)) * 0.1
+        if cfg.family == "encdec" else None
+    )
+
+    from repro.serve.engine import Engine
+
+    eng = Engine(cfg, params, max_len=S + args.gen,
+                 temperature=args.temperature, seed=args.seed)
+    res = eng.generate(prompts, args.gen, enc_embeds=enc)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
+    print(f"[serve] prefill: {res.prefill_s*1e3:.1f}ms "
+          f"({B*S/res.prefill_s:,.0f} tok/s); decode: "
+          f"{res.decode_s*1e3/max(args.gen-1,1):.1f}ms/step "
+          f"({res.decode_tok_s:,.0f} tok/s)")
+    print(f"[serve] sample tokens[0,:16]: {res.tokens[0,:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Abstract input construction for every (arch x shape x mesh) cell.
+
+Everything here is ShapeDtypeStruct-based: the dry-run lowers and compiles
+WITHOUT allocating a single model byte (314B-parameter configs compile on a
+laptop-sized host).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.train import steps as train_steps
+
+
+# Per-arch training memory knobs (microbatching + remat), chosen so every
+# train cell's per-device peak fits v5e HBM (16 GB); values recorded in
+# EXPERIMENTS.md SDry-run.
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "grok-1-314b": dict(accum_steps=32, remat="nothing", moments="bfloat16",
+                        accum_dtype="bfloat16"),
+    "qwen2-vl-72b": dict(accum_steps=16, remat="nothing", moments="bfloat16",
+                         accum_dtype="bfloat16"),
+    "command-r-35b": dict(accum_steps=8, remat="nothing", moments="bfloat16"),
+    "granite-3-8b": dict(accum_steps=4, remat="nothing", moments="bfloat16"),
+    "qwen2-moe-a2.7b": dict(accum_steps=4, remat="nothing"),
+    "llama3.2-3b": dict(accum_steps=2, remat="nothing"),
+    "llama3.2-1b": dict(accum_steps=2, remat="nothing"),
+    "zamba2-2.7b": dict(accum_steps=4, remat="nothing"),
+    "rwkv6-1.6b": dict(accum_steps=2, remat="nothing"),
+    "seamless-m4t-medium": dict(accum_steps=8, remat="nothing"),
+}
+
+# long_500k runs with a bounded attention window on the hybrid arch.
+LONG_CTX_WINDOW = 4096
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _vocab_divisible(cfg: ModelConfig, mesh) -> bool:
+    tp = mesh.devices.shape[-1]
+    return cfg.padded_vocab % tp == 0
+
+
+def make_policy_for(cfg: ModelConfig, mesh,
+                    variant: str = "default") -> rules.ShardingPolicy:
+    fold = variant == "dp256"
+    return rules.ShardingPolicy(
+        shard_vocab=_vocab_divisible(cfg, mesh) and not fold,
+        fold_model=fold,
+    )
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    tree = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    if dtype is not None:
+        tree = jax.tree.map(lambda s: sds(s.shape, dtype), tree)
+    return tree
+
+
+def effective_cfg(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        return cfg.with_(sliding_window=LONG_CTX_WINDOW)
+    return cfg
+
+
+@dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) combination."""
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+def _batch_sds(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.int32) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        # frontend stub: patch/token embeddings + M-RoPE grids
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = sds((3, B, S), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _pod_axes(mesh) -> str | None:
+    return "pod" if "pod" in mesh.axis_names else None
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
+               pod_sync="flat", accum=None, remat=None,
+               policy="default") -> Cell:
+    cfg = effective_cfg(cfg, shape)
+    pol = make_policy_for(cfg, mesh, variant=policy)
+    pod_axis = _pod_axes(mesh)
+    if pod_mode is None:
+        pod_mode = "manual" if pod_axis else "none"
+    over = TRAIN_OVERRIDES.get(cfg.name, {})
+    tcfg = train_steps.TrainConfig(
+        accum_steps=accum if accum is not None else over.get("accum_steps", 1),
+        remat=remat if remat is not None else over.get("remat", "nothing"),
+        pod_mode=pod_mode,
+        pod_sync=pod_sync,
+        use_kernel=False,          # CPU dry-run lowers the jnp paths
+        accum_dtype=over.get("accum_dtype", "float32"),
+        model_in_batch=pol.fold_model,
+    )
+    ocfg = adamw.AdamWConfig(moment_dtype=over.get("moments", "float32"))
+    step, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
+
+    params = abstract_params(cfg)
+    pspecs = rules.param_specs(cfg, params, pol)
+    opt = jax.eval_shape(
+        functools.partial(adamw.init_state, moment_dtype=ocfg.moment_dtype),
+        params,
+    )
+    ospecs = adamw.AdamWState(step=P(), m=pspecs, v=pspecs)
+    batch = _batch_sds(cfg, shape)
+
+    n = lambda s: jax.tree.map(lambda sp: NamedSharding(mesh, sp), s,
+                               is_leaf=lambda x: isinstance(x, P))
+    in_sh = (n(pspecs), n(ospecs), n(bspecs))
+    meta = dict(kind="train", accum=tcfg.accum_steps, remat=tcfg.remat,
+                pod_mode=pod_mode, pod_sync=pod_sync, policy=policy)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=step,
+        args=(params, opt, batch),
+        in_shardings=in_sh,
+        out_shardings=(n(pspecs), n(ospecs), None),
+        meta=dict(meta, donate=(0, 1)),
+    )
+
+
+def _dp_entry(mesh, B: int):
+    """Batch-dim spec entry: joint (pod, data) when divisible, else data,
+    else unsharded (B=1 long-context)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in ("pod", "data") if a in sizes]
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    if B > 1 and B % total == 0:
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    if B > 1 and B % sizes.get("data", 1) == 0:
+        return "data"
+    return None
+
+
+def _cache_specs(cfg: ModelConfig, pol: rules.ShardingPolicy, mesh, batch: int):
+    """Decode-cache PartitionSpecs (see sharding.rules.cache_specs docs)."""
+    tp_size = mesh.devices.shape[-1]
+    dp = _dp_entry(mesh, batch)
+    tp = pol.model_axis
+
+    def kv(n_kv: int):
+        if n_kv % tp_size == 0:
+            return P(None, dp, None, tp, None)     # heads sharded
+        return P(None, dp, tp, None, None)         # sequence sharded
+
+    specs = {"pos": P()}
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        specs["k"] = kv(cfg.n_kv_heads)
+        specs["v"] = kv(cfg.n_kv_heads)
+        if cfg.family == "encdec":
+            specs["xk"] = kv(cfg.n_kv_heads)
+            specs["xv"] = kv(cfg.n_kv_heads)
+    elif cfg.family == "hybrid":
+        specs["k"] = kv(cfg.n_kv_heads)
+        specs["v"] = kv(cfg.n_kv_heads)
+        specs["conv"] = P(None, dp, None, tp)
+        specs["ssm"] = P(None, dp, tp, None, None)
+    elif cfg.family == "ssm":
+        specs["tm_shift"] = P(None, dp, tp)
+        specs["tm_state"] = P(None, dp, tp, None, None)
+        specs["cm_shift"] = P(None, dp, tp)
+    return specs
+
+
+def _dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1)
+
+
+def _decode_policy(cfg: ModelConfig, mesh) -> rules.ShardingPolicy:
+    """Weights-stationary serving: at one token per step, FSDP weight
+    gathers dominate the collective term (they re-gather the whole model
+    every step), so decode replicates params over 'data' (model-axis TP
+    only) whenever bf16 params / 16 fit alongside the KV cache; only
+    grok-1 (39 GB/chip at TP-16) keeps FSDP sharding."""
+    tp = mesh.devices.shape[-1]
+    bf16_per_chip = cfg.param_count() * 2 / tp
+    fsdp = bf16_per_chip > 8e9
+    return rules.ShardingPolicy(
+        shard_vocab=_vocab_divisible(cfg, mesh), fsdp=fsdp
+    )
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                weights_stationary: bool = True) -> Cell:
+    cfg = effective_cfg(cfg, shape)
+    pol = (_decode_policy(cfg, mesh) if weights_stationary
+           else make_policy_for(cfg, mesh))
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_params(cfg, dtype=jnp.bfloat16)   # serving weights bf16
+    pspecs = rules.param_specs(cfg, params, pol)
+    cache = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, B, S, enc_len=min(S, 4096))
+    )
+    cspecs = _cache_specs(cfg, pol, mesh, B)
+    # match spec tree to cache tree
+    cspecs = {k: cspecs[k] for k in cache}
+    dp = _dp_entry(mesh, B)
+    tokens = sds((B,), jnp.int32)
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, tokens, cache, batch_axes=dp)
+
+    n = lambda s: jax.tree.map(lambda sp: NamedSharding(mesh, sp), s,
+                               is_leaf=lambda x: isinstance(x, P))
+    in_sh = (n(pspecs), n(cspecs), NamedSharding(mesh, P(dp)))
+    out_sh = (NamedSharding(mesh, P(dp, None)), n(cspecs))
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=serve_step,
+        args=(params, cache, tokens),
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        meta=dict(kind="decode", window=cfg.sliding_window, donate=(1,),
+                  weights_stationary=pol.fsdp is False or not pol.fsdp),
+    )
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Cell:
+    cfg = effective_cfg(cfg, shape)
+    pol = make_policy_for(cfg, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_params(cfg, dtype=jnp.bfloat16)
+    pspecs = rules.param_specs(cfg, params, pol)
+    cache = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, B, S, enc_len=S)
+    )
+    cspecs = _cache_specs(cfg, pol, mesh, B)
+    cspecs = {k: cspecs[k] for k in cache}
+    dp = _dp_entry(mesh, B)
+    tokens = sds((B, S), jnp.int32)
+    enc = sds((B, S, cfg.d_model), jnp.bfloat16) if cfg.family == "encdec" else None
+
+    def prefill_step(params, cache, tokens, enc_embeds=None):
+        return lm.prefill(
+            params, cfg, tokens, cache, enc_embeds=enc_embeds,
+            use_kernel=False, batch_axes=dp,
+        )
+
+    n = lambda s: jax.tree.map(lambda sp: NamedSharding(mesh, sp), s,
+                               is_leaf=lambda x: isinstance(x, P))
+    args = (params, cache, tokens) + ((enc,) if enc is not None else ())
+    in_sh = (n(pspecs), n(cspecs), NamedSharding(mesh, P(dp, None))) + (
+        (NamedSharding(mesh, P(dp, None, None)),) if enc is not None else ()
+    )
+    out_sh = (NamedSharding(mesh, P(dp, None)), n(cspecs))
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=prefill_step,
+        args=args,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        meta=dict(kind="prefill", donate=(1,)),
+    )
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, **kw) -> Cell:
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "decode":
+        return decode_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh)
+    raise ValueError(shape.kind)

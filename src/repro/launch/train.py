@@ -1,0 +1,99 @@
+"""Training launcher.
+
+Production invocation targets the pod meshes (same code path the dry-run
+proves out); on this CPU box it runs reduced configs end-to-end:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \\
+      --steps 200 --global-batch 8 --seq 256 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import reduced_for_smoke
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.train import loop as train_loop
+from repro.train import steps as train_steps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--pod-sync", default="flat", choices=["flat", "q8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 pod mesh (requires 256 devices)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M-param runs)")
+    ap.add_argument("--layers", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_for_smoke(cfg)
+    if args.d_model:
+        cfg = cfg.with_(d_model=args.d_model, head_dim=args.d_model // cfg.n_heads)
+    if args.layers:
+        cfg = cfg.with_(n_layers=args.layers)
+    cfg = cfg.with_(compute_dtype="float32")  # CPU numerics
+
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n, 1), ("data", "model"))
+
+    pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % mesh.devices.shape[-1] == 0)
+    tcfg = train_steps.TrainConfig(
+        accum_steps=args.accum, remat=args.remat, pod_sync=args.pod_sync,
+        use_kernel=False,
+    )
+    ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+    step_fn, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
+
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.global_batch}x{args.seq} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    opt_state = adamw.init_state(params)
+
+    data = make_pipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.global_batch, seed=args.seed,
+    ))
+
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    lcfg = train_loop.LoopConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, log_every=10,
+    )
+    t0 = time.time()
+    state = train_loop.run(jitted, params, opt_state, data, lcfg)
+    dt = time.time() - t0
+    tok_s = args.steps * args.global_batch * args.seq / dt
+    print(f"[train] done: {args.steps} steps in {dt:.1f}s "
+          f"({tok_s:,.0f} tok/s); loss {state.losses[0]:.3f} -> {state.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

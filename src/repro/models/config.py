@@ -1,0 +1,169 @@
+"""Unified architecture configuration for all assigned model families."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+
+    # MoE
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    moe_d_ff: int = 0           # per-expert hidden width
+    n_shared_experts: int = 0   # qwen2-moe style always-on experts
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / rwkv6)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+
+    # hybrid (zamba2): one shared attention+MLP block applied every k layers
+    attn_every: int = 0
+
+    # encoder-decoder (seamless-m4t)
+    n_enc_layers: int = 0
+
+    # vlm (qwen2-vl)
+    mrope: bool = False
+    mrope_sections: tuple = (16, 24, 24)
+
+    # attention behaviour
+    rope_theta: float = 500000.0
+    sliding_window: int = 0     # >0: attention limited to a local window
+    attn_logit_softcap: float = 0.0  # grok-style tanh soft-capping
+
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    vocab_pad_to: int = 256      # embedding rows padded so vocab shards 16x16
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context without full attention?"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOPs accounting)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        H, Hkv, Dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = D * H * Dh + 2 * D * Hkv * Dh + H * Dh * D
+        mlp = 3 * D * F
+        norms = 2 * D
+        n = 0
+        if self.family == "ssm":  # rwkv6: D->D projections, lora decay
+            tmix = 5 * D * D + 2 * 64 * D + 7 * D  # r,k,v,g,o + lora + mu/u/base
+            cmix = 2 * D * F + D * D + 2 * D       # ck, cv, cr, c_mu
+            n = L * (tmix + cmix + norms)
+        elif self.family == "hybrid":
+            di = self.d_inner
+            dssm = (
+                D * (2 * di + 2 * self.ssm_state * 0 + 0)
+                + di * D
+                + 2 * di * self.ssm_state
+                + self.n_ssm_heads * 2
+            )
+            n = L * (dssm + norms) + (attn + mlp + norms)  # one shared block
+        else:
+            per_layer = attn + norms
+            if self.n_experts:
+                Fe = self.moe_d_ff
+                per_layer += D * self.n_experts  # router
+                per_layer += self.n_experts * 3 * D * Fe
+                if self.n_shared_experts:
+                    per_layer += 3 * D * self.shared_d_ff
+            else:
+                per_layer += mlp
+            n = L * per_layer
+            if self.family == "encdec":
+                # encoder layers + decoder cross-attention
+                n += self.n_enc_layers * (attn + mlp + norms)
+                n += L * (attn + D)
+        n += V * D  # embeddings
+        if not self.tie_embeddings:
+            n += V * D
+        n += D  # final norm
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed-active experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        Fe, D, L = self.moe_d_ff, self.d_model, self.n_layers
+        inactive = (self.n_experts - self.n_experts_per_tok) * 3 * D * Fe * L
+        return int(self.param_count() - inactive)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+def reduced_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=max(2, min(4, cfg.n_layers)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(4, max(1, cfg.n_kv_heads * 4 // max(cfg.n_heads, 1))),
+        d_ff=128,
+        vocab_size=256,
+        head_dim=16,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=4, n_experts_per_tok=2, moe_d_ff=64)
+        if cfg.n_shared_experts:
+            kw.update(n_shared_experts=2, shared_d_ff=96)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16)
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    if cfg.n_enc_layers:
+        kw.update(n_enc_layers=2)
+    if cfg.sliding_window:
+        kw.update(sliding_window=64)
+    if cfg.mrope:
+        half = kw["head_dim"] // 2
+        t = max(1, half // 4)
+        rest = half - t
+        kw.update(mrope_sections=(t, rest // 2, rest - rest // 2))
+    return cfg.with_(**kw)

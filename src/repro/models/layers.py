@@ -1,0 +1,282 @@
+"""Core transformer layers, pure-functional JAX.
+
+Parameters are plain nested dicts of arrays; each ``init_*`` has a matching
+``apply`` function.  Layer stacks are stored stacked on a leading ``L`` dim
+and consumed by ``lax.scan`` so the compiled HLO stays one-layer-sized.
+
+Attention uses the flash kernel from ``repro.kernels`` when profitable and
+the pure-jnp reference otherwise (decode, tiny shapes, cross-attention).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.rmsnorm import ops as rmsnorm_ops
+
+Params = dict[str, Any]
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return rmsnorm_ops.rmsnorm(x, p["w"].astype(x.dtype), eps=eps)
+
+
+# ----------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)             # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: tuple
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: [3, B, S] (t, h, w grids);
+    frequency slots are split between the three position streams by
+    ``sections`` (summing to Dh/2)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)             # [Dh/2]
+    ang_thw = positions[..., None].astype(jnp.float32) * freqs  # [3, B, S, Dh/2]
+    idx = []
+    for i, sec in enumerate(sections):
+        idx += [i] * sec
+    sel = jnp.asarray(idx)                              # [Dh/2] in {0,1,2}
+    ang = jnp.take_along_axis(
+        ang_thw, sel[None, None, None, :].repeat(ang_thw.shape[1], 1).repeat(
+            ang_thw.shape[2], 2
+        ), axis=0
+    )[0]                                                # [B, S, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+# ----------------------------------------------------------------------
+# GQA attention
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg) -> Params:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (D, H * Dh)),
+        "wk": _init(ks[1], (D, Hkv * Dh)),
+        "wv": _init(ks[2], (D, Hkv * Dh)),
+        "wo": _init(ks[3], (H * Dh, D), scale=1.0 / math.sqrt(H * Dh)),
+    }
+
+
+def _qkv(p: Params, x: jax.Array, cfg):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, Hkv, Dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, Hkv, Dh)
+    return q, k, v
+
+
+def _rotate(q, k, positions, cfg):
+    if cfg.mrope and positions.ndim == 3:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    causal: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Self-attention over full sequences (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _rotate(q, k, positions, cfg)
+    o = flash_ops.mha(
+        q,
+        k,
+        v,
+        causal=causal,
+        logit_softcap=cfg.attn_logit_softcap,
+        sliding_window=cfg.sliding_window,
+        use_kernel=use_kernel,
+    )
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(
+    p: Params, x: jax.Array, kv_src: jax.Array, cfg
+) -> jax.Array:
+    """Encoder-decoder cross attention (no RoPE on the cross path)."""
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (kv_src @ p["wk"].astype(x.dtype)).reshape(B, kv_src.shape[1], Hkv, Dh)
+    v = (kv_src @ p["wv"].astype(x.dtype)).reshape(B, kv_src.shape[1], Hkv, Dh)
+    o = flash_ops.mha(q, k, v, causal=False, use_kernel=False)
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(
+    p: Params,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    position: jax.Array,
+    cfg,
+):
+    """One-token decode against a KV cache (ring buffer when the cache is
+    shorter than the context, i.e. sliding-window attention).
+
+    x: [B, 1, D]; cache_k/v: [B, S_cache, Hkv, Dh]; position: [] scalar int.
+    Returns (out [B, 1, D], new_cache_k, new_cache_v).
+
+    Ring semantics: the K/V for absolute position t live in slot t % S_cache.
+    Keys are stored post-RoPE, so scores only need slot-validity masking:
+    slot j is valid iff j <= position (before wrap) or always (after wrap) --
+    uniformly ``arange(S_cache) <= position``.  The window constraint is
+    implied: a ring of size W holds exactly the last W tokens.
+    """
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.full((B, 1), position, jnp.int32)
+    q, k = _rotate(q, k, pos if not cfg.mrope else _mrope_pos(pos), cfg)
+    S = cache_k.shape[1]
+    slot = position % S
+    cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    g = H // Hkv
+    qh = q.reshape(B, 1, Hkv, g, Dh)
+    logits = jnp.einsum(
+        "bthgd,bshd->bhgts",
+        qh,
+        cache_k.astype(qh.dtype),
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(Dh)
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
+    span = jnp.arange(S)
+    mask = span <= position
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bhgts,bshd->bthgd", w, cache_v)
+    o = o.reshape(B, 1, H * Dh).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def _mrope_pos(pos: jax.Array) -> jax.Array:
+    """Text-only decode: all three M-RoPE streams share the position."""
+    return jnp.broadcast_to(pos[None], (3, *pos.shape))
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(ks[0], (d_model, d_ff)),
+        "w_up": _init(ks[1], (d_model, d_ff)),
+        "w_down": _init(ks[2], (d_ff, d_model)),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, tie: bool,
+               padded_vocab: int | None = None) -> Params:
+    """Embedding table padded to ``padded_vocab`` rows so the vocab dim
+    shards over the 16-wide tensor-parallel axis for every arch (Megatron-
+    style); the pad columns are masked to -inf at the logits."""
+    Vp = padded_vocab or vocab
+    ks = jax.random.split(key, 2)
+    p = {"tok": _init(ks[0], (Vp, d_model), scale=1.0)}
+    if not tie:
+        p["unembed"] = _init(ks[1], (d_model, Vp))
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, dtype,
+          table_axis: str | None = "data") -> jax.Array:
+    """Token embedding lookup.
+
+    The table is resharded to (vocab-replicated, d_model over ``table_axis``)
+    before the gather: a gather whose dim-0 operand is vocab-sharded forces
+    the partitioner into mask+psum or full-rematerialization reshards (the
+    latter crosses the pod seam on multi-pod meshes).  With the operand
+    sharded only on the pass-through D dim and indices batch-sharded, the
+    gather is fully local; the small reshard stays on the intra-pod ICI
+    tier.  table_axis=None replicates the table (dp256 policy: the batch
+    owns both mesh axes; only used for small-vocab-footprint archs).
+    """
+    tok = p["tok"]
+    try:
+        from jax.sharding import PartitionSpec as _P
+
+        tok = jax.lax.with_sharding_constraint(tok, _P(None, table_axis))
+    except (ValueError, RuntimeError, TypeError):
+        pass
+    return tok.astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array, vocab_size: int | None = None) -> jax.Array:
+    if "unembed" in p:
+        logits = x @ p["unembed"].astype(x.dtype)
+    else:
+        logits = x @ p["tok"].T.astype(x.dtype)
+    Vp = logits.shape[-1]
+    if vocab_size is not None and Vp != vocab_size:
+        # mask pad columns; keeps the padded (sharded) width end to end
+        mask = jnp.arange(Vp) < vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

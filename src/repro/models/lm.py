@@ -1,0 +1,614 @@
+"""Unified language model over all assigned families.
+
+One parameter tree + three entry points per family:
+
+  * ``forward``      -- full-sequence logits (training / prefill math)
+  * ``prefill``      -- forward + populated decode cache
+  * ``decode_step``  -- one token against the cache
+
+Layer stacks are stored stacked on a leading L dim and consumed by
+``lax.scan`` (compact HLO: the 512-device dry-run lowers one layer body,
+not n_layers copies).  Gradient checkpointing wraps the scan body with a
+configurable policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from jax.sharding import PartitionSpec as P
+
+from . import layers, moe as moe_mod, ssm
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _cast_big_params(params: Params, dt) -> Params:
+    """Cast large f32 parameter matrices to the compute dtype ONCE, before
+    the layer scan.  Downstream effects on the compiled collectives:
+
+      * FSDP all-gathers move bf16 shards (2x fewer bytes than gathering
+        f32 then casting inside the layer, which is what per-layer
+        ``w.astype(x.dtype)`` lowers to);
+      * the per-microbatch gradient reduce-scatters run on bf16 cotangents
+        (the transpose of the cast converts to f32 only at the local
+        accumulator).
+
+    Small leaves (norm scales, A_log, dt_bias, mu vectors) stay f32: their
+    bytes are irrelevant and their math wants full precision."""
+    if dt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda a: a.astype(dt)
+        if (hasattr(a, "dtype") and a.dtype == jnp.float32 and a.size > 1_000_000)
+        else a,
+        params,
+    )
+
+
+def _table_axis(batch_axes):
+    """Embedding-table D-dim home for the lookup reshard."""
+    if batch_axes and "model" in batch_axes:
+        return None          # dp256: batch owns both axes; replicate table
+    return "data"
+
+
+def _constrain(x: jax.Array, batch_axes) -> jax.Array:
+    """Pin activation sharding: batch dim over ``batch_axes``, rest
+    propagated.  Without this, parameter shardings (e.g. the embedding
+    table's fsdp dim) leak into activations and batch parallelism is lost.
+    No-op when no mesh context is active (single-device tests)."""
+    if batch_axes is None:
+        return x
+    try:
+        spec = P(batch_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+REMAT_POLICIES = {
+    "none": None,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ======================================================================
+# Init
+# ======================================================================
+
+def _init_dense_block(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": layers.init_rmsnorm(cfg.d_model),
+        "attn": layers.init_attention(ks[0], cfg),
+        "norm2": layers.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_encdec_dec_block(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    p = _init_dense_block(ks[0], cfg)
+    p["norm_x"] = layers.init_rmsnorm(cfg.d_model)
+    p["xattn"] = layers.init_attention(ks[1], cfg)
+    return p
+
+
+def _init_mamba_block(key, cfg) -> Params:
+    return {
+        "norm": layers.init_rmsnorm(cfg.d_model),
+        "mamba": ssm.init_mamba2(key, cfg),
+    }
+
+
+def _init_rwkv_block(key, cfg) -> Params:
+    return {
+        "norm1": layers.init_rmsnorm(cfg.d_model),
+        "norm2": layers.init_rmsnorm(cfg.d_model),
+        "rwkv": ssm.init_rwkv6(key, cfg),
+    }
+
+
+def _stack(blocks: list[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 8)
+    p: Params = {
+        "embed": layers.init_embed(ks[-1], cfg.vocab_size, cfg.d_model,
+                                   cfg.tie_embeddings,
+                                   padded_vocab=cfg.padded_vocab),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["blocks"] = _stack([_init_dense_block(ks[i], cfg) for i in range(cfg.n_layers)])
+    elif cfg.family == "ssm":
+        p["blocks"] = _stack([_init_rwkv_block(ks[i], cfg) for i in range(cfg.n_layers)])
+    elif cfg.family == "hybrid":
+        p["blocks"] = _stack([_init_mamba_block(ks[i], cfg) for i in range(cfg.n_layers)])
+        p["shared_attn"] = _init_dense_block(ks[-2], cfg)
+    elif cfg.family == "encdec":
+        p["enc_blocks"] = _stack(
+            [_init_dense_block(ks[cfg.n_layers + i], cfg) for i in range(cfg.n_enc_layers)]
+        )
+        p["blocks"] = _stack(
+            [_init_encdec_dec_block(ks[i], cfg) for i in range(cfg.n_layers)]
+        )
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ======================================================================
+# Full-sequence forward
+# ======================================================================
+
+def _dense_block_fwd(p, x, positions, cfg, use_kernel=True):
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + layers.attention(p["attn"], h, positions, cfg, use_kernel=use_kernel)
+    h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_mod.moe(p["moe"], h, cfg)
+        return x + y, aux
+    return x + layers.mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _scan_blocks(body, x, blocks, cfg, remat: str):
+    policy = REMAT_POLICIES.get(remat, None)
+    if remat != "none":
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    return lax.scan(body, x, blocks)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,
+    embeds: jax.Array | None = None,
+    positions: jax.Array | None = None,
+    enc_embeds: jax.Array | None = None,
+    remat: str = "nothing",
+    use_kernel: bool = True,
+    batch_axes=None,
+):
+    """-> (logits f32 [B,S,V], aux_loss scalar)."""
+    dt = _cdtype(cfg)
+    params = _cast_big_params(params, dt)
+    x = (
+        layers.embed(params["embed"], tokens, dt, _table_axis(batch_axes))
+        if embeds is None
+        else embeds.astype(dt)
+    )
+    x = _constrain(x, batch_axes)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, pl_):
+            y, aux = _dense_block_fwd(pl_, _constrain(carry, batch_axes), positions, cfg, use_kernel)
+            return _constrain(y, batch_axes), aux
+        x, auxs = _scan_blocks(body, x, params["blocks"], cfg, remat)
+        aux = jnp.sum(auxs)
+
+    elif cfg.family == "ssm":
+        def body(carry, pl_):
+            carry = _constrain(carry, batch_axes)
+            h = layers.rmsnorm(pl_["norm1"], carry, cfg.norm_eps)
+            y, _ = ssm.rwkv6_time_mix(pl_["rwkv"], h, cfg)
+            carry = carry + y
+            h = layers.rmsnorm(pl_["norm2"], carry, cfg.norm_eps)
+            y, _ = ssm.rwkv6_channel_mix(pl_["rwkv"], h)
+            return carry + y, jnp.zeros((), jnp.float32)
+        x, auxs = _scan_blocks(body, x, params["blocks"], cfg, remat)
+        aux = jnp.sum(auxs)
+
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(G, cfg.attn_every, *a.shape[1:]), params["blocks"]
+        )
+        shared = params["shared_attn"]
+
+        def group_body(carry, pg):
+            def inner(c, pl_):
+                c = _constrain(c, batch_axes)
+                h = layers.rmsnorm(pl_["norm"], c, cfg.norm_eps)
+                return c + ssm.mamba2(pl_["mamba"], h, cfg), None
+            x_, _ = lax.scan(inner, _constrain(carry, batch_axes), pg)
+            y_, _ = _dense_block_fwd(shared, x_, positions, cfg, use_kernel)
+            return y_, jnp.zeros((), jnp.float32)
+
+        x, auxs = _scan_blocks(group_body, x, grouped, cfg, remat)
+        aux = jnp.sum(auxs)
+
+    elif cfg.family == "encdec":
+        assert enc_embeds is not None, "encdec needs encoder frame embeddings"
+        e = _constrain(enc_embeds.astype(dt), batch_axes)
+        epos = jnp.broadcast_to(jnp.arange(e.shape[1])[None], e.shape[:2])
+
+        def enc_body(carry, pl_):
+            carry = _constrain(carry, batch_axes)
+            h = layers.rmsnorm(pl_["norm1"], carry, cfg.norm_eps)
+            carry = carry + layers.attention(
+                pl_["attn"], h, epos, cfg, causal=False, use_kernel=use_kernel
+            )
+            h = layers.rmsnorm(pl_["norm2"], carry, cfg.norm_eps)
+            return carry + layers.mlp(pl_["mlp"], h), None
+
+        e, _ = _scan_blocks(
+            lambda c, p_: enc_body(c, p_), e, params["enc_blocks"], cfg, remat
+        )
+
+        def dec_body(carry, pl_):
+            carry = _constrain(carry, batch_axes)
+            h = layers.rmsnorm(pl_["norm1"], carry, cfg.norm_eps)
+            carry = carry + layers.attention(
+                pl_["attn"], h, positions, cfg, use_kernel=use_kernel
+            )
+            h = layers.rmsnorm(pl_["norm_x"], carry, cfg.norm_eps)
+            carry = carry + layers.cross_attention(pl_["xattn"], h, e, cfg)
+            h = layers.rmsnorm(pl_["norm2"], carry, cfg.norm_eps)
+            return carry + layers.mlp(pl_["mlp"], h), None
+
+        x, _ = _scan_blocks(dec_body, x, params["blocks"], cfg, remat)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x, cfg.vocab_size).astype(jnp.float32)
+    return logits, aux
+
+
+# ======================================================================
+# Decode cache
+# ======================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0) -> Params:
+    """Decode state for every family.  Attention caches are bf16."""
+    dt = _cdtype(cfg)
+    Hkv, Dh, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cache["k"] = jnp.zeros((L, batch, kv_len, Hkv, Dh), dt)
+        cache["v"] = jnp.zeros((L, batch, kv_len, Hkv, Dh), dt)
+        if cfg.family == "encdec":
+            cache["xk"] = jnp.zeros((L, batch, enc_len, Hkv, Dh), dt)
+            cache["xv"] = jnp.zeros((L, batch, enc_len, Hkv, Dh), dt)
+    elif cfg.family == "hybrid":
+        # the shared attention block is applied once per layer-group; each
+        # application attends over its own depth's history => per-group caches
+        G = cfg.n_layers // cfg.attn_every
+        kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cache["k"] = jnp.zeros((G, batch, kv_len, Hkv, Dh), dt)
+        cache["v"] = jnp.zeros((G, batch, kv_len, Hkv, Dh), dt)
+        conv, st = ssm.mamba2_state_init(cfg, batch, dt)
+        cache["conv"] = jnp.broadcast_to(conv, (L, *conv.shape))
+        cache["ssm"] = jnp.broadcast_to(st, (L, *st.shape))
+    elif cfg.family == "ssm":
+        s = ssm.rwkv6_state_init(cfg, batch, dt)
+        cache = {"pos": cache["pos"]} | {
+            k: jnp.broadcast_to(v, (L, *v.shape)) for k, v in s.items()
+        }
+    return cache
+
+
+# ======================================================================
+# One-token decode
+# ======================================================================
+
+def decode_step(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
+    batch_axes=None,
+):
+    """tokens: [B] int32 -> (logits [B, V] f32, new cache)."""
+    dt = _cdtype(cfg)
+    x = layers.embed(params["embed"], tokens[:, None], dt,
+                     _table_axis(batch_axes))   # [B,1,D]
+    x = _constrain(x, batch_axes)
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            c = _constrain(carry, batch_axes)
+            pl_, ck, cv = xs
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            a, ck, cv = layers.attention_decode(pl_["attn"], h, ck, cv, pos, cfg)
+            c = c + a
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            if cfg.n_experts:
+                y, _ = moe_mod.moe(pl_["moe"], h, cfg)
+                c = c + y
+            else:
+                c = c + layers.mlp(pl_["mlp"], h)
+            return c, (ck, cv)
+
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            c = _constrain(carry, batch_axes)
+            pl_, tm_shift, tm_state, cm_shift = xs
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            y, (tm_shift, tm_state) = ssm.rwkv6_time_mix(
+                pl_["rwkv"], h, cfg, shift_prev=tm_shift, state=tm_state
+            )
+            c = c + y
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            y, cm_shift = ssm.rwkv6_channel_mix(pl_["rwkv"], h, shift_prev=cm_shift)
+            return c + y, (tm_shift, tm_state, cm_shift)
+
+        x, (tms, tmst, cms) = lax.scan(
+            body, x, (params["blocks"], cache["tm_shift"], cache["tm_state"], cache["cm_shift"])
+        )
+        cache = dict(cache, tm_shift=tms, tm_state=tmst, cm_shift=cms)
+
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        grouped_blocks, grouped_conv, grouped_ssm = jax.tree.map(
+            lambda a: a.reshape(G, cfg.attn_every, *a.shape[1:]),
+            (params["blocks"], cache["conv"], cache["ssm"]),
+        )
+        shared = params["shared_attn"]
+
+        def group_body(carry, xs):
+            c = _constrain(carry, batch_axes)
+            pg, convg, ssmg, ckg, cvg = xs
+
+            def inner(c_, xs_):
+                pl_, conv1, ssm1 = xs_
+                h = layers.rmsnorm(pl_["norm"], c_, cfg.norm_eps)
+                y, (conv1, ssm1) = ssm.mamba2_decode(pl_["mamba"], h, (conv1, ssm1), cfg)
+                return c_ + y, (conv1, ssm1)
+
+            c, (convg, ssmg) = lax.scan(inner, c, (pg, convg, ssmg))
+            # shared attention block (params shared, per-group KV cache)
+            h = layers.rmsnorm(shared["norm1"], c, cfg.norm_eps)
+            a, ckg, cvg = layers.attention_decode(shared["attn"], h, ckg, cvg, pos, cfg)
+            c = c + a
+            h = layers.rmsnorm(shared["norm2"], c, cfg.norm_eps)
+            c = c + layers.mlp(shared["mlp"], h)
+            return c, (convg, ssmg, ckg, cvg)
+
+        x, (convs, ssms, ks, vs) = lax.scan(
+            group_body, x, (grouped_blocks, grouped_conv, grouped_ssm, cache["k"], cache["v"])
+        )
+        cache = dict(
+            cache,
+            conv=convs.reshape(cfg.n_layers, *convs.shape[2:]),
+            ssm=ssms.reshape(cfg.n_layers, *ssms.shape[2:]),
+            k=ks,
+            v=vs,
+        )
+
+    elif cfg.family == "encdec":
+        def body(carry, xs):
+            c = _constrain(carry, batch_axes)
+            pl_, ck, cv, xk, xv = xs
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            a, ck, cv = layers.attention_decode(pl_["attn"], h, ck, cv, pos, cfg)
+            c = c + a
+            h = layers.rmsnorm(pl_["norm_x"], c, cfg.norm_eps)
+            c = c + _xattn_cached(pl_["xattn"], h, xk, xv, cfg)
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            return c + layers.mlp(pl_["mlp"], h), (ck, cv)
+
+        x, (ks, vs) = lax.scan(
+            body, x,
+            (params["blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        )
+        cache = dict(cache, k=ks, v=vs)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x, cfg.vocab_size).astype(jnp.float32)
+    cache["pos"] = pos + 1
+    return logits[:, 0], cache
+
+
+def _xattn_cached(p, x, xk, xv, cfg):
+    import math as _math
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = H // Hkv
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, Hkv, g, Dh)
+    logits = jnp.einsum(
+        "bthgd,bshd->bhgts", q, xk.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) / _math.sqrt(Dh)
+    w = jax.nn.softmax(logits, -1).astype(xv.dtype)
+    o = jnp.einsum("bhgts,bshd->bthgd", w, xv).reshape(B, S, H * Dh)
+    return o.astype(x.dtype) @ p["wo"].astype(x.dtype)
+
+
+# ======================================================================
+# Prefill (populate cache then decode)
+# ======================================================================
+
+def _fill_kv(ck: jax.Array, k: jax.Array) -> jax.Array:
+    """Write post-RoPE K (or V) [B,S,...] into a cache [B,kv_len,...].
+
+    When the cache is a ring (kv_len < S) keep the last kv_len entries at
+    their ring slots (absolute position t -> slot t % kv_len)."""
+    kv_len, S = ck.shape[1], k.shape[1]
+    if S >= kv_len:
+        last = k[:, S - kv_len:]
+        return jnp.roll(last, S % kv_len, axis=1).astype(ck.dtype)
+    return lax.dynamic_update_slice(
+        ck, k.astype(ck.dtype), (0,) * ck.ndim
+    )
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array | None,
+    cache: Params,
+    embeds: jax.Array | None = None,
+    enc_embeds: jax.Array | None = None,
+    use_kernel: bool = True,
+    batch_axes=None,
+):
+    """Full-sequence forward that also fills the decode cache.
+
+    The cache is populated inside the same layer scan as the forward pass
+    (no second pass); numerical hand-off to ``decode_step`` is verified in
+    tests for every family.
+    """
+    from repro.kernels.flash_attention import ops as fops
+
+    dt = _cdtype(cfg)
+    x = (
+        layers.embed(params["embed"], tokens, dt, _table_axis(batch_axes))
+        if embeds is None
+        else embeds.astype(dt)
+    )
+    x = _constrain(x, batch_axes)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    def _attn_fill(pl_attn, h, ck, cv, causal=True):
+        q, k, v = layers._qkv(pl_attn, h, cfg)
+        q, k = layers._rotate(q, k, positions, cfg)
+        a = fops.mha(
+            q, k, v, causal=causal, logit_softcap=cfg.attn_logit_softcap,
+            sliding_window=cfg.sliding_window, use_kernel=use_kernel,
+        ).reshape(B, S, -1) @ pl_attn["wo"].astype(h.dtype)
+        return a, _fill_kv(ck, k), _fill_kv(cv, v)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            c = _constrain(carry, batch_axes)
+            pl_, ck, cv = xs
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            a, ck, cv = _attn_fill(pl_["attn"], h, ck, cv)
+            c = c + a
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            if cfg.n_experts:
+                y, _ = moe_mod.moe(pl_["moe"], h, cfg)
+                c = c + y
+            else:
+                c = c + layers.mlp(pl_["mlp"], h)
+            return c, (ck, cv)
+
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "ssm":
+        def body(carry, pl_):
+            c = _constrain(carry, batch_axes)
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            y, (tm_shift, tm_state) = ssm.rwkv6_time_mix(pl_["rwkv"], h, cfg)
+            c = c + y
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            y, cm_shift = ssm.rwkv6_channel_mix(pl_["rwkv"], h)
+            return c + y, (tm_shift, tm_state, cm_shift)
+
+        x, (tms, tmst, cms) = lax.scan(body, x, params["blocks"])
+        cache = dict(cache, tm_shift=tms.astype(dt), tm_state=tmst, cm_shift=cms.astype(dt))
+
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(G, cfg.attn_every, *a.shape[1:]), params["blocks"]
+        )
+        shared = params["shared_attn"]
+
+        def group_body(carry, xs):
+            c = _constrain(carry, batch_axes)
+            pg, ckg, cvg = xs
+
+            def inner(c_, pl_):
+                c_ = _constrain(c_, batch_axes)
+                h = layers.rmsnorm(pl_["norm"], c_, cfg.norm_eps)
+                y, st = ssm.mamba2(pl_["mamba"], h, cfg, return_state=True)
+                return c_ + y, st
+
+            c, (convs, ssms) = lax.scan(inner, c, pg)
+            h = layers.rmsnorm(shared["norm1"], c, cfg.norm_eps)
+            a, ckg, cvg = _attn_fill(shared["attn"], h, ckg, cvg)
+            c = c + a
+            h = layers.rmsnorm(shared["norm2"], c, cfg.norm_eps)
+            c = c + layers.mlp(shared["mlp"], h)
+            return c, (convs, ssms, ckg, cvg)
+
+        x, (convs, ssms, ks, vs) = lax.scan(
+            group_body, x, (grouped, cache["k"], cache["v"])
+        )
+        cache = dict(
+            cache,
+            conv=convs.reshape(cfg.n_layers, *convs.shape[2:]).astype(dt),
+            ssm=ssms.reshape(cfg.n_layers, *ssms.shape[2:]),
+            k=ks,
+            v=vs,
+        )
+
+    elif cfg.family == "encdec":
+        assert enc_embeds is not None
+        e = enc_embeds.astype(dt)
+        epos = jnp.broadcast_to(jnp.arange(e.shape[1])[None], e.shape[:2])
+
+        def enc_body(carry, pl_):
+            c = carry
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            c = c + layers.attention(
+                pl_["attn"], h, epos, cfg, causal=False, use_kernel=use_kernel
+            )
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            return c + layers.mlp(pl_["mlp"], h), None
+
+        e, _ = lax.scan(enc_body, e, params["enc_blocks"])
+
+        def dec_body(carry, xs):
+            c = carry
+            pl_, ck, cv = xs
+            h = layers.rmsnorm(pl_["norm1"], c, cfg.norm_eps)
+            a, ck, cv = _attn_fill(pl_["attn"], h, ck, cv)
+            c = c + a
+            h = layers.rmsnorm(pl_["norm_x"], c, cfg.norm_eps)
+            c = c + layers.cross_attention(pl_["xattn"], h, e, cfg)
+            xk = (e @ pl_["xattn"]["wk"].astype(dt)).reshape(
+                B, e.shape[1], cfg.n_kv_heads, cfg.head_dim
+            )
+            xv = (e @ pl_["xattn"]["wv"].astype(dt)).reshape(
+                B, e.shape[1], cfg.n_kv_heads, cfg.head_dim
+            )
+            h = layers.rmsnorm(pl_["norm2"], c, cfg.norm_eps)
+            return c + layers.mlp(pl_["mlp"], h), (ck, cv, xk, xv)
+
+        x, (ks, vs, xks, xvs) = lax.scan(
+            dec_body, x, (params["blocks"], cache["k"], cache["v"])
+        )
+        cache = dict(cache, k=ks, v=vs, xk=xks.astype(dt), xv=xvs.astype(dt))
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x[:, -1:], cfg.vocab_size).astype(jnp.float32)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits[:, 0], cache

@@ -1,0 +1,240 @@
+"""State-space blocks: Mamba2 (for zamba2) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD scan from ``repro.kernels.ssm_scan``; RWKV6 is a
+chunk-free linear recurrence over [Dh, Dh] head states with data-dependent
+decay (its defining feature), implemented with lax.scan over time chunks.
+Both expose decode-step functions carrying O(1)-per-token state -- this is
+what makes the ``long_500k`` shape runnable for these families.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ssm_scan import ops as scan_ops
+
+from . import layers
+
+Params = dict[str, Any]
+
+
+# ======================================================================
+# Mamba2
+# ======================================================================
+
+def init_mamba2(key, cfg) -> Params:
+    """Per-stream input projections (instead of one packed in_proj) so the
+    d_inner dim shards cleanly over the tensor-parallel mesh axis."""
+    D, Di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": layers._init(ks[0], (D, Di)),
+        "wx": layers._init(ks[1], (D, Di)),
+        "wB": layers._init(ks[2], (D, N)),
+        "wC": layers._init(ks[3], (D, N)),
+        "wdt": layers._init(ks[4], (D, H)),
+        "w_out": layers._init(ks[5], (Di, D), scale=1.0 / math.sqrt(Di)),
+        "conv_w": layers._init(ks[6], (cfg.conv_width, Di), scale=0.5),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+    }
+
+
+def _split_mamba(p, u, cfg):
+    dt_ = u.dtype
+    z = u @ p["wz"].astype(dt_)
+    x = u @ p["wx"].astype(dt_)
+    Bv = u @ p["wB"].astype(dt_)
+    Cv = u @ p["wC"].astype(dt_)
+    dt = u @ p["wdt"].astype(dt_)
+    return z, x, Bv, Cv, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: [B,S,Di]; w: [W,Di]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def mamba2(p: Params, u: jax.Array, cfg, return_state: bool = False):
+    """u: [B, S, D] -> [B, S, D]  (optionally also the decode state)."""
+    B, S, D = u.shape
+    Di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, x, Bv, Cv, dt = _split_mamba(p, u, cfg)
+    x_raw = x
+    x = jax.nn.silu(_causal_conv(x, p["conv_w"].astype(x.dtype)))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                             # [H]
+    xh = x.reshape(B, S, H, P)
+    y = scan_ops.selective_scan(xh, dt, A, Bv, Cv, p["D"])               # [B,S,H,P]
+    out = (y.reshape(B, S, Di) * jax.nn.silu(z)) @ p["w_out"].astype(u.dtype)
+    if not return_state:
+        return out
+    ssm_state = scan_ops.final_state(xh, dt, A, Bv)
+    W = cfg.conv_width
+    if S >= W - 1:
+        conv_tail = x_raw[:, S - (W - 1):]
+    else:
+        conv_tail = jnp.pad(x_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    return out, (conv_tail, ssm_state)
+
+
+def mamba2_decode(p: Params, u: jax.Array, state, cfg):
+    """u: [B, 1, D]; state = (conv_buf [B,W-1,Di], ssm [B,H,N,P])."""
+    B = u.shape[0]
+    Di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_buf, ssm_state = state
+    z, x, Bv, Cv, dt = _split_mamba(p, u, cfg)
+    # causal conv over [conv_buf, x]
+    W = cfg.conv_width
+    xw = jnp.concatenate([conv_buf, x], axis=1)                          # [B,W,Di]
+    w = p["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bwd,wd->bd", xw, w)[:, None, :]
+    x = jax.nn.silu(xc)
+    conv_buf = xw[:, 1:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]    # [B,H]
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = scan_ops.decode_step(
+        x.reshape(B, H, P), dt, A, Bv[:, 0], Cv[:, 0], p["D"], ssm_state
+    )
+    y = y.reshape(B, 1, Di) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(u.dtype), (conv_buf, ssm_state)
+
+
+def mamba2_state_init(cfg, batch: int, dtype=jnp.float32):
+    return (
+        jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    )
+
+
+# ======================================================================
+# RWKV6 (Finch)
+# ======================================================================
+
+RWKV_LORA = 64
+
+
+def init_rwkv6(key, cfg) -> Params:
+    D = cfg.d_model
+    H = cfg.n_ssm_heads if cfg.ssm_head_dim else 32
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": layers._init(ks[0], (5, D), scale=0.1),     # token-shift mixes
+        "wr": layers._init(ks[1], (D, D)),
+        "wk": layers._init(ks[2], (D, D)),
+        "wv": layers._init(ks[3], (D, D)),
+        "wg": layers._init(ks[4], (D, D)),
+        "wo": layers._init(ks[5], (D, D)),
+        # data-dependent decay: w_t = exp(-exp(base + lora(x)))
+        "w_base": jnp.full((D,), -1.0, jnp.float32),
+        "w_lora_a": layers._init(ks[6], (D, RWKV_LORA)),
+        "w_lora_b": layers._init(ks[7], (RWKV_LORA, D), scale=0.01),
+        "u": layers._init(ks[8], (D,), scale=0.5),        # bonus
+        # channel-mix
+        "ck": layers._init(ks[9], (D, cfg.d_ff)),
+        "cv": layers._init(jax.random.fold_in(key, 11), (cfg.d_ff, D)),
+        "cr": layers._init(jax.random.fold_in(key, 12), (D, D)),
+        "c_mu": layers._init(jax.random.fold_in(key, 13), (2, D), scale=0.1),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} stream; prev is the carry token for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1) if x.shape[1] > 1 else prev[:, None]
+
+
+def _rwkv_wkv(r, k, v, w, u, head_dim: int, state=None, chunk: int = 64):
+    """RWKV6 linear recurrence.
+
+    r,k,v,w: [B,S,D] (w = per-step decay in (0,1)); u: [D] bonus.
+    state: [B,H,Dh,Dh] or None.  Returns (y [B,S,D], final_state).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    """
+    B, S, D = r.shape
+    Dh = head_dim
+    H = D // Dh
+    rh = r.reshape(B, S, H, Dh)
+    kh = k.reshape(B, S, H, Dh)
+    vh = v.reshape(B, S, H, Dh)
+    wh = w.reshape(B, S, H, Dh)
+    uh = u.reshape(H, Dh)
+    if state is None:
+        state = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                               # [B,H,Dh]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + uh[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, y
+
+    xs = (
+        jnp.moveaxis(rh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(kh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(vh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(wh.astype(jnp.float32), 1, 0),
+    )
+    state, ys = lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    return y.astype(r.dtype), state
+
+
+def rwkv6_time_mix(p: Params, x: jax.Array, cfg, shift_prev=None, state=None):
+    """Returns (y, (last_token, new_state))."""
+    xs = _token_shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xg = x + (xs - x) * mu[3]
+    xw = x + (xs - x) * mu[4]
+    r = xr @ p["wr"].astype(x.dtype)
+    k = xk @ p["wk"].astype(x.dtype)
+    v = xv @ p["wv"].astype(x.dtype)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution)
+    wlog = p["w_base"] + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    )
+    w = jnp.exp(-jnp.exp(wlog))                           # in (0,1)
+    y, state = _rwkv_wkv(
+        r, k, v, w.astype(x.dtype), p["u"], cfg.ssm_head_dim, state=state
+    )
+    y = y * g
+    return y @ p["wo"].astype(x.dtype), (x[:, -1], state)
+
+
+def rwkv6_channel_mix(p: Params, x: jax.Array, shift_prev=None):
+    xs = _token_shift(x, shift_prev)
+    mu = p["c_mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["cr"].astype(x.dtype))
+    return r * (k @ p["cv"].astype(x.dtype)), x[:, -1]
+
+
+def rwkv6_state_init(cfg, batch: int, dtype=jnp.float32):
+    D, Dh = cfg.d_model, cfg.ssm_head_dim
+    H = D // Dh
+    return {
+        "tm_shift": jnp.zeros((batch, D), dtype),
+        "tm_state": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "cm_shift": jnp.zeros((batch, D), dtype),
+    }

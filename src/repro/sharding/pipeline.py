@@ -1,0 +1,66 @@
+"""GPipe-style pipeline parallelism over a 'pipe' mesh axis.
+
+Each pipeline stage lives on one mesh slice; microbatches stream through
+with ``lax.ppermute`` moving activations stage-to-stage.  In the paper's
+model a stage hand-off is ONE point-to-point transfer per round -- the
+cheapest collective there is -- which is why PP is attractive across slow
+tiers; our planner's cost model (see DESIGN.md) still prefers
+hierarchical-DP over inter-pod PP for the assigned model sizes because the
+pipeline bubble at global-batch/256 microbatches dominates, but the
+machinery is here and tested.
+
+``pipeline_apply`` is deliberately minimal (inference/forward): it
+demonstrates and tests the communication pattern; a full PP trainer would
+wrap it with the usual 1F1B schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_weights, microbatches, mesh, n_stage: int):
+    """Run ``n_stage`` sequential stages over microbatches, pipelined.
+
+    stage_fn:        (w, x) -> y, same x/y shape.
+    stage_weights:   [n_stage, ...] stacked per-stage params.
+    microbatches:    [n_micro, ...] inputs.
+    mesh:            1-D mesh with axis 'pipe' of size n_stage.
+
+    Returns [n_micro, ...] outputs, equal to sequential application.
+    """
+    n_micro = microbatches.shape[0]
+    steps = n_micro + n_stage - 1
+
+    def body(w, xs):
+        w = w[0]                     # this stage's weights
+        idx = lax.axis_index("pipe")
+
+        def step(buf, t):
+            x0 = lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False
+            )
+            x_in = jnp.where(idx == 0, x0, buf)
+            y = stage_fn(w, x_in)
+            y_next = lax.ppermute(
+                y, "pipe", [(i, (i + 1) % n_stage) for i in range(n_stage)]
+            )
+            return y_next, y
+
+        _, ys = lax.scan(step, jnp.zeros_like(xs[0]), jnp.arange(steps))
+        # the final stage emits microbatch t-(n_stage-1) at time t
+        return ys[n_stage - 1:]
+
+    res = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P("pipe"), P()),
+        out_specs=P("pipe"),
+        check_vma=False,   # scan carry becomes device-varying via ppermute
+    )(stage_weights, microbatches)
+    # stacked [n_stage * n_micro, ...]; the last stage's block is the answer
+    res = res.reshape(n_stage, n_micro, *res.shape[1:])
+    return res[-1]

@@ -1,0 +1,103 @@
+"""Ring attention: sequence-parallel exact attention via ppermute.
+
+Context parallelism for long prefill: Q, K, V are sharded over the sequence
+dim across a mesh axis; K/V blocks rotate around the ring while each shard
+maintains flash-style online-softmax state.  After n_shards steps every
+query has attended to every key exactly once.
+
+In the paper's model a ring hand-off is ONE point-to-point transfer per
+round -- the cheapest collective there is -- and all links run concurrently
+(Rule 3), which is why sequence parallelism is the planner's preferred way
+to scale prefill beyond a pod: the per-step payload (2*S_local*Hkv*Dh) is
+independent of the number of shards.
+
+Forward-only (prefill); verified against full attention on 8 fake devices.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _block_update(q, k, v, m, l, acc, qpos, kpos, scale, causal):
+    """One online-softmax update of (m, l, acc) against a K/V block.
+
+    q: [B, Sq, Hkv, G, Dh]; k/v: [B, Sk, Hkv, Dh]; positions global."""
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m, m_cur)
+    p = jnp.exp(logits - m_new)
+    if causal:
+        p = jnp.where(mask[None, None, None], p, 0.0)
+    alpha = jnp.exp(m - m_new)
+    l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc * alpha[..., 0][..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return m_new, l_new, acc_new
+
+
+def _ring_body(q, k, v, axis_name: str, causal: bool):
+    """Per-shard body (runs inside shard_map; seq dim sharded over axis)."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    scale = 1.0 / math.sqrt(Dh)
+    qh = q.reshape(B, S, Hkv, G, Dh)
+    qpos = idx * S + jnp.arange(S)
+
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    def step(carry, i):
+        m, l, acc, k_cur, v_cur = carry
+        src = (idx - i) % n                      # whose K/V we hold now
+        kpos = src * S + jnp.arange(S)
+        m, l, acc = _block_update(
+            qh, k_cur.astype(qh.dtype), v_cur, m, l, acc, qpos, kpos,
+            scale, causal,
+        )
+        k_nxt = lax.ppermute(k_cur, axis_name, perm)
+        v_nxt = lax.ppermute(v_cur, axis_name, perm)
+        return (m, l, acc, k_nxt, v_nxt), None
+
+    m0 = jnp.full((B, Hkv, G, S, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, Dh), jnp.float32)
+    (m, l, acc, _, _), _ = lax.scan(step, (m0, l0, a0, k, v), jnp.arange(n))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)
+
+
+def ring_attention(q, k, v, mesh, axis_name: str = "data",
+                   causal: bool = True):
+    """q: [B, S, H, Dh]; k/v: [B, S, Hkv, Dh], S sharded over ``axis_name``.
+
+    Exact attention over the full (global) sequence; returns [B, S, H, Dh]
+    with the same sequence sharding.
+    """
+    spec = P(None, axis_name, None, None)
+    f = jax.shard_map(
+        functools.partial(_ring_body, axis_name=axis_name, causal=causal),
+        mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=spec,
+        check_vma=False,
+    )
+    return f(q, k, v)

@@ -1,0 +1,85 @@
+"""Fault-tolerant training driver.
+
+Wraps the jitted train step with the operational machinery a 1000-node job
+needs:
+
+  * checkpoint-restart: resume from the newest complete checkpoint
+    (``Checkpointer`` commits atomically, validates CRCs);
+  * periodic async snapshots (no step-time stall beyond device->host copy);
+  * straggler / hang mitigation: a per-step deadline; steps exceeding it are
+    logged and counted -- on real pods the runner would trigger the
+    re-mesh path (here: surfaced via metrics and exercised in tests with an
+    injected slow step);
+  * crash injection hooks for tests (``fail_at_step``).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    log_every: int = 10
+    step_deadline_s: float = 0.0      # 0 = disabled
+    fail_at_step: int = -1            # test hook: raise mid-run
+
+
+@dataclass
+class LoopState:
+    step: int = 0
+    losses: list = field(default_factory=list)
+    slow_steps: list = field(default_factory=list)
+
+
+def run(
+    train_step,
+    params,
+    opt_state,
+    pipeline,
+    lcfg: LoopConfig,
+    log=print,
+) -> LoopState:
+    """Run (or resume) training.  Returns the loop state."""
+    ckpt = Checkpointer(lcfg.ckpt_dir, keep=lcfg.keep)
+    state = LoopState()
+
+    latest = ckpt.latest_step()
+    if latest is not None:
+        (params, opt_state), step0 = ckpt.restore((params, opt_state))
+        state.step = step0
+        log(f"[loop] resumed from step {step0}")
+
+    while state.step < lcfg.total_steps:
+        batch = pipeline.batch(state.step)
+        t0 = time.time()
+        if state.step == lcfg.fail_at_step:
+            raise RuntimeError(f"injected failure at step {state.step}")
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if lcfg.step_deadline_s and dt > lcfg.step_deadline_s:
+            state.slow_steps.append((state.step, dt))
+            log(f"[loop] STRAGGLER step {state.step}: {dt:.2f}s "
+                f"(deadline {lcfg.step_deadline_s:.2f}s)")
+        state.step += 1
+        state.losses.append(loss)
+        if state.step % lcfg.log_every == 0:
+            log(f"[loop] step {state.step:5d} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} {dt*1000:.0f}ms")
+        if state.step % lcfg.ckpt_every == 0 or state.step == lcfg.total_steps:
+            ckpt.save(state.step, (params, opt_state))
+    ckpt.wait()
+    state.params = params          # type: ignore[attr-defined]
+    state.opt_state = opt_state    # type: ignore[attr-defined]
+    return state

@@ -1,0 +1,43 @@
+"""Model-driven sharding policy selection (sharding/autopolicy.py)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.sharding.autopolicy import choose_policy, estimate
+
+
+def test_small_models_fold_big_models_dont():
+    folds = {}
+    for arch in ["llama3_2_1b", "llama3_2_3b", "rwkv6_1_6b", "zamba2_2_7b",
+                 "grok_1_314b", "qwen2_vl_72b", "command_r_35b"]:
+        pol, _ = choose_policy(get_config(arch), 256, 4096, accum=2)
+        folds[arch] = pol.fold_model
+    assert folds["llama3_2_1b"] and folds["llama3_2_3b"]
+    assert folds["rwkv6_1_6b"] and folds["zamba2_2_7b"]
+    assert not folds["grok_1_314b"]
+    assert not folds["qwen2_vl_72b"]
+    assert not folds["command_r_35b"]  # borderline, memory guard keeps TP
+
+
+def test_estimates_rank_matches_measured():
+    """The model's tp16-vs-dp256 ordering matches the compiled-HLO wire
+    measurements recorded in EXPERIMENTS.md SPerf (llama-1b: 6.7x, rwkv6:
+    7.5x, llama-3b: 6.3x measured reductions)."""
+    for arch, measured_ratio in [("llama3_2_1b", 6.7), ("rwkv6_1_6b", 7.5),
+                                 ("llama3_2_3b", 6.3)]:
+        est = estimate(get_config(arch), 256, 4096, accum=2)
+        predicted_ratio = est["tp16"].total / est["dp256"].total
+        assert predicted_ratio > 1.5, (arch, predicted_ratio)
+        # direction must agree; magnitude within ~4x (napkin model)
+        assert predicted_ratio / measured_ratio < 4
+        assert measured_ratio / predicted_ratio < 4
+
+
+def test_activation_reduce_scaling():
+    """tp16 activation-reduce volume scales linearly with layers and seq."""
+    cfg = get_config("llama3_2_1b")
+    a = estimate(cfg, 256, 4096, 1)["tp16"].act_reduce_bytes
+    b = estimate(cfg.with_(n_layers=32), 256, 4096, 1)["tp16"].act_reduce_bytes
+    c = estimate(cfg, 256, 8192, 1)["tp16"].act_reduce_bytes
+    assert b == pytest.approx(2 * a)
+    assert c == pytest.approx(2 * a)

@@ -1,0 +1,225 @@
+"""Core communication model: schedules, simulator, planner, paper claims."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules as S
+from repro.core.planner import Q8_GLOBAL_FACTOR, best_plan, enumerate_plans
+from repro.core.simulator import (
+    ScheduleError,
+    check_semantics,
+    evaluate,
+    simulate_async,
+    simulate_rounds,
+    validate,
+)
+from repro.core.topology import ClusterTopology, LinkTier, paper_smp_cluster, tpu_v5e_cluster
+
+TOPOS = [
+    paper_smp_cluster(n_machines=4, cores=4, nics=2),
+    paper_smp_cluster(n_machines=8, cores=4, nics=1),
+    paper_smp_cluster(n_machines=2, cores=8, nics=4),
+    paper_smp_cluster(n_machines=1, cores=4, nics=1),
+]
+ALL_CELLS = [
+    (topo, coll, strat)
+    for topo in TOPOS
+    for coll, strats in S.GENERATORS.items()
+    for strat in strats
+]
+
+
+@pytest.mark.parametrize("topo,coll,strat", ALL_CELLS)
+def test_schedule_valid_and_complete(topo, coll, strat):
+    """Every generator produces a rule-respecting, semantically complete
+    schedule on every topology."""
+    sched = S.build(topo, coll, strat, 4096.0, payloads=True)
+    validate(sched)
+    check_semantics(sched)
+
+
+@pytest.mark.parametrize("topo,coll,strat", ALL_CELLS)
+def test_payload_free_mode_identical(topo, coll, strat):
+    """payloads=False (planner fast path) must have identical structure."""
+    a = S.build(topo, coll, strat, 4096.0, payloads=True)
+    b = S.build(topo, coll, strat, 4096.0, payloads=False)
+    assert a.n_rounds == b.n_rounds
+    assert a.total_global_bytes() == pytest.approx(b.total_global_bytes())
+    assert a.total_local_bytes() == pytest.approx(b.total_local_bytes())
+    assert simulate_rounds(a, check=False) == pytest.approx(
+        simulate_rounds(b, check=False)
+    )
+
+
+@pytest.mark.parametrize("strat", ["hier_seq", "hier_par"])
+def test_hier_schedules_respect_strict_egress(strat):
+    """Schedules *designed* for the model keep within machine degree."""
+    topo = paper_smp_cluster(n_machines=6, cores=4, nics=2)
+    sched = S.build(topo, "broadcast", strat, 1024.0)
+    validate(sched, strict_egress=True)
+
+
+# ----------------------------------------------------------------------
+# The paper's analytical claims
+# ----------------------------------------------------------------------
+
+def test_c1_intra_machine_broadcast_is_one_write():
+    """C1: broadcasting within a machine is O(1) (one shared-memory write),
+    not O(log n) messages."""
+    topo = paper_smp_cluster(n_machines=1, cores=16, nics=1)
+    sched = S.build(topo, "broadcast", "hier_par", 1024.0)
+    writes = [op for op in sched.all_ops() if isinstance(op, S.LocalWrite)]
+    sends = [op for op in sched.all_ops() if isinstance(op, S.Send)]
+    assert len(writes) == 1 and not sends
+    flat = S.build(topo, "broadcast", "flat", 1024.0)
+    assert flat.n_rounds == math.ceil(math.log2(16))  # what flat models pay
+
+
+def test_c2_gather_not_inverse_broadcast():
+    """C2: optimal gather trees are NOT inverse optimal broadcast trees.
+
+    A degree-n machine broadcasts to n neighbours in one global round after
+    one local write; gather needs strictly more rounds (reads cost)."""
+    topo = paper_smp_cluster(n_machines=5, cores=4, nics=4)
+    bc = S.build(topo, "broadcast", "hier_par", 1024.0)
+    ga = S.build(topo, "gather", "hier_par", 1024.0)
+    assert ga.n_rounds > bc.n_rounds
+    # and gather moves strictly more local (read) bytes than broadcast
+    assert ga.total_local_bytes() > bc.total_local_bytes()
+
+
+def test_c3_parallel_egress_beats_single_leader():
+    """Rule 3: degree-aware broadcast needs ceil(log_{d+1} M) global rounds
+    vs ceil(log_2 M) for the single-leader hierarchical scheme."""
+    topo = paper_smp_cluster(n_machines=27, cores=8, nics=8)
+    par = S.build(topo, "broadcast", "hier_par", 1024.0)
+    seq = S.build(topo, "broadcast", "hier_seq", 1024.0)
+    d = min(topo.degree, topo.procs_per_machine)
+    global_rounds_par = sum(
+        1 for r in par.rounds
+        if any(isinstance(o, S.Send) and not topo.co_located(o.src, o.dst)
+               for o in r.ops)
+    )
+    assert global_rounds_par == math.ceil(math.log(27, d + 1))
+    assert simulate_rounds(par) < simulate_rounds(seq)
+
+
+def test_c4_hier_alltoall_beats_flat():
+    """C4 (Kumar et al.): hierarchy-aware all-to-all wins; the gain is
+    >= 50% in the latency-dominated regime."""
+    topo = paper_smp_cluster(n_machines=8, cores=4, nics=2)
+    m = 512.0  # small messages: alpha-dominated, the regime of [3]
+    flat = simulate_rounds(S.build(topo, "all_to_all", "flat", m))
+    hier = simulate_rounds(S.build(topo, "all_to_all", "hier_par", m))
+    assert hier < flat
+    assert 1 - hier / flat >= 0.5
+
+
+def test_flat_alltoall_pays_nic_serialization():
+    """The shared-NIC rule: flat all-to-all on 4-core/1-NIC machines takes
+    ~4x the per-round time of the same schedule on 4-NIC machines."""
+    m = 4096.0
+    topo1 = paper_smp_cluster(n_machines=4, cores=4, nics=1)
+    topo4 = paper_smp_cluster(n_machines=4, cores=4, nics=4)
+    t1 = simulate_rounds(S.build(topo1, "all_to_all", "flat", m))
+    t4 = simulate_rounds(S.build(topo4, "all_to_all", "flat", m))
+    assert t1 > 2.5 * t4
+
+
+# ----------------------------------------------------------------------
+# Simulator properties
+# ----------------------------------------------------------------------
+
+@given(
+    m=st.floats(min_value=64, max_value=1e7),
+    machines=st.integers(2, 6),
+    cores=st.sampled_from([2, 4, 8]),
+    nics=st.integers(1, 4),
+)
+@settings(max_examples=25, deadline=None)
+def test_async_never_slower_than_rounds_for_hier(m, machines, cores, nics):
+    """Dependency-driven execution can only relax round barriers."""
+    topo = paper_smp_cluster(n_machines=machines, cores=cores, nics=nics)
+    sched = S.build(topo, "all_reduce", "hier_par", m)
+    # allow tiny numerical slack
+    assert simulate_async(sched) <= simulate_rounds(sched) * 1.001
+
+
+@given(
+    m=st.floats(min_value=64, max_value=1e6),
+    coll=st.sampled_from(list(S.GENERATORS)),
+)
+@settings(max_examples=30, deadline=None)
+def test_cost_monotone_in_message_size(m, coll):
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    for strat in S.GENERATORS[coll]:
+        t1 = simulate_rounds(S.build(topo, coll, strat, m, payloads=False), check=False)
+        t2 = simulate_rounds(S.build(topo, coll, strat, 2 * m, payloads=False), check=False)
+        assert t2 >= t1
+
+
+def test_global_bytes_lower_bound_allreduce():
+    """No all-reduce schedule beats the 2m(M-1)/M machine-boundary bound."""
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    m = 1e6
+    bound = topo.n_machines * 2 * m * (topo.n_machines - 1) / topo.n_machines
+    for strat in S.GENERATORS["all_reduce"]:
+        sched = S.build(topo, "all_reduce", strat, m, payloads=False)
+        assert sched.total_global_bytes() >= bound * 0.99, strat
+
+
+# ----------------------------------------------------------------------
+# Planner
+# ----------------------------------------------------------------------
+
+def test_planner_affine_cost_is_exact():
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    for coll in S.GENERATORS:
+        for m in [256.0, 77777.0, 3e6]:
+            plans = enumerate_plans(topo, coll, m)
+            for p in plans:
+                sched = S.build(topo, coll, p.strategy.replace("_q8", ""), m,
+                                payloads=False)
+                want = simulate_rounds(sched, check=False)
+                if not p.lossy:
+                    assert p.t_rounds == pytest.approx(want, rel=1e-9), (
+                        coll, p.strategy, m)
+
+
+def test_planner_picks_hier_for_alltoall_and_small_allreduce():
+    topo = tpu_v5e_cluster(n_pods=2)
+    assert best_plan(topo, "all_to_all", 1e6).strategy == "hier_par"
+    assert best_plan(topo, "all_reduce", 1e4).strategy.startswith("hier")
+    # large all-reduce: bandwidth-optimal variant wins
+    assert best_plan(topo, "all_reduce", 4e9).strategy == "hier_par_bw"
+
+
+def test_planner_q8_wins_when_allowed_at_scale():
+    topo = tpu_v5e_cluster(n_pods=8)
+    p = best_plan(topo, "all_reduce", 4e9, lossy_ok=True)
+    assert p.lossy and p.impl == "hier_bw_q8"
+    p2 = best_plan(topo, "all_reduce", 4e9, lossy_ok=False)
+    assert not p2.lossy
+    assert p.t_rounds <= p2.t_rounds
+
+
+def test_planner_crossover_message_size():
+    """The paper's model produces a latency/bandwidth crossover: the tree
+    variant wins small messages, the ring variant wins large ones."""
+    topo = tpu_v5e_cluster(n_pods=2)
+    small = best_plan(topo, "all_reduce", 1e3)
+    large = best_plan(topo, "all_reduce", 1e9)
+    assert small.strategy == "hier_par"
+    assert large.strategy == "hier_par_bw"
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        ClusterTopology(
+            n_machines=2, procs_per_machine=2, degree=1,
+            local=LinkTier("slow", 1e-3, 1e-6),
+            global_=LinkTier("fast", 1e-6, 1e-9),
+            write_cost=1e-6, assemble_cost=1e-6,
+        )

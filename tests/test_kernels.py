@@ -1,0 +1,184 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Shape/dtype sweeps per kernel, plus hypothesis property tests on the
+attention invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import kernel as fk, ops as fops, ref as fref
+from repro.kernels.rmsnorm import kernel as rk, ref as rref
+from repro.kernels.ssm_scan import kernel as sk, ops as sops, ref as sref
+
+RNG = np.random.RandomState(0)
+
+
+def _mk_qkv(B, S, H, Hkv, Dh, dtype):
+    q = jnp.asarray(RNG.randn(B, S, H, Dh), dtype)
+    k = jnp.asarray(RNG.randn(B, S, Hkv, Dh), dtype)
+    v = jnp.asarray(RNG.randn(B, S, Hkv, Dh), dtype)
+    return q, k, v
+
+
+ATTN_SWEEP = [
+    # B, S, H, Hkv, Dh, causal, softcap, window, dtype, tol
+    (2, 64, 4, 2, 16, True, 0.0, 0, jnp.float32, 2e-5),
+    (1, 128, 4, 4, 32, True, 30.0, 0, jnp.float32, 2e-5),
+    (2, 96, 8, 2, 16, True, 0.0, 32, jnp.float32, 2e-5),
+    (1, 64, 2, 1, 16, False, 0.0, 0, jnp.float32, 2e-5),
+    (1, 100, 4, 1, 24, True, 0.0, 0, jnp.float32, 2e-5),   # ragged S, Dh
+    (2, 64, 4, 2, 16, True, 0.0, 0, jnp.bfloat16, 3e-2),
+]
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,Dh,causal,cap,win,dtype,tol", ATTN_SWEEP)
+def test_flash_attention_matches_ref(B, S, H, Hkv, Dh, causal, cap, win, dtype, tol):
+    q, k, v = _mk_qkv(B, S, H, Hkv, Dh, dtype)
+    out = fk.flash_mha(q, k, v, causal=causal, logit_softcap=cap,
+                       sliding_window=win, block_q=32, block_k=32,
+                       interpret=True)
+    want = fref.mha_reference(q, k, v, causal=causal, logit_softcap=cap,
+                              sliding_window=win)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,Dh,causal,cap,win,dtype,tol", ATTN_SWEEP)
+def test_chunked_mha_matches_ref(B, S, H, Hkv, Dh, causal, cap, win, dtype, tol):
+    q, k, v = _mk_qkv(B, S, H, Hkv, Dh, dtype)
+    out = fops._chunked_mha(q, k, v, causal, cap, win, chunk=32)
+    want = fref.mha_reference(q, k, v, causal=causal, logit_softcap=cap,
+                              sliding_window=win)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@given(
+    s=st.integers(8, 80),
+    h=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+)
+@settings(max_examples=10, deadline=None)
+def test_attention_row_stochastic(s, h, g):
+    """Causal attention output rows are convex combinations of V rows:
+    with V == const c, output == c."""
+    B, Dh = 1, 16
+    q = jnp.asarray(RNG.randn(B, s, h * g, Dh), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, s, h, Dh), jnp.float32)
+    v = jnp.full((B, s, h, Dh), 3.25, jnp.float32)
+    out = fops._chunked_mha(q, k, v, True, 0.0, 0, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-5)
+
+
+def test_flash_grad_matches_ref():
+    """Kernel forward with the custom-VJP (chunked) backward vs full ref."""
+    B, S, H, Hkv, Dh = 1, 64, 2, 1, 16
+    q, k, v = _mk_qkv(B, S, H, Hkv, Dh, jnp.float32)
+
+    def f_k(q, k, v):
+        return jnp.sum(fops.mha(q, k, v, use_kernel=True, interpret=True) ** 2)
+
+    def f_r(q, k, v):
+        return jnp.sum(fref.mha_reference(q, k, v) ** 2)
+
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4, rtol=2e-4)
+
+
+RMS_SWEEP = [
+    ((4, 32, 64), jnp.float32),
+    ((3, 100), jnp.float32),
+    ((1, 7, 33), jnp.float32),
+    ((4, 32, 64), jnp.bfloat16),
+    ((513, 128), jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("shape,dtype", RMS_SWEEP)
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jnp.asarray(RNG.randn(*shape), dtype)
+    w = jnp.asarray(RNG.randn(shape[-1]), jnp.float32)
+    out = rk.rmsnorm(x, w, interpret=True, block_rows=64)
+    want = rref.rmsnorm_reference(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5, rtol=2e-2,
+    )
+
+
+@given(st.integers(2, 200))
+@settings(max_examples=10, deadline=None)
+def test_rmsnorm_unit_scale_property(d):
+    """With w == 1, output rows have mean-square ~= 1."""
+    x = jnp.asarray(RNG.randn(3, d) * 7.0, jnp.float32)
+    out = rk.rmsnorm(x, jnp.ones((d,)), interpret=True)
+    ms = np.mean(np.asarray(out) ** 2, axis=-1)
+    np.testing.assert_allclose(ms, 1.0, rtol=1e-3)
+
+
+SSM_SWEEP = [
+    (2, 64, 3, 8, 16, 32),
+    (1, 100, 2, 16, 8, 32),    # ragged S
+    (2, 128, 4, 8, 16, 64),
+    (1, 33, 1, 4, 4, 16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", SSM_SWEEP)
+def test_ssd_kernel_matches_ref(B, S, H, P, N, chunk):
+    x = jnp.asarray(RNG.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.randn(B, S, H)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.randn(H)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    D = jnp.asarray(RNG.randn(H), jnp.float32)
+    want = sref.selective_scan_reference(x, dt, A, Bm, Cm, D)
+    got = sk.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-3)
+    got2 = sops._chunked_jnp(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want), atol=2e-4, rtol=2e-3)
+
+
+def test_ssm_decode_matches_scan():
+    B, S, H, P, N = 2, 48, 3, 8, 16
+    x = jnp.asarray(RNG.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.randn(B, S, H)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.randn(H)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    D = jnp.asarray(RNG.randn(H), jnp.float32)
+    want = sref.selective_scan_reference(x, dt, A, Bm, Cm, D)
+    st_ = jnp.zeros((B, H, N, P))
+    outs = []
+    for t in range(S):
+        y, st_ = sops.decode_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D, st_)
+        outs.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1)), np.asarray(want), atol=1e-4, rtol=1e-3
+    )
+
+
+def test_ssm_final_state_matches_sequential():
+    B, S, H, P, N = 1, 50, 2, 4, 8
+    x = jnp.asarray(RNG.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.randn(B, S, H)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.randn(H)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    st_ = jnp.zeros((B, H, N, P))
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A)
+        st_ = st_ * decay[..., None, None] + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, t], x[:, t] * dt[:, t][..., None]
+        )
+    got = sops.final_state(x, dt, A, Bm, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(st_), atol=1e-4, rtol=1e-3)

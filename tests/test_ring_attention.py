@@ -1,0 +1,41 @@
+"""Sequence-parallel ring attention vs full attention (8 fake devices)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_ring_attention_matches_full():
+    body = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels.flash_attention import ref
+        from repro.sharding.ring_attention import ring_attention
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.RandomState(0)
+        for (B, S, H, Hkv, Dh, causal) in [
+            (2, 128, 4, 2, 16, True),
+            (1, 64, 2, 2, 32, True),
+            (2, 128, 4, 1, 16, False),
+        ]:
+            q = jnp.asarray(rng.randn(B, S, H, Dh), jnp.float32)
+            k = jnp.asarray(rng.randn(B, S, Hkv, Dh), jnp.float32)
+            v = jnp.asarray(rng.randn(B, S, Hkv, Dh), jnp.float32)
+            got = ring_attention(q, k, v, mesh, "data", causal=causal)
+            want = ref.mha_reference(q, k, v, causal=causal)
+            err = float(jnp.max(jnp.abs(got - want)))
+            assert err < 3e-5, (B, S, H, Hkv, Dh, causal, err)
+            print("ring ok", B, S, H, Hkv, Dh, causal, err)
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr

@@ -1,0 +1,79 @@
+"""Sharding rules: coverage, rank-correctness, production-mesh divisibility."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.sharding import rules
+
+KEY = jax.random.PRNGKey(0)
+MESH_SHAPE = {"data": 16, "model": 16}   # production intra-pod mesh
+
+
+def _abstract(cfg):
+    return jax.eval_shape(lambda: lm.init_params(KEY, cfg))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_cover_all_leaves_with_correct_rank(arch):
+    cfg = get_config(arch)
+    params = _abstract(cfg)
+    pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % 16 == 0)
+    specs = rules.param_specs(cfg, params, pol)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_production_mesh_divisibility(arch):
+    """Every sharded dim divides by its mesh-axis size (so the dry-run never
+    relies on implicit padding for parameters)."""
+    cfg = get_config(arch)
+    params = _abstract(cfg)
+    pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % 16 == 0)
+    specs = rules.param_specs(cfg, params, pol)
+
+    def check(path, leaf, spec):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([MESH_SHAPE[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (path, leaf.shape, spec, dim)
+
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        check(jax.tree_util.keystr(path), leaf, spec)
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "grok_1_314b", "rwkv6_1_6b"])
+def test_big_matrices_are_sharded(arch):
+    """No parameter above 16M elements may be fully replicated."""
+    cfg = get_config(arch)
+    params = _abstract(cfg)
+    pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % 16 == 0)
+    specs = rules.param_specs(cfg, params, pol)
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        if leaf.size > 16e6:
+            assert any(e is not None for e in spec), (
+                jax.tree_util.keystr(path), leaf.shape)
+
+
+def test_batch_specs_modes():
+    cfg = get_config("llama3_2_1b")
+    pol = rules.ShardingPolicy()
+    b1 = rules.batch_specs(cfg, pol)
+    assert b1["tokens"] == P("data", None)
+    b2 = rules.batch_specs(cfg, pol, pod_axis="pod")
+    assert b2["tokens"] == P(("pod", "data"), None)
+    vlm = rules.batch_specs(get_config("qwen2_vl_72b"), pol)
+    assert vlm["positions"] == P(None, "data", None)
