@@ -9,10 +9,14 @@ from __future__ import annotations
 import math
 import time
 
+from repro import comm
 from repro.core import schedules as S
-from repro.core.planner import best_plan, enumerate_plans
-from repro.core.simulator import evaluate, simulate_async, simulate_rounds
-from repro.core.topology import paper_smp_cluster, tpu_v5e_cluster
+from repro.core.simulator import simulate_async, simulate_rounds
+from repro.core.topology import (
+    V5E_CHIPS_PER_POD,
+    paper_smp_cluster,
+    tpu_v5e_cluster,
+)
 
 
 def _t(fn, *a, **k):
@@ -103,20 +107,22 @@ def table_model_vs_async():
 
 
 def table_planner_tpu():
-    """Planner decisions on the production TPU topology (2 pods)."""
+    """Planner decisions on the production TPU topology (2 pods), through
+    the registry-backed ``comm.CommContext`` surface."""
     rows = []
-    topo = tpu_v5e_cluster(n_pods=2)
-    for coll in ["broadcast", "gather", "all_gather", "all_reduce", "all_to_all"]:
+    ctx = comm.CommContext(tpu_v5e_cluster(n_pods=2))
+    for coll in comm.collectives():
         for nbytes in [1e4, 1e6, 1e8, 4e9]:
             t0 = time.perf_counter()
-            plans = enumerate_plans(topo, coll, nbytes,
-                                    lossy_ok=(coll == "all_reduce"))
+            plans = ctx.plans(coll, nbytes, lossy_ok=(coll == "all_reduce"))
             us = (time.perf_counter() - t0) * 1e6
-            best, worst = plans[0], plans[-1]
+            best, worst = plans[0].plan, plans[-1].plan
+            runnable = "y" if plans[0].executable else "model-only"
             rows.append((
                 f"plan_{coll}_{nbytes:.0e}",
                 us,
-                f"best={best.strategy};t={best.t_rounds*1e3:.3f}ms;"
+                f"best={best.strategy};impl={best.impl};runnable={runnable};"
+                f"t={best.t_rounds*1e3:.3f}ms;"
                 f"vs_worst={worst.t_rounds/best.t_rounds:.1f}x",
             ))
     return rows
@@ -124,20 +130,28 @@ def table_planner_tpu():
 
 def table_gradsync_scenarios():
     """End-to-end gradient-sync planning for the assigned archs' grad sizes
-    (f32 bytes), 2-pod cluster: the paper's model vs the flat baseline."""
+    (f32 bytes), 2-pod cluster: the paper's model vs the flat baseline.
+
+    Uses ``CommContext.plan`` (executable strategies only) so every row's
+    choice is one the trainer can actually run, and reports the wire format
+    ``comm.select_pod_sync`` would hand the train step."""
     rows = []
-    topo = tpu_v5e_cluster(n_pods=2)
+    ctx = comm.CommContext(tpu_v5e_cluster(n_pods=2))
     from repro.configs import ARCH_IDS, get_config
     for arch in ARCH_IDS:
         cfg = get_config(arch)
-        gbytes = cfg.param_count() * 4.0 / 256  # FSDP shard per chip crosses
-        plans = enumerate_plans(topo, "all_reduce", gbytes, lossy_ok=True)
-        flat = next(p for p in plans if p.strategy == "flat")
-        best = plans[0]
+        gbytes = cfg.param_count() * 4.0 / V5E_CHIPS_PER_POD  # per-chip shard
+        best = ctx.plan("all_reduce", gbytes, lossy_ok=True).plan
+        flat = next(
+            pc.plan for pc in ctx.plans("all_reduce", gbytes, lossy_ok=True)
+            if pc.plan.strategy == "flat"
+        )
+        sync = comm.select_pod_sync(2, gbytes)
         rows.append((
             f"gradsync_{arch}",
             best.t_rounds * 1e6,
-            f"strategy={best.strategy};flat_ms={flat.t_rounds*1e3:.2f};"
+            f"strategy={best.strategy};pod_sync={sync};"
+            f"flat_ms={flat.t_rounds*1e3:.2f};"
             f"speedup={flat.t_rounds/best.t_rounds:.1f}x",
         ))
     return rows

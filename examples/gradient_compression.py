@@ -29,6 +29,10 @@ from repro.train import steps as T
 
 cfg = reduced_for_smoke(get_config("llama3_2_1b")).with_(compute_dtype="float32")
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+from repro import comm
+from repro.core.topology import V5E_CHIPS_PER_POD
+print("cost model pick for this model's DCN tier (pod_sync='auto'):",
+      comm.select_pod_sync(2, cfg.param_count() * 4.0 / V5E_CHIPS_PER_POD))
 data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                 global_batch=8, seed=5))
 for sync in ["flat", "q8"]:
@@ -37,7 +41,8 @@ for sync in ["flat", "q8"]:
                                      mesh, rules.ShardingPolicy())
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     opt = adamw.init_state(params)
-    with jax.set_mesh(mesh):
+    mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with mesh_ctx:
         n = lambda s: jax.tree.map(lambda sp: NamedSharding(mesh, sp), s,
                                    is_leaf=lambda x: isinstance(x, P))
         jstep = jax.jit(step)

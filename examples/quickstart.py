@@ -12,9 +12,10 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import enumerate_plans, paper_smp_cluster, tpu_v5e_cluster
-from repro.core.schedules import build
-from repro.core.simulator import evaluate
+from repro import comm  # noqa: E402
+from repro.core import paper_smp_cluster, tpu_v5e_cluster  # noqa: E402
+from repro.core.schedules import build  # noqa: E402
+from repro.core.simulator import evaluate  # noqa: E402
 
 # ----------------------------------------------------------------------
 # 1. A 2008-style cluster: 8 machines x 4 cores, 2 NICs each.
@@ -35,16 +36,32 @@ print(f"\n== C2 asymmetry ==\n  broadcast: {bc.n_rounds} rounds; "
       f"gather: {ga.n_rounds} rounds (reads are not writes)")
 
 # ----------------------------------------------------------------------
-# 3. The planner on the production TPU topology (2 pods x 256 chips).
+# 3. The registry-backed planner on the production TPU topology
+#    (2 pods x 256 chips): CommContext.plan returns a *callable* plan.
 # ----------------------------------------------------------------------
-tpu = tpu_v5e_cluster(n_pods=2)
+ctx = comm.CommContext(tpu_v5e_cluster(n_pods=2))
 print("\n== planner decisions, all_reduce on 2x256 TPU ==")
 for nbytes in [1e4, 1e6, 1e9]:
-    plans = enumerate_plans(tpu, "all_reduce", nbytes, lossy_ok=True)
-    best, flat = plans[0], next(p for p in plans if p.strategy == "flat")
+    pc = ctx.plan("all_reduce", nbytes, lossy_ok=True)
+    flat = next(p.plan for p in ctx.plans("all_reduce", nbytes, lossy_ok=True)
+                if p.plan.strategy == "flat")
+    best = pc.plan
     print(f"  {nbytes:9.0e} B -> {best.strategy:15s} "
           f"{best.t_rounds*1e3:9.3f}ms  (flat: {flat.t_rounds*1e3:9.3f}ms, "
-          f"{flat.t_rounds/best.t_rounds:4.1f}x slower)")
+          f"{flat.t_rounds/best.t_rounds:4.1f}x slower)  "
+          f"impl={best.impl}")
 
-print("\nThe hierarchical schedules here are the same ones the trainer runs "
-      "(core/collectives.py) and the dry-run measures in HLO.")
+# ----------------------------------------------------------------------
+# 4. Every registered strategy, costed: the cost table behind the choice.
+#    'executable=False' rows are model-only strawmen (e.g. the single-
+#    leader hier_seq) -- the registry guarantees every other row can run.
+# ----------------------------------------------------------------------
+print("\n== cost table, broadcast of 64 KiB on the TPU topology ==")
+for row in ctx.cost_table("broadcast", 64 * 1024):
+    run = "runnable " if row["executable"] else "model-only"
+    print(f"  {row['strategy']:10s} [{run}] t={row['t_us']:9.1f}us "
+          f"rounds={row['n_rounds']:3d} global={row['global_bytes']/1e3:.1f}kB")
+
+print("\nA PlannedCollective is directly callable inside a shard_map region "
+      "over a (mach, core) mesh -- the same objects the trainer executes "
+      "(repro/comm/impls.py); see tests/test_collectives_multidevice.py.")

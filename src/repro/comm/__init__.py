@@ -1,0 +1,68 @@
+"""``repro.comm`` -- the collectives API: one registry, plan, then run.
+
+A *collective* is a first-class object here: a ``CollectiveSpec`` binds, per
+(collective, strategy), the costable schedule generator, the runnable
+shard_map implementation, a lossy flag, and capability metadata.  The
+registry is the single source of truth the legacy ``schedules.GENERATORS``,
+``planner._IMPL_OF_STRATEGY`` and ``collectives.MANUAL_ALL_REDUCE`` dicts
+are now derived from, and it is validated at import time: every plannable
+strategy is executable or explicitly model-only.
+
+Typical use::
+
+    from repro import comm
+    from repro.core.topology import tpu_v5e_cluster
+
+    ctx = comm.CommContext(tpu_v5e_cluster(n_pods=2))
+    pc = ctx.plan("all_reduce", nbytes=1e9, lossy_ok=True)
+    pc.plan.t_rounds       # modelled time under the paper's round model
+    y = pc(x)              # inside a shard_map region over (mach, core)
+    ctx.cost_table("all_reduce", 1e9)   # every strategy, costed
+
+The old free-function surface (``repro.core.make_policy`` / ``best_plan`` /
+``pod_sync_grads``) remains as thin deprecation shims over this package.
+"""
+
+from . import impls as _impls  # noqa: F401  (registers all strategies)
+from .context import (  # noqa: F401
+    CommContext,
+    ModelOnlyStrategyError,
+    Plan,
+    PlannedCollective,
+    best_plan,
+    enumerate_plans,
+    plan_for_spec,
+)
+from .grad_sync import (  # noqa: F401
+    POD_SYNC_FORMATS,
+    pod_combine_flat,
+    pod_combine_q8,
+    pod_sync_grads,
+    select_pod_sync,
+)
+from .impls import (  # noqa: F401
+    Q8_BLOCK,
+    Q8_GLOBAL_FACTOR,
+    q8_decode,
+    q8_decode_sum,
+    q8_encode,
+)
+from .registry import (  # noqa: F401
+    Capabilities,
+    CollectiveSpec,
+    RegistryError,
+    collectives,
+    executable_pairs,
+    executable_view,
+    generators_view,
+    get_spec,
+    register_model_only,
+    register_strategy,
+    resolve_impl,
+    specs,
+    strategies,
+    validate_registry,
+)
+
+# Import-time guarantee: the planner can never emit a plan nothing can run.
+validate_registry()

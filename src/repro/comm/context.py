@@ -1,0 +1,288 @@
+"""Registry-backed planning: ``CommContext`` -> ``PlannedCollective``.
+
+The paper's punchline is that a cost model should *select* the collective
+schedule per topology and message size.  This module is the selection layer,
+rebuilt on the strategy registry so a plan is always backed by the spec that
+can run it:
+
+    ctx = CommContext(tpu_v5e_cluster(n_pods=2))
+    pc = ctx.plan("all_reduce", nbytes=1e9, lossy_ok=True)
+    pc.plan.t_rounds          # modelled seconds under the round model
+    y = pc(x)                 # callable inside a shard_map region
+
+Costing exploits that every generator's round-based time is exactly affine
+in the message size m (each op's bytes is an integer multiple of m):
+``t(m) = A + B*m``.  We evaluate the schedule at two message sizes once per
+(topology, collective, strategy, root) and cache the coefficients, so
+planning is O(1) per query even for 512-chip topologies.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+from repro.core.simulator import simulate_rounds, validate
+from repro.core.topology import ClusterTopology
+
+from . import registry
+from .registry import CollectiveSpec
+
+
+class ModelOnlyStrategyError(RuntimeError):
+    """Raised when a model-only PlannedCollective is called."""
+
+
+@dataclass(frozen=True)
+class Plan:
+    """One costed decision record: what to run and what the model expects.
+
+    ``impl`` is the runnable implementation tag (resolvable through the
+    registry) or None for model-only strategies -- the planner can still
+    cost those for tables, but they are excluded from executable selection.
+    """
+
+    collective: str
+    strategy: str
+    impl: str | None
+    nbytes: float
+    t_rounds: float
+    n_rounds: int
+    global_bytes: float
+    local_bytes: float
+    lossy: bool = False
+    model_only: bool = False
+    root: int = 0
+
+    def speedup_vs(self, other: "Plan") -> float:
+        return other.t_rounds / self.t_rounds
+
+
+@lru_cache(maxsize=4096)
+def _affine_cost(
+    topo: ClusterTopology, collective: str, strategy: str, root: int
+) -> tuple:
+    """(A, B, n_rounds, gB, lB) with t(m) = A + B*m, global/local bytes = m*(gB, lB)."""
+    spec = registry.get_spec(collective, strategy)
+    m1, m2 = 1024.0, 2048.0
+    s1 = spec.build_schedule(topo, m1, root=root, payloads=False)
+    s2 = spec.build_schedule(topo, m2, root=root, payloads=False)
+    validate(s1)  # non-strict: flat schedules may oversubscribe NICs
+    t1, t2 = simulate_rounds(s1, check=False), simulate_rounds(s2, check=False)
+    B = (t2 - t1) / (m2 - m1)
+    A = t1 - B * m1
+    return (A, B, s1.n_rounds, s1.total_global_bytes() / m1, s1.total_local_bytes() / m1)
+
+
+def plan_for_spec(
+    topo: ClusterTopology, spec: CollectiveSpec, nbytes: float, root: int = 0
+) -> Plan:
+    A, B, n_rounds, gB, lB = _affine_cost(
+        topo, spec.collective, spec.strategy, root if spec.caps.needs_root else 0
+    )
+    return Plan(
+        collective=spec.collective,
+        strategy=spec.strategy,
+        impl=spec.impl_tag,
+        nbytes=nbytes,
+        t_rounds=A + B * nbytes,
+        n_rounds=n_rounds,
+        global_bytes=gB * nbytes,
+        local_bytes=lB * nbytes,
+        lossy=spec.lossy,
+        model_only=spec.model_only,
+        root=root,
+    )
+
+
+def enumerate_plans(
+    topo: ClusterTopology,
+    collective: str,
+    nbytes: float,
+    root: int = 0,
+    lossy_ok: bool = False,
+    executable_only: bool = False,
+) -> list[Plan]:
+    """All candidate plans for a collective, sorted by modelled time."""
+    if not 0 <= root < topo.n_procs:
+        raise ValueError(
+            f"root {root} out of range for a {topo.n_machines}x"
+            f"{topo.procs_per_machine} topology ({topo.n_procs} procs)"
+        )
+    plans = [
+        plan_for_spec(topo, spec, nbytes, root=root)
+        for spec in registry.specs(
+            collective, executable_only=executable_only, include_lossy=lossy_ok
+        )
+        if spec.supports(topo)
+    ]
+    if not plans:
+        raise registry.RegistryError(
+            f"no strategies for {collective!r} on {topo.n_machines}x"
+            f"{topo.procs_per_machine} (lossy_ok={lossy_ok}, "
+            f"executable_only={executable_only})"
+        )
+    plans.sort(key=lambda p: p.t_rounds)
+    return plans
+
+
+def best_plan(
+    topo: ClusterTopology,
+    collective: str,
+    nbytes: float,
+    root: int = 0,
+    lossy_ok: bool = False,
+    executable_only: bool = False,
+) -> Plan:
+    return enumerate_plans(
+        topo, collective, nbytes, root, lossy_ok, executable_only
+    )[0]
+
+
+# ----------------------------------------------------------------------
+# The user-facing API: a context binds topology + mesh axis names once
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlannedCollective:
+    """A plan fused to its runnable implementation.
+
+    Directly callable inside a ``shard_map``/``vmap`` region over the
+    context's (mach, core) mesh axes; carries its cost-model record in
+    ``plan`` and its registry binding in ``spec``.
+    """
+
+    plan: Plan
+    spec: CollectiveSpec
+    mach_axis: str
+    core_axis: str
+
+    @property
+    def executable(self) -> bool:
+        return self.spec.executable
+
+    def __call__(self, x, **overrides):
+        if not self.executable:
+            raise ModelOnlyStrategyError(
+                f"{self.spec.collective}/{self.spec.strategy} is model-only: "
+                "it can be costed but not run; plan with "
+                "executable_only=True (the default) for a runnable schedule"
+            )
+        kw = dict(mach_axis=self.mach_axis, core_axis=self.core_axis)
+        if self.spec.caps.needs_root:
+            kw["root"] = self.plan.root
+        kw.update(overrides)
+        return self.spec.impl(x, **kw)
+
+    def describe(self) -> str:
+        p = self.plan
+        run = p.impl if self.executable else "model-only"
+        return (
+            f"{p.collective}/{p.strategy} [{run}] m={p.nbytes:.3g}B "
+            f"t={p.t_rounds * 1e6:.1f}us rounds={p.n_rounds} "
+            f"global={p.global_bytes:.3g}B local={p.local_bytes:.3g}B"
+            + (" (lossy)" if p.lossy else "")
+        )
+
+
+class CommContext:
+    """Planning + execution surface for one cluster topology.
+
+    >>> ctx = CommContext(tpu_v5e_cluster(n_pods=2))
+    >>> pc = ctx.plan("all_reduce", grad_bytes, lossy_ok=True)
+    >>> synced = shard_map_region_fn(pc)          # pc is callable in-region
+    >>> ctx.cost_table("all_reduce", grad_bytes)  # every strategy, costed
+
+    ``mach_axis`` / ``core_axis`` name the mesh axes the runnable impls
+    operate over (the paper's machine / in-machine process tiers).
+    """
+
+    def __init__(
+        self,
+        topo: ClusterTopology,
+        *,
+        mach_axis: str = "mach",
+        core_axis: str = "core",
+    ) -> None:
+        self.topo = topo
+        self.mach_axis = mach_axis
+        self.core_axis = core_axis
+
+    def __repr__(self) -> str:
+        return (
+            f"CommContext({self.topo.n_machines}x"
+            f"{self.topo.procs_per_machine}, degree={self.topo.degree}, "
+            f"axes=({self.mach_axis!r}, {self.core_axis!r}))"
+        )
+
+    def _bind(self, plan: Plan) -> PlannedCollective:
+        spec = registry.get_spec(plan.collective, plan.strategy)
+        return PlannedCollective(
+            plan=plan, spec=spec,
+            mach_axis=self.mach_axis, core_axis=self.core_axis,
+        )
+
+    def plan(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        root: int = 0,
+        lossy_ok: bool = False,
+        executable_only: bool = True,
+    ) -> PlannedCollective:
+        """Best modelled strategy, bound to its runnable implementation.
+
+        By default only executable strategies compete (the returned object
+        must be callable); pass ``executable_only=False`` to let model-only
+        strategies win for analysis purposes.
+        """
+        p = best_plan(
+            self.topo, collective, nbytes, root=root,
+            lossy_ok=lossy_ok, executable_only=executable_only,
+        )
+        return self._bind(p)
+
+    def plans(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        root: int = 0,
+        lossy_ok: bool = False,
+        executable_only: bool = False,
+    ) -> list[PlannedCollective]:
+        return [
+            self._bind(p)
+            for p in enumerate_plans(
+                self.topo, collective, nbytes, root=root,
+                lossy_ok=lossy_ok, executable_only=executable_only,
+            )
+        ]
+
+    def cost_table(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        root: int = 0,
+        lossy_ok: bool = True,
+    ) -> list[dict]:
+        """Every registered strategy costed at ``nbytes``, best first."""
+        rows = []
+        for pc in self.plans(collective, nbytes, root=root, lossy_ok=lossy_ok):
+            p = pc.plan
+            rows.append(
+                dict(
+                    collective=p.collective,
+                    strategy=p.strategy,
+                    impl=p.impl,
+                    executable=pc.executable,
+                    lossy=p.lossy,
+                    t_us=p.t_rounds * 1e6,
+                    n_rounds=p.n_rounds,
+                    global_bytes=p.global_bytes,
+                    local_bytes=p.local_bytes,
+                )
+            )
+        return rows

@@ -1,0 +1,406 @@
+"""Runnable realizations of the registered collective strategies.
+
+Every function here executes inside a ``shard_map`` region over a
+("mach", "core") mesh -- the paper's two-tier cluster mapped onto devices.
+Each is registered against its schedule generator via ``@register_strategy``,
+so the cost model and the runtime can never drift: the planner costs exactly
+the schedule whose runnable twin is bound in the same ``CollectiveSpec``.
+
+Strategy naming follows the schedule generators:
+
+  * ``flat``          -- hierarchy-oblivious (the paper's strawman),
+  * ``hier_seq``      -- single-leader hierarchical (model-only strawman),
+  * ``hier_par``      -- the paper's Rule-1/2/3-aware schedule,
+  * ``hier_par_bw``   -- bandwidth-optimal large-message variant,
+  * ``*_q8``          -- int8-compressed global tier (lossy, opt-in).
+
+The int8 codec quantizes blocks of 64 values to int8 with an f32 scale
+before crossing the DCN tier: 4.25 bytes -> 1.0625 bytes per f32 value,
+a ~4x cut of the global-tier collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import schedules as S
+
+from .registry import Capabilities, register_model_only, register_strategy
+
+Q8_BLOCK = 64
+
+
+def _axis_size(name) -> int:
+    """Static mesh-axis size inside a shard_map region.
+
+    ``lax.axis_size`` only exists on newer jax; ``lax.psum`` of a Python
+    scalar constant-folds to the axis size (a plain int) on the pinned
+    version, so reshapes downstream stay static either way.
+    """
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
+
+# Quantized-DCN schedule variant: global-tier bytes shrink by this factor
+# (fp32 -> int8 values + per-block fp32 scales).  Lossy, so the planner
+# reports it separately and selects it only when the caller opts in.
+Q8_GLOBAL_FACTOR = 0.2656  # 1/4 payload + 1/64-block fp32 scales
+
+
+# ----------------------------------------------------------------------
+# int8 block codec (for the DCN tier)
+# ----------------------------------------------------------------------
+
+def q8_encode(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    """Blockwise symmetric int8 quantization over the last axis.
+
+    Blocks the LAST dim only (padded to a multiple of Q8_BLOCK) and keeps
+    the leading dims -- no giant flatten, so >2^31-element tensors (the
+    stacked 40x8192x22528 mlp grads) stay within int32 index arithmetic.
+    Returns (q [..., nblk, B], scales [..., nblk, 1], last_dim)."""
+    last = x.shape[-1]
+    pad = (-last) % Q8_BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(*x.shape[:-1], -1, Q8_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), last
+
+
+def q8_decode(q: jax.Array, scale: jax.Array, last: int, shape, dtype) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale)
+    out = out.reshape(*out.shape[:-2], -1)[..., :last]
+    return out.reshape(shape).astype(dtype)
+
+
+def q8_decode_sum(
+    qg: jax.Array,
+    sg: jax.Array,
+    last: int,
+    shape,
+    dtype,
+    scale: float = 1.0,
+) -> jax.Array:
+    """THE decode path for every gathered-q8 reduction in this repo.
+
+    Input is a leading-axis stack of per-peer (q, scale) blocks from an
+    ``all_gather`` over the compressed tier.  Dequantize-and-accumulate in
+    one fused expression (sum_i q_i * s_i, optionally scaled by e.g.
+    1/n_pods for a mean), then unblock back to ``shape``.  Both the manual
+    hierarchical all-reduce and the production pod-tier gradient sync call
+    this -- previously each carried its own copy with a dead ``deq / 1.0``
+    / ``jnp.ones_like`` re-decode bolted on.
+    """
+    acc = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    if scale != 1.0:
+        acc = acc * scale
+    acc = acc.reshape(*acc.shape[:-2], -1)[..., :last]
+    return acc.reshape(shape).astype(dtype)
+
+
+def _q8_scaled_schedule(base):
+    """Schedule generator for a q8 variant: base schedule with global-tier
+    Send bytes scaled by Q8_GLOBAL_FACTOR (local tier and writes unchanged)."""
+
+    def gen(topo, m: float, payloads: bool = True):
+        sched = base(topo, m, payloads=payloads)
+        out = S.Schedule(
+            sched.name + "_q8", sched.collective, sched.topo, sched.nbytes,
+            root=sched.root,
+        )
+        for rnd in sched.rounds:
+            nr = out.new_round()
+            for op in rnd.ops:
+                if isinstance(op, S.Send) and not sched.topo.co_located(
+                    op.src, op.dst
+                ):
+                    nr.add(dataclasses.replace(
+                        op, nbytes=op.nbytes * Q8_GLOBAL_FACTOR))
+                else:
+                    nr.add(op)
+        return out
+
+    gen.__name__ = base.__name__ + "_q8"
+    return gen
+
+
+# ----------------------------------------------------------------------
+# ALL-REDUCE
+# ----------------------------------------------------------------------
+
+@register_strategy(
+    "all_reduce", "flat", schedule=S.allreduce_flat_ring, impl_tag="flat",
+)
+def manual_all_reduce_flat(x: jax.Array, mach_axis: str, core_axis: str) -> jax.Array:
+    """Hierarchy-oblivious all-reduce: one psum over the joint axes.
+
+    Every proc's full vector crosses whatever links the runtime picks --
+    the baseline the paper says existing algorithms default to.
+    """
+    return lax.psum(x, (mach_axis, core_axis))
+
+
+@register_strategy(
+    "all_reduce", "hier_par", schedule=S.allreduce_hier_par, impl_tag="hier",
+)
+def manual_all_reduce_hier(
+    x: jax.Array, mach_axis: str, core_axis: str
+) -> jax.Array:
+    """The paper's all-reduce (allreduce_hier_par schedule family).
+
+    Phase 1 (local):  reduce-scatter over the core axis (Rule 1 reads,
+                      cheap tier).
+    Phase 2 (global): all-reduce of the 1/c shard over the machine axis --
+                      every core drives its machine's external links with a
+                      distinct shard simultaneously (Rule 3).
+    Phase 3 (local):  all-gather over the core axis (Rule 1 write).
+    """
+    c = _axis_size(core_axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % c
+    flat = jnp.pad(flat, (0, pad))
+    s = lax.psum_scatter(flat, core_axis, scatter_dimension=0, tiled=True)
+    s = lax.psum(s, mach_axis)
+    full = lax.all_gather(s, core_axis, axis=0, tiled=True)
+    return full[: x.size].reshape(x.shape)
+
+
+# The bandwidth-optimal schedule lowers to the same runnable exchange on a
+# device mesh (psum_scatter / psum / all_gather); only the modelled local
+# tier differs, so it shares the impl under a distinct tag.
+register_strategy(
+    "all_reduce", "hier_par_bw", schedule=S.allreduce_hier_par_bw,
+    impl_tag="hier_bw",
+)(manual_all_reduce_hier)
+
+
+@register_strategy(
+    "all_reduce", "hier_par_q8",
+    schedule=_q8_scaled_schedule(S.allreduce_hier_par),
+    impl_tag="hier_q8", lossy=True, caps=Capabilities(supports_q8=True),
+)
+def manual_all_reduce_hier_q8(
+    x: jax.Array, mach_axis: str, core_axis: str
+) -> jax.Array:
+    """Hierarchical all-reduce with int8-compressed global tier.
+
+    The machine-tier exchange moves int8 payload + f32 block scales instead
+    of full-precision values (lossy; gradient-sync use only).
+    """
+    c = _axis_size(core_axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % c
+    flat = jnp.pad(flat, (0, pad))
+    s = lax.psum_scatter(flat, core_axis, scatter_dimension=0, tiled=True)
+    q, scale, last = q8_encode(s)
+    # Sum of per-machine dequantized contributions: gather both and reduce
+    # locally (machine count is small; payload on the wire is compressed).
+    qg = lax.all_gather(q, mach_axis, axis=0, tiled=False)
+    sg = lax.all_gather(scale, mach_axis, axis=0, tiled=False)
+    s = q8_decode_sum(qg, sg, last, s.shape, s.dtype)
+    full = lax.all_gather(s, core_axis, axis=0, tiled=True)
+    return full[: x.size].reshape(x.shape)
+
+
+register_strategy(
+    "all_reduce", "hier_par_bw_q8",
+    schedule=_q8_scaled_schedule(S.allreduce_hier_par_bw),
+    impl_tag="hier_bw_q8", lossy=True, caps=Capabilities(supports_q8=True),
+)(manual_all_reduce_hier_q8)
+
+
+# ----------------------------------------------------------------------
+# ALL-TO-ALL
+# ----------------------------------------------------------------------
+
+@register_strategy(
+    "all_to_all", "flat", schedule=S.alltoall_flat_pairwise, impl_tag="flat",
+)
+def manual_all_to_all_flat(
+    x: jax.Array, mach_axis: str, core_axis: str
+) -> jax.Array:
+    """Flat all-to-all over the joint (mach, core) axes.
+
+    x: [P, ...] where P = n_mach * n_core; chunk j goes to global proc j.
+    """
+    # split the leading dim over both axes: [M, C, ...]
+    n_mach = _axis_size(mach_axis)
+    n_core = _axis_size(core_axis)
+    xm = x.reshape(n_mach, n_core, *x.shape[1:])
+    xm = lax.all_to_all(xm, mach_axis, split_axis=0, concat_axis=0, tiled=False)
+    xm = lax.all_to_all(xm, core_axis, split_axis=1, concat_axis=1, tiled=False)
+    return xm.reshape(n_mach * n_core, *x.shape[1:])
+
+
+@register_strategy(
+    "all_to_all", "hier_par", schedule=S.alltoall_hier_par, impl_tag="hier",
+)
+def manual_all_to_all_hier(
+    x: jax.Array, mach_axis: str, core_axis: str
+) -> jax.Array:
+    """Kumar-style two-tier all-to-all (alltoall_hier_par schedule).
+
+    Phase 1: local all-to-all consolidates per-destination-machine bundles
+             onto the egress cores (cheap tier).
+    Phase 2: one machine-tier all-to-all of consolidated bundles, all egress
+             links in parallel (Rule 3).
+    Phase 3: local all-to-all scatters received bundles to their final cores
+             (Rule 1 writes in the model; an ICI shuffle on TPU).
+
+    Same bytes as flat on the global tier but M-1 consolidated transfers per
+    machine instead of P-1 small ones, and no duplicate DCN crossings.
+    """
+    n_mach = _axis_size(mach_axis)
+    n_core = _axis_size(core_axis)
+    payload = x.shape[1:]
+    xm = x.reshape(n_mach, n_core, *payload)  # [dst_mach, dst_core, ...]
+    # Global phase: one machine-tier exchange of consolidated bundles --
+    # each core crosses the DCN exactly once per destination machine
+    # (consolidation; Rule 3 keeps every core's link busy simultaneously).
+    xm = lax.all_to_all(xm, mach_axis, split_axis=0, concat_axis=0, tiled=True)
+    # now [src_mach, dst_core, ...]; rows came from (src_mach, my_core)
+    # Local phase: core-tier shuffle to final destinations (cheap tier;
+    # a shared-memory write in the paper's model, an ICI shuffle on TPU).
+    xm = lax.all_to_all(xm, core_axis, split_axis=1, concat_axis=0, tiled=True)
+    # now [src_core * src_mach, 1, ...] -- reorder to source-major layout
+    xm = xm.reshape(n_core, n_mach, *payload)
+    xm = jnp.swapaxes(xm, 0, 1)
+    return xm.reshape(n_mach * n_core, *payload)
+
+
+# ----------------------------------------------------------------------
+# ALL-GATHER  (new in the registry redesign: costed AND runnable)
+# ----------------------------------------------------------------------
+
+@register_strategy(
+    "all_gather", "flat", schedule=S.allgather_flat_ring, impl_tag="flat",
+)
+def manual_all_gather_flat(
+    x: jax.Array, mach_axis: str, core_axis: str
+) -> jax.Array:
+    """Hierarchy-oblivious all-gather over the joint axes.
+
+    Every proc's shard circulates over whatever links the runtime picks;
+    result is the concatenation over global proc order (mach-major).
+    """
+    return lax.all_gather(x, (mach_axis, core_axis), axis=0, tiled=True)
+
+
+@register_strategy(
+    "all_gather", "hier_par", schedule=S.allgather_hier_par, impl_tag="hier",
+)
+def manual_all_gather_hier(
+    x: jax.Array, mach_axis: str, core_axis: str
+) -> jax.Array:
+    """Two-tier all-gather (allgather_hier_par schedule).
+
+    Phase 1 (global, Rule 3): every proc ring-exchanges its OWN m-byte shard
+             across the machine axis -- all c cores drive their machine's
+             egress links at once, so the DCN carries each machine block
+             exactly once, striped 1/c per link.
+    Phase 2 (local, Rule 1):  clique all-gather over the core axis fans the
+             per-machine stacks out to every co-located proc.
+
+    Result rows are ordered by global proc id (machine-major), matching the
+    schedule's semantics check.
+    """
+    n_mach = _axis_size(mach_axis)
+    n_core = _axis_size(core_axis)
+    g = lax.all_gather(x, mach_axis, axis=0, tiled=False)    # [M, ...]
+    full = lax.all_gather(g, core_axis, axis=1, tiled=False)  # [M, c, ...]
+    return full.reshape(n_mach * n_core * x.shape[0], *x.shape[1:])
+
+
+# ----------------------------------------------------------------------
+# BROADCAST  (new in the registry redesign: costed AND runnable)
+# ----------------------------------------------------------------------
+
+@register_strategy(
+    "broadcast", "flat", schedule=S.bcast_flat_binomial, impl_tag="flat",
+    caps=Capabilities(needs_root=True),
+)
+def manual_broadcast_flat(
+    x: jax.Array, mach_axis: str, core_axis: str, root: int = 0
+) -> jax.Array:
+    """Hierarchy-oblivious broadcast: mask to the root and psum everywhere.
+
+    The root's full shard crosses the joint axes blind to machine seams --
+    the runnable twin of the binomial-tree strawman.
+    """
+    c = _axis_size(core_axis)
+    me = lax.axis_index(mach_axis) * c + lax.axis_index(core_axis)
+    masked = jnp.where(me == root, x, jnp.zeros_like(x))
+    return lax.psum(masked, (mach_axis, core_axis))
+
+
+@register_strategy(
+    "broadcast", "hier_par", schedule=S.bcast_hier_par, impl_tag="hier",
+    caps=Capabilities(needs_root=True),
+)
+def manual_broadcast_hier(
+    x: jax.Array, mach_axis: str, core_axis: str, root: int = 0
+) -> jax.Array:
+    """The paper's broadcast (bcast_hier_par schedule), runnable.
+
+    Phase 1 (local, Rule 1 write): the root publishes inside its machine so
+             every co-located core holds the value.
+    Phase 2 (global, Rule 3):      core k of the root machine sends stripe k
+             (1/c of the vector) across the machine axis -- degree-parallel
+             egress, each DCN link carrying a distinct stripe.
+    Phase 3 (local, Rule 1):       cores all-gather the stripes.
+    """
+    c = _axis_size(core_axis)
+    root_mach, root_core = divmod(root, c)
+    mach = lax.axis_index(mach_axis)
+    core = lax.axis_index(core_axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % c
+    flat = jnp.pad(flat, (0, pad))
+    is_root = jnp.logical_and(mach == root_mach, core == root_core)
+    mine = jnp.where(is_root, flat, jnp.zeros_like(flat))
+    # Phase 1: within the root machine every core obtains the full vector;
+    # other machines hold zeros and contribute nothing later.
+    local = lax.psum(mine, core_axis)
+    # Phase 2: each core keeps its 1/c stripe and crosses the machine tier
+    # with it; the psum sums one real stripe with zeros from non-root
+    # machines, i.e. a pure parallel-egress transfer.
+    stripes = local.reshape(c, -1)
+    stripe = lax.dynamic_index_in_dim(stripes, core, axis=0, keepdims=False)
+    stripe = lax.psum(stripe, mach_axis)
+    # Phase 3: reassemble locally.
+    full = lax.all_gather(stripe, core_axis, axis=0, tiled=True)
+    return full[: x.size].reshape(x.shape)
+
+
+# The single-leader hierarchical broadcast is the paper's "previous
+# approaches" strawman: costed for comparison tables, never run.  This is
+# the strategy the seed planner would happily emit an impl tag for with no
+# implementation behind it.
+register_model_only(
+    "broadcast", "hier_seq", schedule=S.bcast_hier_seq,
+    caps=Capabilities(needs_root=True),
+    doc="single-leader hierarchical broadcast (model-only strawman)",
+)
+
+
+# ----------------------------------------------------------------------
+# GATHER  (model-only: the paper costs it for the C2 asymmetry claim; a
+# runnable rooted gather has no production consumer yet)
+# ----------------------------------------------------------------------
+
+register_model_only(
+    "gather", "flat", schedule=S.gather_flat_binomial,
+    caps=Capabilities(needs_root=True),
+    doc="inverse binomial tree to root, hierarchy-oblivious",
+)
+register_model_only(
+    "gather", "hier_par", schedule=S.gather_hier_par,
+    caps=Capabilities(needs_root=True),
+    doc="clique-read local combine + parallel ingress (paper C2)",
+)

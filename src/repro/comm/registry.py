@@ -1,0 +1,309 @@
+"""Single source of truth for collective strategies.
+
+The seed realized the paper's "cost model selects the schedule" loop as three
+loosely-coupled string-keyed dicts (``schedules.GENERATORS``,
+``planner._IMPL_OF_STRATEGY``, ``collectives.MANUAL_ALL_REDUCE``) that could
+silently drift: the planner would return an ``impl`` tag with no runnable
+implementation behind it.  This module collapses them into one registry of
+``CollectiveSpec`` entries, each binding -- per (collective, strategy) --
+
+  * the *schedule generator* (the costable object the simulator times),
+  * the *runnable implementation* (a shard_map-region function), or an
+    explicit ``model_only`` marker when a strategy exists purely for the
+    cost model (e.g. the single-leader strawman ``hier_seq``),
+  * a ``lossy`` flag (int8-compressed tiers) and capability metadata
+    (needs a root, minimum mesh shape, q8 support).
+
+``validate_registry`` is called at ``repro.comm`` import time: every
+plannable strategy is guaranteed executable or explicitly model-only, so the
+planner can never again emit a plan nothing can run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+
+class RegistryError(ValueError):
+    """Raised when the strategy registry is inconsistent."""
+
+
+@dataclass(frozen=True)
+class Capabilities:
+    """Static capability metadata for one strategy.
+
+    needs_root:             the collective is rooted (broadcast / gather);
+                            schedule generators take ``root=`` and runnable
+                            impls take a ``root`` argument.
+    supports_q8:            the global tier may carry int8 payloads.
+    min_machines:           smallest machine count the strategy supports.
+    min_procs_per_machine:  smallest per-machine proc count it supports.
+    """
+
+    needs_root: bool = False
+    supports_q8: bool = False
+    min_machines: int = 1
+    min_procs_per_machine: int = 1
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    """One (collective, strategy) binding: costable schedule + runnable impl.
+
+    schedule:  ``f(topo, m, *, root=0, payloads=True) -> Schedule`` for rooted
+               collectives, ``f(topo, m, *, payloads=True) -> Schedule``
+               otherwise (see ``build_schedule``).
+    impl:      function runnable inside a shard_map region over a
+               ("mach", "core") mesh -- ``f(x, mach_axis, core_axis)``, plus
+               ``root=`` when ``caps.needs_root`` -- or None for model-only
+               strategies.
+    impl_tag:  short runtime tag carried by ``Plan.impl`` (stable across the
+               legacy ``MANUAL_ALL_REDUCE`` keys); None for model-only.
+    """
+
+    collective: str
+    strategy: str
+    schedule: Callable
+    impl: Callable | None = None
+    impl_tag: str | None = None
+    lossy: bool = False
+    model_only: bool = False
+    caps: Capabilities = field(default_factory=Capabilities)
+    doc: str = ""
+
+    @property
+    def executable(self) -> bool:
+        return self.impl is not None
+
+    def __post_init__(self) -> None:
+        if not callable(self.schedule):
+            raise RegistryError(
+                f"{self.collective}/{self.strategy}: schedule not callable"
+            )
+        if self.impl is None and not self.model_only:
+            raise RegistryError(
+                f"{self.collective}/{self.strategy}: no runnable impl and not "
+                "marked model_only -- a plannable strategy must be executable "
+                "or explicitly model-only"
+            )
+        if self.impl is not None and self.model_only:
+            raise RegistryError(
+                f"{self.collective}/{self.strategy}: impl given but marked "
+                "model_only"
+            )
+        if self.impl is not None and not callable(self.impl):
+            raise RegistryError(
+                f"{self.collective}/{self.strategy}: impl {self.impl!r} is "
+                "not callable"
+            )
+        if self.executable and not self.impl_tag:
+            raise RegistryError(
+                f"{self.collective}/{self.strategy}: executable spec needs "
+                "an impl_tag"
+            )
+
+    def supports(self, topo) -> bool:
+        """Whether the strategy can run/cost on this topology at all."""
+        return (
+            topo.n_machines >= self.caps.min_machines
+            and topo.procs_per_machine >= self.caps.min_procs_per_machine
+        )
+
+    def build_schedule(self, topo, m: float, root: int = 0,
+                       payloads: bool = True):
+        """Build the costable schedule, handling rooted-ness uniformly."""
+        if self.caps.needs_root:
+            return self.schedule(topo, m, root=root, payloads=payloads)
+        return self.schedule(topo, m, payloads=payloads)
+
+
+_REGISTRY: dict[tuple[str, str], CollectiveSpec] = {}
+
+
+def register(spec: CollectiveSpec) -> CollectiveSpec:
+    key = (spec.collective, spec.strategy)
+    if key in _REGISTRY:
+        raise RegistryError(f"duplicate registration for {key}")
+    _REGISTRY[key] = spec
+    return spec
+
+
+def register_strategy(
+    collective: str,
+    strategy: str,
+    *,
+    schedule: Callable,
+    impl_tag: str | None = None,
+    lossy: bool = False,
+    caps: Capabilities | None = None,
+    doc: str = "",
+) -> Callable:
+    """Decorator: register ``fn`` as the runnable impl of a strategy.
+
+    >>> @register_strategy("all_reduce", "hier_par_bw",
+    ...                    schedule=S.allreduce_hier_par_bw, impl_tag="hier_bw")
+    ... def manual_all_reduce_hier(x, mach_axis, core_axis): ...
+    """
+
+    def deco(fn: Callable) -> Callable:
+        register(
+            CollectiveSpec(
+                collective=collective,
+                strategy=strategy,
+                schedule=schedule,
+                impl=fn,
+                impl_tag=impl_tag or strategy,
+                lossy=lossy,
+                caps=caps or Capabilities(),
+                doc=doc or (fn.__doc__ or "").strip().split("\n")[0],
+            )
+        )
+        return fn
+
+    return deco
+
+
+def register_model_only(
+    collective: str,
+    strategy: str,
+    *,
+    schedule: Callable,
+    caps: Capabilities | None = None,
+    doc: str = "",
+) -> CollectiveSpec:
+    """Register a strategy that exists only for the cost model.
+
+    The planner will still cost it (for tables and what-if analysis) but
+    ``CommContext.plan`` excludes it from executable selection, and calling
+    its ``PlannedCollective`` raises.
+    """
+    return register(
+        CollectiveSpec(
+            collective=collective,
+            strategy=strategy,
+            schedule=schedule,
+            impl=None,
+            impl_tag=None,
+            model_only=True,
+            caps=caps or Capabilities(),
+            doc=doc,
+        )
+    )
+
+
+# ----------------------------------------------------------------------
+# Queries / derived views
+# ----------------------------------------------------------------------
+
+def get_spec(collective: str, strategy: str) -> CollectiveSpec:
+    try:
+        return _REGISTRY[(collective, strategy)]
+    except KeyError:
+        known = sorted(s for c, s in _REGISTRY if c == collective)
+        raise RegistryError(
+            f"no strategy {strategy!r} for collective {collective!r} "
+            f"(known: {known})"
+        ) from None
+
+
+def collectives() -> list[str]:
+    return sorted({c for c, _ in _REGISTRY})
+
+
+def specs(
+    collective: str | None = None,
+    *,
+    executable_only: bool = False,
+    include_lossy: bool = True,
+) -> list[CollectiveSpec]:
+    out = [
+        sp
+        for sp in _REGISTRY.values()
+        if (collective is None or sp.collective == collective)
+        and (not executable_only or sp.executable)
+        and (include_lossy or not sp.lossy)
+    ]
+    return sorted(out, key=lambda sp: (sp.collective, sp.strategy))
+
+
+def strategies(collective: str, *, lossy_ok: bool = False,
+               executable_only: bool = False) -> list[str]:
+    return [
+        sp.strategy
+        for sp in specs(collective, executable_only=executable_only,
+                        include_lossy=lossy_ok)
+    ]
+
+
+def generators_view() -> dict[str, dict[str, Callable]]:
+    """The legacy ``schedules.GENERATORS`` shape, derived from the registry.
+
+    Lossless strategies only, matching the seed dict: lossy (q8) variants
+    were never in GENERATORS -- their schedules are derived by scaling the
+    base schedule's global-tier bytes.
+    """
+    out: dict[str, dict[str, Callable]] = {}
+    for sp in specs(include_lossy=False):
+        out.setdefault(sp.collective, {})[sp.strategy] = sp.schedule
+    return out
+
+
+def executable_view(collective: str) -> dict[str, Callable]:
+    """Legacy ``MANUAL_ALL_REDUCE`` shape: impl_tag -> runnable fn."""
+    return {
+        sp.impl_tag: sp.impl
+        for sp in specs(collective, executable_only=True)
+    }
+
+
+def executable_pairs() -> list[tuple[str, str]]:
+    """Every registered (collective, strategy) that can actually run."""
+    return [(sp.collective, sp.strategy) for sp in specs(executable_only=True)]
+
+
+def resolve_impl(collective: str, impl_tag: str) -> Callable:
+    """impl tag -> runnable fn; raises RegistryError for unknown tags."""
+    for sp in specs(collective, executable_only=True):
+        if sp.impl_tag == impl_tag:
+            return sp.impl
+    raise RegistryError(f"no runnable impl {impl_tag!r} for {collective!r}")
+
+
+def validate_registry(regs: Iterable[CollectiveSpec] | None = None) -> None:
+    """Import-time consistency check over the whole registry.
+
+    * every executable spec has a callable impl and a unique impl_tag within
+      its collective;
+    * every non-executable spec is explicitly model_only (also enforced at
+      construction -- this re-checks after any manual mutation);
+    * every collective exposes at least one executable, lossless strategy
+      (the planner must always be able to return something runnable);
+    * rooted-ness metadata is uniform within a collective.
+    """
+    regs = list(regs) if regs is not None else list(_REGISTRY.values())
+    if not regs:
+        raise RegistryError("empty strategy registry")
+    by_coll: dict[str, list[CollectiveSpec]] = {}
+    for sp in regs:
+        by_coll.setdefault(sp.collective, []).append(sp)
+        if not sp.executable and not sp.model_only:
+            raise RegistryError(
+                f"{sp.collective}/{sp.strategy}: plannable but not runnable"
+            )
+    for coll, group in by_coll.items():
+        tags = [sp.impl_tag for sp in group if sp.executable]
+        if len(tags) != len(set(tags)):
+            raise RegistryError(f"{coll}: duplicate impl tags {tags}")
+        if not any(sp.executable and not sp.lossy for sp in group):
+            # gather is the one deliberate exception: the paper costs it
+            # (C2 asymmetry) but no runnable impl exists yet -- it must be
+            # explicitly all-model-only, not silently impl-less.
+            if not all(sp.model_only for sp in group):
+                raise RegistryError(
+                    f"{coll}: no lossless executable strategy and not all "
+                    "model-only"
+                )
+        rooted = {sp.caps.needs_root for sp in group}
+        if len(rooted) != 1:
+            raise RegistryError(f"{coll}: inconsistent needs_root metadata")

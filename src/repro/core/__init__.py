@@ -4,21 +4,41 @@ multi-core machines (Task & Chauhan, 2008), realized as
   * a formal two-tier cost model with the paper's three rules
     (``topology``, ``simulator``),
   * explicit collective schedules under that model (``schedules``),
-  * a cost-driven planner that picks the best schedule per topology and
-    message size (``planner``),
-  * runnable shard_map realizations of the chosen schedules (``collectives``).
+  * a registry-based collectives API -- ``repro.comm`` -- binding each
+    plannable strategy to its runnable shard_map implementation and
+    selecting the best schedule per topology and message size
+    (``comm.CommContext``).
+
+``core.planner`` and ``core.collectives`` remain as thin deprecation shims
+over ``repro.comm``; new code should use ``repro.comm`` directly::
+
+    from repro import comm
+    ctx = comm.CommContext(tpu_v5e_cluster(n_pods=2))
+    pc = ctx.plan("all_reduce", nbytes, lossy_ok=True)   # callable plan
 """
 
-from .planner import (  # noqa: F401
-    CollectivePolicy,
-    Plan,
-    best_plan,
-    enumerate_plans,
-    make_policy,
-)
 from .topology import (  # noqa: F401
     ClusterTopology,
     LinkTier,
     paper_smp_cluster,
     tpu_v5e_cluster,
 )
+
+# Planner names resolve lazily (PEP 562): ``repro.comm`` itself imports the
+# schedule generators through this package, so the shimmed planner surface
+# must not be pulled in eagerly.
+_PLANNER_NAMES = (
+    "CollectivePolicy",
+    "Plan",
+    "best_plan",
+    "enumerate_plans",
+    "make_policy",
+)
+
+
+def __getattr__(name: str):
+    if name in _PLANNER_NAMES:
+        from . import planner
+
+        return getattr(planner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,222 +1,40 @@
-"""Executable realizations of the planner's collective strategies.
+"""DEPRECATED location for the runnable collectives -- use ``repro.comm``.
 
-Two layers:
+The executable strategy implementations now live in ``repro.comm.impls``
+where each is registered against its schedule generator (one
+``CollectiveSpec`` per (collective, strategy)), and the production pod-tier
+gradient sync lives in ``repro.comm.grad_sync``.  This module re-exports
+the old names so existing imports keep working:
 
-1. ``manual_*`` -- fully-manual shard_map collectives over a ("mach", "core")
-   mesh.  These are the paper's schedules as runnable JAX: the flat variant
-   crosses the machine axis with whole vectors; the hierarchical variants
-   reduce-scatter locally first (Rule 1/2), cross the machine tier with
-   1/core-sized shards on every core's link in parallel (Rule 3), and
-   all-gather locally last.  Verified numerically against jnp references in
-   tests (8 fake devices, subprocess).
-
-2. ``pod_sync_grads`` -- the production gradient-sync stage.  The trainer
-   runs the model under GSPMD on the ("data", "model") axes and keeps the
-   "pod" axis *manual* (shard_map ``axis_names={'pod'}``): the inter-pod DCN
-   tier -- the paper's "global edges" -- is always scheduled explicitly by
-   the planner, never left to the partitioner.
-
-The int8 compression path (``q8``) quantizes blocks of 64 values to int8
-with an f32 scale before crossing the DCN tier: 4.25 bytes -> 1.0625 bytes
-per f32 value, a ~4x cut of the global-tier collective term.  It is lossy
-and opt-in (``lossy_grad_ok``).
+  * ``q8_encode`` / ``q8_decode`` / ``Q8_BLOCK`` -- the int8 block codec,
+  * ``manual_all_reduce_*`` / ``manual_all_to_all_*`` -- runnable schedules,
+  * ``MANUAL_ALL_REDUCE`` -- now a *derived view* of the registry
+    (impl tag -> runnable fn), no longer a hand-maintained dict,
+  * ``pod_sync_grads`` -- the shard_map-region gradient sync.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any
+from repro.comm import executable_view
+from repro.comm.grad_sync import (  # noqa: F401
+    _pod_mean_flat,
+    _pod_mean_q8,
+    pod_sync_grads,
+)
+from repro.comm.impls import (  # noqa: F401
+    Q8_BLOCK,
+    manual_all_gather_flat,
+    manual_all_gather_hier,
+    manual_all_reduce_flat,
+    manual_all_reduce_hier,
+    manual_all_reduce_hier_q8,
+    manual_all_to_all_flat,
+    manual_all_to_all_hier,
+    manual_broadcast_flat,
+    manual_broadcast_hier,
+    q8_decode,
+    q8_decode_sum,
+    q8_encode,
+)
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
-
-Q8_BLOCK = 64
-
-
-# ----------------------------------------------------------------------
-# int8 block codec (for the DCN tier)
-# ----------------------------------------------------------------------
-
-def q8_encode(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
-    """Blockwise symmetric int8 quantization over the last axis.
-
-    Blocks the LAST dim only (padded to a multiple of Q8_BLOCK) and keeps
-    the leading dims -- no giant flatten, so >2^31-element tensors (the
-    stacked 40x8192x22528 mlp grads) stay within int32 index arithmetic.
-    Returns (q [..., nblk, B], scales [..., nblk, 1], last_dim)."""
-    last = x.shape[-1]
-    pad = (-last) % Q8_BLOCK
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    blocks = x.reshape(*x.shape[:-1], -1, Q8_BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
-    scale = jnp.where(scale == 0, 1.0, scale)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32), last
-
-
-def q8_decode(q: jax.Array, scale: jax.Array, last: int, shape, dtype) -> jax.Array:
-    out = (q.astype(jnp.float32) * scale)
-    out = out.reshape(*out.shape[:-2], -1)[..., :last]
-    return out.reshape(shape).astype(dtype)
-
-
-# ----------------------------------------------------------------------
-# Fully-manual two-tier collectives (the paper's schedules, runnable)
-# ----------------------------------------------------------------------
-
-def manual_all_reduce_flat(x: jax.Array, mach_axis: str, core_axis: str) -> jax.Array:
-    """Hierarchy-oblivious all-reduce: one psum over the joint axes.
-
-    Every proc's full vector crosses whatever links the runtime picks --
-    the baseline the paper says existing algorithms default to.
-    """
-    return lax.psum(x, (mach_axis, core_axis))
-
-
-def manual_all_reduce_hier(
-    x: jax.Array, mach_axis: str, core_axis: str
-) -> jax.Array:
-    """The paper's all-reduce (allreduce_hier_par_bw schedule).
-
-    Phase 1 (local):  reduce-scatter over the core axis (Rule 1 reads,
-                      cheap tier).
-    Phase 2 (global): all-reduce of the 1/c shard over the machine axis --
-                      every core drives its machine's external links with a
-                      distinct shard simultaneously (Rule 3).
-    Phase 3 (local):  all-gather over the core axis (Rule 1 write).
-    """
-    c = lax.axis_size(core_axis)
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % c
-    flat = jnp.pad(flat, (0, pad))
-    s = lax.psum_scatter(flat, core_axis, scatter_dimension=0, tiled=True)
-    s = lax.psum(s, mach_axis)
-    full = lax.all_gather(s, core_axis, axis=0, tiled=True)
-    return full[: x.size].reshape(x.shape)
-
-
-def manual_all_reduce_hier_q8(
-    x: jax.Array, mach_axis: str, core_axis: str
-) -> jax.Array:
-    """Hierarchical all-reduce with int8-compressed global tier.
-
-    The machine-tier exchange moves int8 payload + f32 block scales instead
-    of full-precision values (lossy; gradient-sync use only).
-    """
-    c = lax.axis_size(core_axis)
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % c
-    flat = jnp.pad(flat, (0, pad))
-    s = lax.psum_scatter(flat, core_axis, scatter_dimension=0, tiled=True)
-    q, scale, last = q8_encode(s)
-    # Sum of per-machine dequantized contributions: gather both and reduce
-    # locally (machine count is small; payload on the wire is compressed).
-    qg = lax.all_gather(q, mach_axis, axis=0, tiled=False)
-    sg = lax.all_gather(scale, mach_axis, axis=0, tiled=False)
-    deq = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
-    s = q8_decode(deq / 1.0, jnp.ones_like(sg[0]), last, s.shape, s.dtype)
-    full = lax.all_gather(s, core_axis, axis=0, tiled=True)
-    return full[: x.size].reshape(x.shape)
-
-
-def manual_all_to_all_flat(
-    x: jax.Array, mach_axis: str, core_axis: str
-) -> jax.Array:
-    """Flat all-to-all over the joint (mach, core) axes.
-
-    x: [P, ...] where P = n_mach * n_core; chunk j goes to global proc j.
-    """
-    # split the leading dim over both axes: [M, C, ...]
-    n_mach = lax.axis_size(mach_axis)
-    n_core = lax.axis_size(core_axis)
-    xm = x.reshape(n_mach, n_core, *x.shape[1:])
-    xm = lax.all_to_all(xm, mach_axis, split_axis=0, concat_axis=0, tiled=False)
-    xm = lax.all_to_all(xm, core_axis, split_axis=1, concat_axis=1, tiled=False)
-    return xm.reshape(n_mach * n_core, *x.shape[1:])
-
-
-def manual_all_to_all_hier(
-    x: jax.Array, mach_axis: str, core_axis: str
-) -> jax.Array:
-    """Kumar-style two-tier all-to-all (alltoall_hier_par schedule).
-
-    Phase 1: local all-to-all consolidates per-destination-machine bundles
-             onto the egress cores (cheap tier).
-    Phase 2: one machine-tier all-to-all of consolidated bundles, all egress
-             links in parallel (Rule 3).
-    Phase 3: local all-to-all scatters received bundles to their final cores
-             (Rule 1 writes in the model; an ICI shuffle on TPU).
-
-    Same bytes as flat on the global tier but M-1 consolidated transfers per
-    machine instead of P-1 small ones, and no duplicate DCN crossings.
-    """
-    n_mach = lax.axis_size(mach_axis)
-    n_core = lax.axis_size(core_axis)
-    payload = x.shape[1:]
-    xm = x.reshape(n_mach, n_core, *payload)  # [dst_mach, dst_core, ...]
-    # Global phase: one machine-tier exchange of consolidated bundles --
-    # each core crosses the DCN exactly once per destination machine
-    # (consolidation; Rule 3 keeps every core's link busy simultaneously).
-    xm = lax.all_to_all(xm, mach_axis, split_axis=0, concat_axis=0, tiled=True)
-    # now [src_mach, dst_core, ...]; rows came from (src_mach, my_core)
-    # Local phase: core-tier shuffle to final destinations (cheap tier;
-    # a shared-memory write in the paper's model, an ICI shuffle on TPU).
-    xm = lax.all_to_all(xm, core_axis, split_axis=1, concat_axis=0, tiled=True)
-    # now [src_core * src_mach, 1, ...] -- reorder to source-major layout
-    xm = xm.reshape(n_core, n_mach, *payload)
-    xm = jnp.swapaxes(xm, 0, 1)
-    return xm.reshape(n_mach * n_core, *payload)
-
-
-MANUAL_ALL_REDUCE = {
-    "flat": manual_all_reduce_flat,
-    "hier": manual_all_reduce_hier,
-    "hier_bw": manual_all_reduce_hier,      # same runnable schedule
-    "hier_q8": manual_all_reduce_hier_q8,
-    "hier_bw_q8": manual_all_reduce_hier_q8,
-}
-
-
-# ----------------------------------------------------------------------
-# Production pod-tier gradient sync
-# ----------------------------------------------------------------------
-
-def _pod_mean_flat(g: jax.Array, pod_axis: str, n_pods: int) -> jax.Array:
-    return lax.psum(g, pod_axis) / n_pods
-
-
-def _pod_mean_q8(g: jax.Array, pod_axis: str, n_pods: int) -> jax.Array:
-    q, scale, n = q8_encode(g)
-    qg = lax.all_gather(q, pod_axis, axis=0, tiled=False)
-    sg = lax.all_gather(scale, pod_axis, axis=0, tiled=False)
-    acc = jnp.sum(qg.astype(jnp.float32) * sg, axis=0) / n_pods
-    return q8_decode(acc, jnp.ones_like(sg[0]), n, g.shape, g.dtype)
-
-
-def pod_sync_grads(
-    grads: Any, strategy: str, pod_axis: str = "pod"
-) -> Any:
-    """Average gradients across pods (the DCN tier), planner-chosen strategy.
-
-    Called inside a ``shard_map(..., axis_names={pod_axis})`` region: the
-    'data'/'model' axes stay GSPMD-auto, so each leaf here is the pod-local
-    gradient, still sharded over the intra-pod mesh.  Because the trainer
-    FSDP-shards parameters over 'data', each chip's leaf shard is distinct,
-    and this psum is exactly the paper's parallel-egress exchange: 256
-    cross-pod pairs each moving 1/256th of the gradient simultaneously.
-
-    strategy:
-      'flat'    -- psum full-precision shards across pods.
-      'q8'      -- int8-compress shards before crossing the DCN tier (lossy).
-    """
-    n_pods = lax.axis_size(pod_axis)
-    if strategy == "flat":
-        f = functools.partial(_pod_mean_flat, pod_axis=pod_axis, n_pods=n_pods)
-    elif strategy == "q8":
-        f = functools.partial(_pod_mean_q8, pod_axis=pod_axis, n_pods=n_pods)
-    else:
-        raise ValueError(f"unknown pod sync strategy {strategy!r}")
-    return jax.tree.map(f, grads)
+MANUAL_ALL_REDUCE = executable_view("all_reduce")

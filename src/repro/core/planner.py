@@ -1,148 +1,41 @@
-"""Cost-model-driven collective planning.
+"""DEPRECATED free-function planner surface -- use ``repro.comm``.
 
-The planner is the paper's punchline: given a topology and a collective, it
-enumerates candidate schedules (flat / hierarchical-leader / the paper's
-parallel-egress hierarchical), costs each under the round-based model, and
-returns the argmin.  The runtime (``core.collectives``) consumes the chosen
-plan's ``impl`` tag to pick the matching shard_map implementation.
+The planning logic lives in ``repro.comm.context`` (``CommContext`` /
+``PlannedCollective``), backed by the strategy registry that binds every
+plannable strategy to its runnable implementation (or marks it model-only).
+This module re-exports the old names so existing callers and tests keep
+working:
 
-Costing exploits that every generator's round-based time is exactly affine in
-the message size m (each op's bytes is an integer multiple of m):
-``t(m) = A + B*m``.  We evaluate the schedule at two message sizes once per
-(topology, collective, strategy) and cache the coefficients, so planning is
-O(1) per query even for 512-chip topologies.
+  * ``Plan``, ``enumerate_plans``, ``best_plan`` -- same semantics; ``Plan``
+    gained ``model_only`` and ``root`` fields, and ``Plan.impl`` is None for
+    model-only strategies instead of a dangling tag.
+  * ``CollectivePolicy`` / ``make_policy`` -- unchanged dataclass, now built
+    on the registry-backed planner.
+  * ``Q8_GLOBAL_FACTOR`` -- moved to ``repro.comm.impls``.
+
+The seed's ``_IMPL_OF_STRATEGY`` dict is gone: the impl tag is part of each
+``CollectiveSpec`` and validated at import time, so a plan can no longer
+name an implementation that does not exist.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import lru_cache
 
-from . import schedules as S
-from .simulator import simulate_rounds, validate
+from repro.comm import (  # noqa: F401  (re-exported legacy surface)
+    Plan,
+    Q8_GLOBAL_FACTOR,
+    best_plan,
+    enumerate_plans,
+)
 from .topology import ClusterTopology
-
-# Executable implementations living in core.collectives, keyed by impl tag.
-_IMPL_OF_STRATEGY = {
-    "flat": "flat",
-    "hier_seq": "hier_seq",
-    "hier_par": "hier",
-    "hier_par_bw": "hier_bw",
-    "hier_par_bw_q8": "hier_bw_q8",
-}
-
-# Quantized-DCN variant: global-tier bytes shrink by this factor (fp32 ->
-# int8 values + per-block scales).  Applied to all_reduce only (gradient
-# sync); lossy, so the planner reports it separately and the runtime only
-# selects it when the caller opts in.
-Q8_GLOBAL_FACTOR = 0.2656  # 1/4 payload + 1/64-block fp32 scales
-
-
-@dataclass(frozen=True)
-class Plan:
-    collective: str
-    strategy: str
-    impl: str
-    nbytes: float
-    t_rounds: float
-    n_rounds: int
-    global_bytes: float
-    local_bytes: float
-    lossy: bool = False
-
-    def speedup_vs(self, other: "Plan") -> float:
-        return other.t_rounds / self.t_rounds
-
-
-def _scale_global_bytes(sched: S.Schedule, factor: float) -> S.Schedule:
-    out = S.Schedule(
-        sched.name + "_q8", sched.collective, sched.topo, sched.nbytes,
-        root=sched.root,
-    )
-    for rnd in sched.rounds:
-        nr = out.new_round()
-        for op in rnd.ops:
-            if isinstance(op, S.Send) and not sched.topo.co_located(op.src, op.dst):
-                nr.add(dataclasses.replace(op, nbytes=op.nbytes * factor))
-            else:
-                nr.add(op)
-    return out
-
-
-@lru_cache(maxsize=4096)
-def _affine_cost(
-    topo: ClusterTopology, collective: str, strategy: str, root: int
-) -> tuple:
-    """(A, B, n_rounds, gB, lB) with t(m) = A + B*m, global/local bytes = m*(gB, lB)."""
-    lossy = strategy.endswith("_q8")
-    base = strategy[:-3] if lossy else strategy
-    m1, m2 = 1024.0, 2048.0
-
-    def mk(m):
-        sched = S.build(topo, collective, base, m, root=root, payloads=False)
-        if lossy:
-            sched = _scale_global_bytes(sched, Q8_GLOBAL_FACTOR)
-        return sched
-
-    s1, s2 = mk(m1), mk(m2)
-    validate(s1)  # non-strict: flat schedules may oversubscribe NICs
-    t1, t2 = simulate_rounds(s1, check=False), simulate_rounds(s2, check=False)
-    B = (t2 - t1) / (m2 - m1)
-    A = t1 - B * m1
-    return (A, B, s1.n_rounds, s1.total_global_bytes() / m1, s1.total_local_bytes() / m1)
-
-
-def available_strategies(collective: str, lossy_ok: bool = False) -> list:
-    out = list(S.GENERATORS[collective].keys())
-    if collective == "all_reduce" and lossy_ok:
-        out.append("hier_par_bw_q8")
-    return out
-
-
-def enumerate_plans(
-    topo: ClusterTopology,
-    collective: str,
-    nbytes: float,
-    root: int = 0,
-    lossy_ok: bool = False,
-) -> list:
-    """All candidate plans for a collective, sorted by modelled time."""
-    plans = []
-    for strat in available_strategies(collective, lossy_ok):
-        A, B, n_rounds, gB, lB = _affine_cost(topo, collective, strat, root)
-        plans.append(
-            Plan(
-                collective=collective,
-                strategy=strat,
-                impl=_IMPL_OF_STRATEGY[strat],
-                nbytes=nbytes,
-                t_rounds=A + B * nbytes,
-                n_rounds=n_rounds,
-                global_bytes=gB * nbytes,
-                local_bytes=lB * nbytes,
-                lossy=strat.endswith("_q8"),
-            )
-        )
-    plans.sort(key=lambda p: p.t_rounds)
-    return plans
-
-
-def best_plan(
-    topo: ClusterTopology,
-    collective: str,
-    nbytes: float,
-    root: int = 0,
-    lossy_ok: bool = False,
-) -> Plan:
-    return enumerate_plans(topo, collective, nbytes, root, lossy_ok)[0]
 
 
 @dataclass(frozen=True)
 class CollectivePolicy:
     """The planner's decisions for one training/serving configuration.
 
-    Consumed by ``train.steps`` / ``core.collectives`` to pick the gradient
+    Consumed by ``train.steps`` / ``repro.comm`` to pick the gradient
     sync path and the MoE dispatch path.
     """
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Iterable
+from typing import Iterable
 
 from .topology import ClusterTopology
 
@@ -807,33 +807,14 @@ def alltoall_hier_par(
 
 
 # ----------------------------------------------------------------------
-# Registry used by the planner
+# Registry bridge
 # ----------------------------------------------------------------------
-
-GENERATORS: dict[str, dict[str, Callable]] = {
-    "broadcast": {
-        "flat": bcast_flat_binomial,
-        "hier_seq": bcast_hier_seq,
-        "hier_par": bcast_hier_par,
-    },
-    "gather": {
-        "flat": gather_flat_binomial,
-        "hier_par": gather_hier_par,
-    },
-    "all_gather": {
-        "flat": allgather_flat_ring,
-        "hier_par": allgather_hier_par,
-    },
-    "all_reduce": {
-        "flat": allreduce_flat_ring,
-        "hier_par": allreduce_hier_par,
-        "hier_par_bw": allreduce_hier_par_bw,
-    },
-    "all_to_all": {
-        "flat": alltoall_flat_pairwise,
-        "hier_par": alltoall_hier_par,
-    },
-}
+#
+# The generator functions above are *bound* to strategies (and to their
+# runnable twins) in the ``repro.comm`` registry -- the single source of
+# truth.  ``GENERATORS`` survives as a derived, read-only view for legacy
+# callers; it is resolved lazily (PEP 562) to keep this module importable
+# without pulling in jax through ``repro.comm.impls``.
 
 
 def build(
@@ -844,7 +825,17 @@ def build(
     root: int = 0,
     payloads: bool = True,
 ) -> Schedule:
-    gen = GENERATORS[collective][strategy]
-    if collective in ("broadcast", "gather"):
-        return gen(topo, m, root=root, payloads=payloads)
-    return gen(topo, m, payloads=payloads)
+    """Build the schedule for a registered (collective, strategy) pair."""
+    from repro import comm
+
+    return comm.get_spec(collective, strategy).build_schedule(
+        topo, m, root=root, payloads=payloads
+    )
+
+
+def __getattr__(name: str):
+    if name == "GENERATORS":
+        from repro import comm
+
+        return comm.generators_view()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

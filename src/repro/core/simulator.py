@@ -33,7 +33,6 @@ postcondition (who must know what).
 
 from __future__ import annotations
 
-import heapq
 import math
 from collections import defaultdict
 from dataclasses import dataclass

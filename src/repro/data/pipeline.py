@@ -14,7 +14,6 @@ per-host infeed).
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import numpy as np

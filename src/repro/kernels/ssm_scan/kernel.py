@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed upstream: TPUCompilerParams (pinned jax) -> CompilerParams (newer)
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _ssd_kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, o_ref, state_scr, *, q):
     ic = pl.program_id(2)
@@ -103,7 +107,7 @@ def ssd_scan(
         out_specs=pl.BlockSpec((1, 1, q, P), lambda b, h, ic: (b, h, ic, 0)),
         out_shape=jax.ShapeDtypeStruct((Bt, H, Sp, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -63,7 +63,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
                 kw["policy"] = policy
         cell = specs.build_cell(cfg, shape, mesh, **kw)
         rec["meta"] = cell.meta
-        with jax.set_mesh(mesh):
+        # jax.set_mesh only exists on newer jax; Mesh is itself a context
+        # manager on the pinned version.
+        mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+        with mesh_ctx:
             jitted = jax.jit(
                 cell.fn,
                 in_shardings=cell.in_shardings,
@@ -77,6 +80,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # pinned jax returns a one-element list of dicts; newer returns a dict
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         rec["lower_s"] = round(t_lower, 1)
         rec["compile_s"] = round(t_compile, 1)
         rec["memory"] = {

@@ -7,10 +7,8 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import lm

@@ -7,6 +7,7 @@ laptop-sized host).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -109,6 +110,13 @@ def _pod_axes(mesh) -> str | None:
 def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
                pod_sync="flat", accum=None, remat=None,
                policy="default") -> Cell:
+    """Build one train cell.
+
+    ``pod_sync`` may be 'flat', 'q8', or 'auto' -- 'auto' defers the DCN
+    wire format to ``repro.comm``'s cost model (planned per this model's
+    gradient bytes; opts into the lossy q8 path when compression wins).
+    The resolved format is recorded in ``meta['pod_sync']``.
+    """
     cfg = effective_cfg(cfg, shape)
     pol = make_policy_for(cfg, mesh, variant=policy)
     pod_axis = _pod_axes(mesh)
@@ -124,6 +132,13 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
         accum_dtype=over.get("accum_dtype", "float32"),
         model_in_batch=pol.fold_model,
     )
+    # Resolve 'auto' once, here: the step is built from the concrete format
+    # and meta records exactly what the compiled step runs.
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    pod_sync = train_steps.resolve_pod_sync(
+        cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
+    )
+    tcfg = dataclasses.replace(tcfg, pod_sync=pod_sync)
     ocfg = adamw.AdamWConfig(moment_dtype=over.get("moments", "float32"))
     step, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
 

@@ -7,7 +7,6 @@ exchange is the psum_scatter the paper's Rule-3 schedule expects.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 

@@ -8,7 +8,7 @@ dry-run cells lower exactly this ``decode_step``.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,39 @@
+"""shard_map compatibility across jax versions.
+
+Newer jax exposes ``jax.shard_map`` with a ``check_vma`` flag; the pinned
+version only has ``jax.experimental.shard_map.shard_map`` with the older
+``check_rep`` spelling of the same knob.  Call sites use this wrapper so
+they read like the modern API either way.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(name) -> int:
+    """Static mesh-axis size inside a shard_map region.
+
+    ``lax.axis_size`` only exists on newer jax; ``lax.psum`` of a Python
+    scalar constant-folds to the axis size (a plain int) on the pinned
+    version.
+    """
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -16,10 +16,11 @@ wrap it with the usual 1F1B schedule.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from .compat import shard_map
 
 
 def pipeline_apply(stage_fn, stage_weights, microbatches, mesh, n_stage: int):
@@ -54,7 +55,7 @@ def pipeline_apply(stage_fn, stage_weights, microbatches, mesh, n_stage: int):
         # the final stage emits microbatch t-(n_stage-1) at time t
         return ys[n_stage - 1:]
 
-    res = jax.shard_map(
+    res = shard_map(
         body,
         mesh=mesh,
         in_specs=(P("pipe"), P()),

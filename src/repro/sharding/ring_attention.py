@@ -19,10 +19,11 @@ from __future__ import annotations
 import functools
 import math
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from .compat import axis_size, shard_map
 
 NEG_INF = -1e30
 
@@ -56,7 +57,7 @@ def _ring_body(q, k, v, axis_name: str, causal: bool):
     B, S, H, Dh = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     scale = 1.0 / math.sqrt(Dh)
     qh = q.reshape(B, S, Hkv, G, Dh)
@@ -93,7 +94,7 @@ def ring_attention(q, k, v, mesh, axis_name: str = "data",
     with the same sequence sharding.
     """
     spec = P(None, axis_name, None, None)
-    f = jax.shard_map(
+    f = shard_map(
         functools.partial(_ring_body, axis_name=axis_name, causal=causal),
         mesh=mesh,
         in_specs=(spec, spec, spec),

@@ -16,7 +16,6 @@ without touching model code.
 
 from __future__ import annotations
 
-import dataclasses
 import re
 from dataclasses import dataclass
 

@@ -18,8 +18,6 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 

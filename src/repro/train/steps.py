@@ -16,26 +16,29 @@ Three pod modes (the paper-vs-baseline axis of this framework):
                   or int8-compressed (q8) where only int8 payloads + f32
                   block scales cross the pod seam.
 
+The pod-tier wire formats and their planner live in ``repro.comm``: the
+combiners here are ``comm.pod_combine_flat`` / ``comm.pod_combine_q8``, and
+``pod_sync="auto"`` lets the cost model pick the format per gradient size
+(``comm.select_pod_sync``) -- the registry guarantees the pick is runnable.
+
 (Implementation note: an earlier version used shard_map(axis_names={'pod'})
 for the manual tier; XLA 0.8's SPMD partitioner check-fails on gather /
 reshard ops under partial-manual subgroups, so the pod dim is expressed via
 vmap + sharding constraints instead -- same collectives in the compiled HLO,
-no crashing path.  The shard_map collectives in core.collectives remain the
+no crashing path.  The shard_map collectives in repro.comm remain the
 reference implementations and are exercised by multi-device tests.)
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives as coll
+from repro import comm
+from repro.core.topology import V5E_CHIPS_PER_POD
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -48,7 +51,8 @@ class TrainConfig:
     remat: str = "nothing"       # see lm.REMAT_POLICIES
     aux_weight: float = 0.01
     pod_mode: str = "none"       # none | gspmd | manual
-    pod_sync: str = "flat"       # flat | q8   (manual mode only)
+    pod_sync: str = "flat"       # flat | q8 | auto   (manual mode only;
+    #                              auto = let repro.comm's planner pick)
     use_kernel: bool = True
     n_pods: int = 1
     # bf16 halves the gradient-accumulator HBM for the 314B single-pod cell
@@ -140,7 +144,7 @@ def _accum_grads(loss_fn, params, batch, accum: int,
 
 
 # ----------------------------------------------------------------------
-# Pod-tier gradient combine (manual mode)
+# Pod-tier gradient combine (manual mode; wire formats in repro.comm)
 # ----------------------------------------------------------------------
 
 def _constrain_tree(tree, spec_tree):
@@ -152,46 +156,38 @@ def _constrain_tree(tree, spec_tree):
     return jax.tree.map(c, tree, spec_tree, is_leaf=lambda x: x is None)
 
 
-def pod_combine_flat(gpod, n_pods: int):
-    """Full-precision mean over the pod dim.
+# Re-exported for compatibility; implementations live in repro.comm.grad_sync.
+pod_combine_flat = comm.pod_combine_flat
+pod_combine_q8 = comm.pod_combine_q8
 
-    Because parameters (hence per-pod grads) are FSDP-sharded over 'data',
-    each chip's shard is distinct and this reduce is the paper's Rule-3
-    parallel-egress exchange: 256 cross-pod pairs each move 1/256th of the
-    gradient concurrently.
+
+def resolve_pod_sync(
+    cfg: ModelConfig,
+    tcfg: "TrainConfig",
+    n_pods: int,
+    chips_per_pod: int | None = None,
+) -> str:
+    """Resolve ``pod_sync='auto'`` through the cost model.
+
+    Plans a DCN-tier all-reduce of this model's per-chip FSDP gradient
+    shard (f32 bytes / chips in one pod -- pass ``chips_per_pod`` from the
+    actual mesh; defaults to the production v5e pod size) and returns the
+    chosen wire format; 'auto' opts into the lossy q8 path when the model
+    says compression wins.
     """
-    return jax.tree.map(lambda g: jnp.mean(g, axis=0), gpod)
-
-
-def pod_combine_q8(gpod, n_pods: int, gspecs):
-    """int8-compressed DCN exchange (lossy, opt-in).
-
-    Per-pod shards quantize locally; only int8 payload + f32 block scales
-    are replicated across pods (the sharding constraint pins the transfer),
-    then dequantize + average locally.  The quantized tensors keep each
-    leaf's own intra-pod sharding (gspecs = P('pod', *param_spec)); the only
-    resharding is the pod-dim gather of int8 + scales.
-    """
-    def combine(g, gspec):
-        q, s, last = jax.vmap(coll.q8_encode)(g)   # [pods, ..., nblk, 64]
-        entries = list(gspec)
-        while len(entries) < g.ndim:
-            entries.append(None)
-
-        def pin(x, pod_entry):
-            sp = P(pod_entry, *entries[1:], None)
-            try:
-                return jax.lax.with_sharding_constraint(x, sp)
-            except (ValueError, RuntimeError, TypeError):
-                return x
-        q = pin(pin(q, "pod"), None)
-        s = pin(pin(s, "pod"), None)
-        deq = jnp.sum(q.astype(jnp.float32) * s, axis=0) / n_pods
-        deq = deq.reshape(*deq.shape[:-2], -1)[..., : g.shape[-1]]
-        return deq.reshape(g.shape[1:]).astype(g.dtype)
-
-    return jax.tree.map(combine, gpod, gspecs,
-                        is_leaf=lambda x: isinstance(x, P))
+    if tcfg.pod_sync != "auto":
+        if tcfg.pod_sync not in comm.POD_SYNC_FORMATS:
+            raise ValueError(
+                f"unknown pod_sync {tcfg.pod_sync!r}; expected one of "
+                f"{comm.POD_SYNC_FORMATS + ('auto',)}"
+            )
+        return tcfg.pod_sync
+    if n_pods <= 1 or tcfg.pod_mode != "manual":
+        return "flat"
+    if chips_per_pod is None:
+        chips_per_pod = V5E_CHIPS_PER_POD
+    grad_bytes = cfg.param_count() * 4.0 / chips_per_pod
+    return comm.select_pod_sync(n_pods, grad_bytes, lossy_ok=True)
 
 
 def make_train_step(
@@ -207,6 +203,9 @@ def make_train_step(
     """
     loss_fn = make_loss_fn(cfg, tcfg)
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    pod_sync = resolve_pod_sync(
+        cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
+    )
 
     def step_body(params, opt_state, batch):
         if tcfg.pod_mode == "manual" and n_pods > 1:
@@ -231,10 +230,10 @@ def make_train_step(
                 is_leaf=lambda x: isinstance(x, P),
             )
             gpod = _constrain_tree(gpod, gspecs)
-            if tcfg.pod_sync == "q8":
-                grads = pod_combine_q8(gpod, n_pods, gspecs)
+            if pod_sync == "q8":
+                grads = comm.pod_combine_q8(gpod, n_pods, gspecs)
             else:
-                grads = pod_combine_flat(gpod, n_pods)
+                grads = comm.pod_combine_flat(gpod, n_pods)
             loss, ce, aux = jnp.mean(losses), jnp.mean(ces), jnp.mean(auxs)
         else:
             loss, ce, aux, grads = _accum_grads(

@@ -1,0 +1,89 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The tier-1 environment does not ship hypothesis; rather than skip the
+property tests entirely (or crash collection, as the seed did), this
+module degrades ``@given`` to a fixed sweep over each strategy's boundary
+and midpoint samples.  With hypothesis available the real library is used
+(see the try/except at the importers).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+_MAX_COMBOS = 24
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+class strategies:  # noqa: N801  (mirrors `hypothesis.strategies` usage)
+    @staticmethod
+    def integers(min_value, max_value):
+        mid = (min_value + max_value) // 2
+        vals = sorted({min_value, mid, max_value})
+        return _Strategy(vals)
+
+    @staticmethod
+    def floats(min_value, max_value):
+        mid = (min_value + max_value) / 2.0
+        return _Strategy([min_value, mid, max_value])
+
+    @staticmethod
+    def sampled_from(options):
+        return _Strategy(list(options))
+
+
+def given(*sargs, **skwargs):
+    """Run the wrapped test over a bounded cartesian sweep of samples."""
+
+    def deco(fn):
+        if skwargs:
+            names = list(skwargs)
+            pools = [skwargs[n].samples for n in names]
+        else:
+            names = None
+            pools = [s.samples for s in sargs]
+        total = 1
+        for p in pools:
+            total *= len(p)
+        if total <= _MAX_COMBOS:
+            combos = list(itertools.product(*pools))
+        else:
+            # Evenly spaced mixed-radix sample of the full product, so every
+            # pool's boundary/mid values appear (a plain islice would pin the
+            # leading pools to their first sample).
+            combos = []
+            for i in range(_MAX_COMBOS):
+                idx = (i * total) // _MAX_COMBOS
+                combo = []
+                for p in reversed(pools):
+                    idx, r = divmod(idx, len(p))
+                    combo.append(p[r])
+                combos.append(tuple(reversed(combo)))
+
+        # NOTE: no functools.wraps -- pytest must see a zero-arg signature,
+        # not the sample parameters (it would hunt for fixtures named after
+        # them).
+        def wrapper():
+            for combo in combos:
+                if names is not None:
+                    fn(**dict(zip(names, combo)))
+                else:
+                    fn(*combo)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -1,7 +1,5 @@
 """Checkpointing + fault-tolerance behaviour."""
 
-import json
-import shutil
 from pathlib import Path
 
 import jax

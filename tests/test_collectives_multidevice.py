@@ -1,9 +1,15 @@
 """Multi-device collective tests (8 fake CPU devices via subprocess).
 
-These run the executable paper schedules (core.collectives) and the
-pod-mode train steps on a (2 mach x 4 core) / (2 pod x 2 data x 2 model)
-mesh and check numerics.  Subprocesses are required because the device
-count must be fixed before jax initializes.
+These run the executable paper schedules (repro.comm) and the pod-mode
+train steps on a (2 mach x 4 core) / (2 pod x 2 data x 2 model) mesh and
+check numerics.  Subprocesses are required because the device count must
+be fixed before jax initializes.
+
+The collective cases are *registry-driven*: the subprocess iterates every
+registered executable (collective, strategy) pair for its collective --
+including the broadcast / all_gather impls the registry redesign added --
+and checks each against its jnp/numpy reference, so newly registered
+strategies are covered automatically instead of hand-enumerated.
 """
 
 import os
@@ -15,6 +21,8 @@ from pathlib import Path
 import pytest
 
 REPO = Path(__file__).resolve().parent.parent
+
+COLLECTIVE_REFS = ["all_reduce", "all_to_all", "all_gather", "broadcast"]
 
 
 def run_py(body: str) -> str:
@@ -29,48 +37,124 @@ def run_py(body: str) -> str:
     return out.stdout
 
 
-def test_manual_collectives_match_references():
+# Shared harness: plan every registered executable strategy of one
+# collective through CommContext on the topology mirroring the device
+# mesh, execute the PlannedCollective inside shard_map, compare to the
+# reference.  (ctx.plan(...)() round-trip is exercised at the end.)
+HARNESS = """
+import jax, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro import comm
+from repro.core.topology import paper_smp_cluster
+
+COLLECTIVE = {collective!r}
+mesh = jax.make_mesh((2, 4), ("mach", "core"))
+topo = paper_smp_cluster(n_machines=2, cores=4, nics=2)
+ctx = comm.CommContext(topo)
+rng = np.random.RandomState(0)
+
+def execute(pc, arr):
+    f = shard_map(pc, mesh=mesh, in_specs=P(("mach", "core")),
+                  out_specs=P(("mach", "core")))
+    return np.asarray(jax.jit(f)(arr))
+
+def reference(collective, x, root=0):
+    blocks = x.reshape(8, -1, *x.shape[1:])  # per-proc shards
+    if collective == "all_reduce":
+        return blocks.sum(axis=0, keepdims=True).repeat(8, 0).reshape(x.shape)
+    if collective == "broadcast":
+        return np.tile(blocks[root], (8,) + (1,) * (x.ndim - 1))
+    if collective == "all_gather":
+        return np.tile(x, (8,) + (1,) * (x.ndim - 1))
+    raise ValueError(collective)
+
+strategies = [s for c, s in comm.executable_pairs() if c == COLLECTIVE]
+assert strategies, f"no executable strategies registered for {{COLLECTIVE}}"
+
+if COLLECTIVE == "all_to_all":
+    x = np.arange(8 * 8 * 4, dtype=np.float32).reshape(64, 4)
+    want = np.transpose(x.reshape(8, 8, 4), (1, 0, 2)).reshape(64, 4)
+    for strat in strategies:
+        pc = comm.PlannedCollective(
+            plan=comm.plan_for_spec(topo, comm.get_spec(COLLECTIVE, strat),
+                                    x.nbytes / 8),
+            spec=comm.get_spec(COLLECTIVE, strat),
+            mach_axis="mach", core_axis="core")
+        got = execute(pc, x)
+        assert np.array_equal(got, want), (strat, got)
+        print(COLLECTIVE, strat, "ok")
+else:
+    x = rng.randn(8, 64, 16).astype(np.float32)
+    roots = [0, 5] if COLLECTIVE == "broadcast" else [0]
+    for strat in strategies:
+        spec = comm.get_spec(COLLECTIVE, strat)
+        for root in roots:
+            pc = comm.PlannedCollective(
+                plan=comm.plan_for_spec(topo, spec, x.nbytes / 8, root=root),
+                spec=spec, mach_axis="mach", core_axis="core")
+            got = execute(pc, x)
+            want = reference(COLLECTIVE, x, root=root)
+            tol = 2e-2 if spec.lossy else 1e-5
+            denom = max(np.abs(want).max(), 1e-9)
+            err = np.abs(got - want).max() / denom
+            assert err < tol, (strat, root, err)
+            print(COLLECTIVE, strat, "root", root, "ok", err)
+
+# the acceptance-criteria round trip: plan -> execute -> matches reference
+kw = dict(lossy_ok=True) if COLLECTIVE == "all_reduce" else {{}}
+pc = ctx.plan(COLLECTIVE, 1e5, **kw)
+arr = (np.arange(8 * 8 * 4, dtype=np.float32).reshape(64, 4)
+       if COLLECTIVE == "all_to_all" else rng.randn(8, 64, 16).astype(np.float32))
+got = execute(pc, arr)
+if COLLECTIVE == "all_to_all":
+    want = np.transpose(arr.reshape(8, 8, 4), (1, 0, 2)).reshape(64, 4)
+else:
+    want = reference(COLLECTIVE, arr, root=pc.plan.root)
+tol = 2e-2 if pc.plan.lossy else 1e-5
+assert np.abs(got - want).max() / max(np.abs(want).max(), 1e-9) < tol
+print("ctx.plan round-trip ok:", pc.describe())
+"""
+
+
+@pytest.mark.parametrize("collective", COLLECTIVE_REFS)
+def test_registered_executables_match_references(collective):
+    """Every registered executable (collective, strategy) pair runs and
+    matches its reference on the 8-device (2 mach x 4 core) mesh."""
+    print(run_py(HARNESS.format(collective=collective)))
+
+
+def test_legacy_manual_all_reduce_view():
+    """The deprecated MANUAL_ALL_REDUCE dict still resolves (derived from
+    the registry) and its entries run."""
     print(run_py("""
-        import jax, functools, numpy as np
+        import functools
+        import jax, numpy as np
+        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.core import collectives as C
 
         mesh = jax.make_mesh((2, 4), ("mach", "core"))
         x = np.random.RandomState(0).randn(8, 64, 16).astype(np.float32)
         ref = x.sum(axis=0, keepdims=True).repeat(8, 0)
-
-        def run(fn):
-            f = jax.shard_map(
-                functools.partial(fn, mach_axis="mach", core_axis="core"),
-                mesh=mesh, in_specs=P(("mach", "core")),
-                out_specs=P(("mach", "core")))
-            return np.asarray(jax.jit(f)(x))
-
-        for name, tol in [("flat", 1e-6), ("hier", 1e-5), ("hier_bw", 1e-5),
-                          ("hier_q8", 2e-2), ("hier_bw_q8", 2e-2)]:
-            out = run(C.MANUAL_ALL_REDUCE[name])
+        assert set(C.MANUAL_ALL_REDUCE) == {
+            "flat", "hier", "hier_bw", "hier_q8", "hier_bw_q8"}
+        for name, tol in [("flat", 1e-6), ("hier", 1e-5), ("hier_q8", 2e-2)]:
+            fn = functools.partial(C.MANUAL_ALL_REDUCE[name],
+                                   mach_axis="mach", core_axis="core")
+            f = shard_map(fn, mesh=mesh, in_specs=P(("mach", "core")),
+                          out_specs=P(("mach", "core")))
+            out = np.asarray(jax.jit(f)(x))
             err = np.abs(out - ref).max() / np.abs(ref).max()
             assert err < tol, (name, err)
-            print("all_reduce", name, "ok", err)
-
-        # all-to-all: global block transpose
-        x2 = np.arange(8 * 8 * 4, dtype=np.float32).reshape(64, 4)
-        want = np.transpose(x2.reshape(8, 8, 4), (1, 0, 2)).reshape(64, 4)
-        for fn in (C.manual_all_to_all_flat, C.manual_all_to_all_hier):
-            f = jax.shard_map(
-                functools.partial(fn, mach_axis="mach", core_axis="core"),
-                mesh=mesh, in_specs=P(("mach", "core")),
-                out_specs=P(("mach", "core")))
-            got = np.asarray(jax.jit(f)(x2))
-            assert np.array_equal(got, want), fn.__name__
-            print("all_to_all", fn.__name__, "ok")
+            print("legacy all_reduce", name, "ok", err)
     """))
 
 
 def test_q8_codec_roundtrip_accuracy():
     print(run_py("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core.collectives import q8_encode, q8_decode
+        from repro.comm import q8_encode, q8_decode, q8_decode_sum
         rng = np.random.RandomState(0)
         for shape in [(100,), (64, 64), (3, 7, 11)]:
             x = jnp.asarray(rng.randn(*shape).astype(np.float32)) * 10
@@ -78,13 +162,22 @@ def test_q8_codec_roundtrip_accuracy():
             y = q8_decode(q, s, n, x.shape, x.dtype)
             err = float(jnp.max(jnp.abs(x - y)) / jnp.max(jnp.abs(x)))
             assert err < 1e-2, (shape, err)
+            # the shared gathered-decode path agrees with decode on a
+            # stack of one, and averages a stack of two
+            y2 = q8_decode_sum(q[None], s[None], n, x.shape, x.dtype)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y2))
+            ym = q8_decode_sum(jnp.stack([q, q]), jnp.stack([s, s]), n,
+                               x.shape, x.dtype, scale=0.5)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(ym),
+                                       rtol=1e-6)
         print("q8 codec ok")
     """))
 
 
 def test_pod_modes_agree_numerically():
     """gspmd (flat baseline) and manual (paper schedule) multi-pod train
-    steps produce the same parameters; q8 stays close."""
+    steps produce the same parameters; q8 stays close; 'auto' resolves to
+    a runnable wire format via the comm planner."""
     print(run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -105,6 +198,11 @@ def test_pod_modes_agree_numerically():
                                     cfg.vocab_size)
         batch = {"tokens": tokens, "labels": tokens}
 
+        resolved = T.resolve_pod_sync(
+            cfg, T.TrainConfig(pod_mode="manual", pod_sync="auto"), 2)
+        assert resolved in ("flat", "q8"), resolved
+        print("auto pod_sync resolves to", resolved)
+
         outs = {}
         for mode, sync in [("gspmd", "flat"), ("manual", "flat"),
                            ("manual", "q8")]:
@@ -112,7 +210,8 @@ def test_pod_modes_agree_numerically():
                                  use_kernel=False)
             step, bspecs = T.make_train_step(
                 cfg, tcfg, adamw.AdamWConfig(lr=1e-2), mesh, pol)
-            with jax.set_mesh(mesh):
+            mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+            with mesh_ctx:
                 n = lambda s: jax.tree.map(
                     lambda sp: NamedSharding(mesh, sp), s,
                     is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,170 @@
+"""The registry-based collectives API: one source of truth, validated.
+
+Covers the api_redesign invariants:
+
+  * the registry is consistent (validated at import of ``repro.comm``);
+  * every ``Plan.impl`` the planner can emit resolves to a callable (the
+    regression for the seed's dangling ``hier_seq`` impl tag);
+  * the legacy dicts (``schedules.GENERATORS``, ``MANUAL_ALL_REDUCE``) are
+    derived views of the registry, not independent state;
+  * ``CommContext.plan`` only returns runnable plans by default, and
+    model-only plans refuse to execute.
+"""
+
+import pytest
+
+from repro import comm
+from repro.core import collectives as legacy_coll
+from repro.core import schedules as S
+from repro.core.planner import best_plan, enumerate_plans, make_policy
+from repro.core.topology import paper_smp_cluster, tpu_v5e_cluster
+
+TOPOS = [
+    paper_smp_cluster(n_machines=4, cores=4, nics=2),
+    paper_smp_cluster(n_machines=2, cores=8, nics=4),
+    tpu_v5e_cluster(n_pods=2),
+]
+
+
+def test_registry_validates_at_import():
+    # repro.comm ran validate_registry() on import; re-run explicitly.
+    comm.validate_registry()
+    assert set(comm.collectives()) == {
+        "broadcast", "gather", "all_gather", "all_reduce", "all_to_all"
+    }
+
+
+def test_every_plannable_strategy_executable_or_model_only():
+    for sp in comm.specs():
+        assert sp.executable or sp.model_only, (sp.collective, sp.strategy)
+        if sp.executable:
+            assert callable(sp.impl) and sp.impl_tag
+        else:
+            assert sp.impl_tag is None
+
+
+@pytest.mark.parametrize("topo", TOPOS, ids=["smp4x4", "smp2x8", "tpu2pod"])
+@pytest.mark.parametrize(
+    "coll", ["broadcast", "gather", "all_gather", "all_reduce", "all_to_all"]
+)
+def test_every_emitted_plan_impl_resolves(topo, coll):
+    """Regression for the seed bug: ``_IMPL_OF_STRATEGY`` mapped 'hier_seq'
+    to an impl tag with no runnable implementation.  Now every plan either
+    resolves to a callable or is explicitly marked model-only."""
+    for plan in enumerate_plans(topo, coll, 1e6, lossy_ok=True):
+        if plan.model_only:
+            assert plan.impl is None
+        else:
+            fn = comm.resolve_impl(coll, plan.impl)
+            assert callable(fn), (coll, plan.strategy, plan.impl)
+
+
+def test_unknown_impl_tag_rejected():
+    with pytest.raises(comm.RegistryError):
+        comm.resolve_impl("all_reduce", "hier_seq")
+    with pytest.raises(comm.RegistryError):
+        comm.get_spec("all_reduce", "definitely_not_registered")
+
+
+def test_impl_less_spec_requires_model_only_marker():
+    with pytest.raises(comm.RegistryError):
+        comm.CollectiveSpec(
+            collective="broadcast", strategy="oops",
+            schedule=S.bcast_flat_binomial,
+        )
+    with pytest.raises(comm.RegistryError):
+        comm.CollectiveSpec(
+            collective="broadcast", strategy="oops",
+            schedule=S.bcast_flat_binomial, impl=lambda x: x,
+            impl_tag="oops", model_only=True,
+        )
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(comm.RegistryError):
+        comm.register_model_only(
+            "broadcast", "hier_seq", schedule=S.bcast_hier_seq,
+        )
+
+
+def test_legacy_dicts_are_derived_views():
+    gens = S.GENERATORS
+    view = comm.generators_view()
+    assert gens == view
+    # seed contents preserved exactly (lossless strategies)
+    assert set(gens) == set(comm.collectives())
+    assert set(gens["all_reduce"]) == {"flat", "hier_par", "hier_par_bw"}
+    assert set(gens["broadcast"]) == {"flat", "hier_seq", "hier_par"}
+    # MANUAL_ALL_REDUCE: impl tag -> callable, straight from the registry
+    mar = legacy_coll.MANUAL_ALL_REDUCE
+    assert mar == comm.executable_view("all_reduce")
+    assert set(mar) == {"flat", "hier", "hier_bw", "hier_q8", "hier_bw_q8"}
+    assert all(callable(f) for f in mar.values())
+
+
+def test_schedules_build_round_trips_through_registry():
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    for coll, strats in S.GENERATORS.items():
+        for strat in strats:
+            sched = S.build(topo, coll, strat, 2048.0, payloads=False)
+            assert sched.collective == coll
+            assert sched.nbytes == 2048.0
+
+
+def test_comm_context_plan_is_executable_by_default():
+    ctx = comm.CommContext(tpu_v5e_cluster(n_pods=2))
+    for coll in ["broadcast", "all_gather", "all_reduce", "all_to_all"]:
+        pc = ctx.plan(coll, 1e6, lossy_ok=(coll == "all_reduce"))
+        assert pc.executable
+        assert callable(pc.spec.impl)
+        assert pc.plan.impl == pc.spec.impl_tag
+        assert "rounds" in pc.describe()
+    # gather has no runnable impl yet: executable planning must refuse
+    # loudly rather than emit a dangling tag ...
+    with pytest.raises(comm.RegistryError):
+        ctx.plan("gather", 1e6)
+    # ... while model-level planning still works for analysis
+    pcs = ctx.plans("gather", 1e6)
+    assert pcs and all(p.plan.model_only for p in pcs)
+    with pytest.raises(comm.ModelOnlyStrategyError):
+        pcs[0](None)
+
+
+def test_lossy_needs_opt_in():
+    ctx = comm.CommContext(tpu_v5e_cluster(n_pods=8))
+    strict = ctx.plans("all_reduce", 4e9, lossy_ok=False)
+    assert not any(p.plan.lossy for p in strict)
+    loose = ctx.plans("all_reduce", 4e9, lossy_ok=True)
+    assert any(p.plan.lossy for p in loose)
+    assert loose[0].plan.t_rounds <= strict[0].plan.t_rounds
+
+
+def test_cost_table_covers_all_strategies():
+    ctx = comm.CommContext(paper_smp_cluster(n_machines=4, cores=4, nics=2))
+    rows = ctx.cost_table("all_reduce", 1e6)
+    ts = [r["t_us"] for r in rows]
+    assert ts == sorted(ts)  # best-first
+    assert {r["strategy"] for r in rows} >= {
+        "flat", "hier_par", "hier_par_bw", "hier_par_bw_q8"
+    }
+    assert all(r["executable"] for r in rows)  # all_reduce is fully runnable
+    bc = ctx.cost_table("broadcast", 1e6)
+    assert any(not r["executable"] for r in bc)  # hier_seq is model-only
+
+
+def test_planner_shims_still_work():
+    topo = tpu_v5e_cluster(n_pods=2)
+    pol = make_policy(topo, grad_bytes=1e9, moe_bytes=1e6, lossy_grad_ok=True)
+    assert pol.grad_sync.collective == "all_reduce"
+    assert pol.grad_sync_impl == pol.grad_sync.impl
+    assert pol.moe_all_to_all.collective == "all_to_all"
+    assert best_plan(topo, "all_reduce", 1e9).strategy in {
+        "hier_par", "hier_par_bw"
+    }
+
+
+def test_select_pod_sync_shapes():
+    assert comm.select_pod_sync(1, 1e9) == "flat"
+    choice = comm.select_pod_sync(2, 4e9, lossy_ok=True)
+    assert choice in ("flat", "q8")
+    assert comm.select_pod_sync(2, 4e9, lossy_ok=False) == "flat"

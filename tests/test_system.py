@@ -13,9 +13,8 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import ALIASES, ARCH_IDS, SHAPES, all_cells, get_config
+from repro.configs import ALIASES, ARCH_IDS, all_cells, get_config
 from repro.data.pipeline import DataConfig, make_pipeline
 from repro.models import lm
 from repro.models.config import reduced_for_smoke
