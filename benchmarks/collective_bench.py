@@ -1,0 +1,156 @@
+"""Collective micro-benchmark + calibration: the BENCH_comm.json artifact.
+
+Times every executable registry strategy on the live device mesh across a
+message-size sweep (plus a single-machine sub-mesh sweep that isolates the
+local tier), fits the cost model to the measurements (``comm.calibrate``),
+and writes a machine-readable trajectory artifact with measured AND modelled
+times per (collective, strategy, nbytes) -- the preset model, the fitted
+model, and the crossover table showing where the planner's choice matches
+the empirically best strategy.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m benchmarks.collective_bench --quick
+
+(The device-count flag is auto-applied when unset, so the bare command works
+on a single-CPU box too.)  ``--save-calibration`` additionally writes the
+fit as a calibration JSON that ``--pod-sync auto`` / ``$REPRO_CALIBRATION``
+consume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+QUICK_SIZES = [1024.0, 16384.0, 262144.0]
+FULL_SIZES = [256.0, 4096.0, 65536.0, 1048576.0, 8388608.0]
+
+
+def _ensure_devices(n: int) -> None:
+    """Force n fake host devices BEFORE jax initializes (no-op if set)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer sizes/repeats")
+    ap.add_argument("--out", default="BENCH_comm.json")
+    ap.add_argument("--mach", type=int, default=2,
+                    help="machine-axis extent of the probe mesh")
+    ap.add_argument("--core", type=int, default=4,
+                    help="core-axis extent of the probe mesh")
+    ap.add_argument("--degree", type=int, default=2,
+                    help="modelled parallel-egress links per machine")
+    ap.add_argument("--sizes", default="",
+                    help="comma-separated per-proc byte sizes (overrides "
+                         "--quick/full presets)")
+    ap.add_argument("--repeats", type=int, default=0,
+                    help="timing repeats per probe (0 = preset)")
+    ap.add_argument("--save-calibration", default="",
+                    help="also write the fitted calibration JSON here")
+    args = ap.parse_args(argv)
+
+    _ensure_devices(args.mach * args.core)
+    import jax
+
+    from repro import comm
+    from repro.core.topology import paper_smp_cluster
+
+    if len(jax.devices()) < args.mach * args.core:
+        raise SystemExit(
+            f"need {args.mach * args.core} devices, have {len(jax.devices())}"
+            " (XLA_FLAGS was set before jax initialized?)"
+        )
+    sizes = (
+        [float(s) for s in args.sizes.split(",")] if args.sizes
+        else (QUICK_SIZES if args.quick else FULL_SIZES)
+    )
+    repeats = args.repeats or (3 if args.quick else 10)
+
+    mesh = jax.make_mesh((args.mach, args.core), ("mach", "core"))
+    preset = paper_smp_cluster(
+        n_machines=args.mach, cores=args.core, nics=args.degree
+    )
+    print(f"[bench] probing {args.mach}x{args.core} mesh "
+          f"({jax.devices()[0].platform}), sizes={sizes}, repeats={repeats}")
+    calib = comm.calibrate(
+        preset, mesh, sizes, repeats=repeats, verbose=True,
+        meta=dict(
+            quick=args.quick,
+            platform=jax.devices()[0].platform,
+            n_devices=len(jax.devices()),
+        ),
+    )
+    ctx_fit = comm.CommContext(calib.topology)
+    ctx_preset = comm.CommContext(preset)
+    val_fit = ctx_fit.validate_against_measurements(calib.measurements)
+    val_preset = ctx_preset.validate_against_measurements(calib.measurements)
+
+    rows = []
+    for ms, vf, vp in zip(calib.measurements, val_fit, val_preset):
+        rows.append(
+            dict(
+                collective=ms.collective,
+                strategy=ms.strategy,
+                nbytes=ms.nbytes,
+                shape=list(ms.shape) if ms.shape else None,
+                t_measured_us=ms.t_measured * 1e6,
+                t_model_preset_us=vp["t_modelled"] * 1e6,
+                t_model_fitted_us=vf["t_modelled"] * 1e6,
+                rel_error_preset=vp["rel_error"],
+                rel_error_fitted=vf["rel_error"],
+            )
+        )
+    crossover = [
+        dict(r, shape=list(r["shape"]) if r["shape"] else None)
+        for r in ctx_fit.crossover_table(calib.measurements)
+    ]
+
+    def mean_abs(rows_, key):
+        return sum(abs(r[key]) for r in rows_) / max(len(rows_), 1)
+
+    artifact = dict(
+        bench="collective_bench",
+        quick=args.quick,
+        calibration=calib.to_dict(),
+        rows=rows,
+        crossover=crossover,
+        summary=dict(
+            n_probes=len(rows),
+            mean_abs_rel_error_preset=mean_abs(rows, "rel_error_preset"),
+            mean_abs_rel_error_fitted=mean_abs(rows, "rel_error_fitted"),
+            crossover_agreement=(
+                sum(r["agree"] for r in crossover) / max(len(crossover), 1)
+            ),
+            mean_regret=(
+                sum(r["regret"] for r in crossover) / max(len(crossover), 1)
+            ),
+        ),
+    )
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    if args.save_calibration:
+        comm.save_calibration(calib, args.save_calibration)
+        print(f"[bench] calibration -> {args.save_calibration}")
+
+    s = artifact["summary"]
+    print(f"[bench] {s['n_probes']} probes -> {args.out}")
+    print(f"[bench] model |rel err|: preset="
+          f"{s['mean_abs_rel_error_preset']:.2f} "
+          f"fitted={s['mean_abs_rel_error_fitted']:.2f}")
+    print(f"[bench] crossover agreement={s['crossover_agreement']:.2f} "
+          f"mean_regret={s['mean_regret']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,9 @@ from __future__ import annotations
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # the benchmarks package itself
+sys.path.insert(0, str(_ROOT / "src"))
 
 
 def main() -> None:

@@ -24,6 +24,20 @@ The old free-function surface (``repro.core.make_policy`` / ``best_plan`` /
 """
 
 from . import impls as _impls  # noqa: F401  (registers all strategies)
+from .calibrate import (  # noqa: F401
+    CALIBRATION_ENV,
+    CalibrationResult,
+    FitResult,
+    Measurement,
+    calibrate,
+    calibrated_cluster,
+    fit_calibration,
+    fit_topology,
+    load_calibration,
+    measure_strategy,
+    probe_collectives,
+    save_calibration,
+)
 from .context import (  # noqa: F401
     CommContext,
     ModelOnlyStrategyError,
@@ -38,6 +52,7 @@ from .grad_sync import (  # noqa: F401
     pod_combine_flat,
     pod_combine_q8,
     pod_sync_grads,
+    pod_sync_topology,
     select_pod_sync,
 )
 from .impls import (  # noqa: F401

@@ -1,0 +1,553 @@
+"""Empirical calibration: fit the cost model from measured collectives.
+
+The planner's constants (``LinkTier`` alpha/beta, ``write_cost``) were
+hand-specified presets until now, so plans were never confronted with
+reality.  This module closes the loop, following the methodology of "Fast
+Tuning of Intra-Cluster Collective Communications" (cs/0408034): time the
+*executable* registry strategies across a sweep of message sizes on the real
+device mesh, then least-squares-fit the model parameters so the round model
+reproduces the measurements.
+
+The workflow is probe -> fit -> plan::
+
+    topo0 = paper_smp_cluster(n_machines=2, cores=4, nics=2)  # shape prior
+    mesh = jax.make_mesh((2, 4), ("mach", "core"))
+    ms = probe_collectives(topo0, mesh, sizes=[1e3, 1e4, 1e5])
+    calib = fit_calibration(ms, topo0)           # CalibrationResult
+    save_calibration(calib, "calibration.json")
+    ctx = CommContext.from_calibration(calib)    # planner now trusts data
+    ctx.crossover_table(ms)                      # did the model choose well?
+
+Fitting exploits that ``simulate_rounds`` is *piecewise linear* in the
+parameter vector (local.alpha, local.beta, global.alpha, global.beta,
+write_cost, assemble_cost): each round costs its most expensive op, and for
+a fixed per-round argmax the total is an exact linear function of the
+parameters (``simulator.cost_features``).  We iterate weighted linear least
+squares, re-linearizing at each iterate, until the argmax structure is
+self-consistent -- a Gauss-Newton scheme that converges in a handful of
+steps.  ``assemble_cost`` is perfectly collinear with the tier alphas (every
+transfer pays exactly one of each), so it is held fixed (default 0) and the
+fitted alphas absorb it.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.simulator import cost_features, simulate_rounds
+from repro.core.topology import ClusterTopology
+
+from . import registry
+from .context import plan_for_spec
+
+CALIBRATION_VERSION = 1
+
+# Environment variable naming a calibration JSON; when set, ``pod_sync="auto"``
+# and other planner consumers use fitted parameters instead of presets.
+CALIBRATION_ENV = "REPRO_CALIBRATION"
+
+# Feasibility floors applied during the fit (pre-projection): solutions are
+# clipped here so a noisy column can't drive a parameter negative.
+_FLOORS = np.array([1e-9, 1e-12, 1e-9, 1e-12, 1e-9])
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One timed probe: a (collective, strategy) at message size ``nbytes``.
+
+    nbytes:      the schedule's message size m -- bytes per proc (for
+                 all_to_all: bytes per (src, dst) chunk).
+    t_measured:  wall-clock seconds (min over repeats).
+    t_modelled:  round-model prediction under the topology used at probe
+                 time (the preset), for trajectory tracking.
+    shape:       (n_machines, procs_per_machine, degree) of the cluster the
+                 probe ran on, or None for the calibration's full shape.
+                 Single-machine probes (shape[0] == 1) are pure local-tier
+                 exercises -- they pin alpha_local and write_cost, which
+                 contribute only a few percent of any cluster-wide total.
+    """
+
+    collective: str
+    strategy: str
+    nbytes: float
+    t_measured: float
+    t_modelled: float | None = None
+    root: int = 0
+    shape: tuple[int, int, int] | None = None
+
+    def to_dict(self) -> dict:
+        return dict(
+            collective=self.collective,
+            strategy=self.strategy,
+            nbytes=self.nbytes,
+            t_measured=self.t_measured,
+            t_modelled=self.t_modelled,
+            root=self.root,
+            shape=list(self.shape) if self.shape else None,
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Measurement":
+        d = dict(d)
+        if d.get("shape"):
+            d["shape"] = tuple(d["shape"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class FitResult:
+    """Outcome of one least-squares fit."""
+
+    topology: ClusterTopology
+    params: tuple  # raw fitted vector, pre-projection (6 floats)
+    rel_rmse: float  # root-mean-square relative residual of the fit
+    n_iterations: int
+    n_measurements: int
+
+
+@dataclass(frozen=True)
+class CalibrationResult:
+    """A fitted topology plus the evidence it was fitted from."""
+
+    topology: ClusterTopology
+    measurements: tuple[Measurement, ...]
+    rel_rmse: float
+    n_iterations: int
+    meta: dict = field(default_factory=dict, compare=False)
+
+    def to_dict(self) -> dict:
+        t = self.topology
+        return dict(
+            version=CALIBRATION_VERSION,
+            topology=dict(
+                n_machines=t.n_machines,
+                procs_per_machine=t.procs_per_machine,
+                degree=t.degree,
+                local=dict(name=t.local.name, alpha=t.local.alpha,
+                           beta=t.local.beta),
+                global_=dict(name=t.global_.name, alpha=t.global_.alpha,
+                             beta=t.global_.beta),
+                write_cost=t.write_cost,
+                assemble_cost=t.assemble_cost,
+            ),
+            fit=dict(rel_rmse=self.rel_rmse, n_iterations=self.n_iterations),
+            meta=self.meta,
+            measurements=[ms.to_dict() for ms in self.measurements],
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CalibrationResult":
+        if d.get("version") != CALIBRATION_VERSION:
+            raise ValueError(
+                f"unsupported calibration version {d.get('version')!r} "
+                f"(expected {CALIBRATION_VERSION})"
+            )
+        td = d["topology"]
+        topo = ClusterTopology.fitted(
+            td["n_machines"], td["procs_per_machine"], td["degree"],
+            alpha_local=td["local"]["alpha"],
+            beta_local=td["local"]["beta"],
+            alpha_global=td["global_"]["alpha"],
+            beta_global=td["global_"]["beta"],
+            write_cost=td["write_cost"],
+            assemble_cost=td["assemble_cost"],
+            local_name=td["local"]["name"],
+            global_name=td["global_"]["name"],
+        )
+        return cls(
+            topology=topo,
+            measurements=tuple(
+                Measurement.from_dict(m) for m in d.get("measurements", ())
+            ),
+            rel_rmse=d["fit"]["rel_rmse"],
+            n_iterations=d["fit"]["n_iterations"],
+            meta=d.get("meta", {}),
+        )
+
+
+def save_calibration(calib: CalibrationResult, path) -> None:
+    with open(path, "w") as f:
+        json.dump(calib.to_dict(), f, indent=2)
+
+
+def load_calibration(path) -> CalibrationResult:
+    with open(path) as f:
+        return CalibrationResult.from_dict(json.load(f))
+
+
+def calibrated_cluster(
+    calib: CalibrationResult,
+    *,
+    n_machines: int | None = None,
+    procs_per_machine: int | None = None,
+    degree: int | None = None,
+) -> ClusterTopology:
+    """Fitted link tiers transplanted onto a (possibly different) shape.
+
+    Calibration probes run on whatever mesh is available (a 2x4 fake-device
+    box in CI); production plans for 2x256 pods.  Per-link alpha/beta and the
+    shared-memory write cost carry over; the shape does not.
+    """
+    t = calib.topology
+    return ClusterTopology.fitted(
+        n_machines or t.n_machines,
+        procs_per_machine or t.procs_per_machine,
+        degree or t.degree,
+        alpha_local=t.local.alpha,
+        beta_local=t.local.beta,
+        alpha_global=t.global_.alpha,
+        beta_global=t.global_.beta,
+        write_cost=t.write_cost,
+        assemble_cost=t.assemble_cost,
+        local_name=t.local.name,
+        global_name=t.global_.name,
+    )
+
+
+# ----------------------------------------------------------------------
+# Probing: time executable registry strategies on the real device mesh
+# ----------------------------------------------------------------------
+
+def _probe_m(size: float) -> float:
+    """Realizable schedule message size for a target of ``size`` bytes.
+
+    The schedule's m is bytes per proc for the symmetric collectives and
+    bytes per (src, dst) chunk for all_to_all; probes carry whole float32
+    elements, so the target rounds to a multiple of 4.
+    """
+    return max(int(size) // 4, 1) * 4.0
+
+
+def _probe_array(collective: str, m: float, n_procs: int) -> np.ndarray:
+    """float32 probe input of m bytes per proc (per chunk for all_to_all),
+    leading dim sharded over the joint (mach, core) axes."""
+    k = max(int(m) // 4, 1)
+    rng = np.random.RandomState(0)
+    rows = n_procs * n_procs if collective == "all_to_all" else n_procs
+    return rng.randn(rows, k).astype(np.float32)
+
+
+def measure_strategy(
+    spec: registry.CollectiveSpec,
+    mesh,
+    m: float,
+    *,
+    mach_axis: str = "mach",
+    core_axis: str = "core",
+    root: int = 0,
+    repeats: int = 5,
+) -> float:
+    """Wall-clock seconds (min over ``repeats``) for one executable strategy.
+
+    Compiles the strategy's shard_map impl over ``mesh``, runs one warmup
+    call, then times ``repeats`` synchronous calls and returns the minimum
+    (the standard microbenchmark estimator: least-perturbed run).
+    """
+    import functools
+
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if not spec.executable:
+        raise registry.RegistryError(
+            f"{spec.collective}/{spec.strategy} is model-only: cannot probe"
+        )
+    n_procs = int(np.prod(mesh.devices.shape))
+    arr = _probe_array(spec.collective, m, n_procs)
+    kw = dict(mach_axis=mach_axis, core_axis=core_axis)
+    if spec.caps.needs_root:
+        kw["root"] = root
+    fn = functools.partial(spec.impl, **kw)
+    f = jax.jit(
+        shard_map(
+            fn, mesh=mesh,
+            in_specs=P((mach_axis, core_axis)),
+            out_specs=P((mach_axis, core_axis)),
+        )
+    )
+    x = jax.device_put(arr)
+    jax.block_until_ready(f(x))  # compile + warmup
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _probe_stage(
+    topo: ClusterTopology,
+    mesh,
+    sizes,
+    *,
+    collectives,
+    include_lossy: bool,
+    repeats: int,
+    mach_axis: str,
+    core_axis: str,
+    shape,
+    verbose: bool,
+) -> list[Measurement]:
+    out: list[Measurement] = []
+    for spec in registry.specs(executable_only=True,
+                               include_lossy=include_lossy):
+        if collectives is not None and spec.collective not in collectives:
+            continue
+        if not spec.supports(topo):
+            continue
+        for size in sizes:
+            m = _probe_m(size)
+            t = measure_strategy(
+                spec, mesh, m, mach_axis=mach_axis, core_axis=core_axis,
+                repeats=repeats,
+            )
+            modelled = plan_for_spec(topo, spec, m).t_rounds
+            out.append(
+                Measurement(
+                    collective=spec.collective,
+                    strategy=spec.strategy,
+                    nbytes=m,
+                    t_measured=t,
+                    t_modelled=modelled,
+                    shape=shape,
+                )
+            )
+            if verbose:
+                print(
+                    f"[probe] {topo.n_machines}x{topo.procs_per_machine} "
+                    f"{spec.collective}/{spec.strategy} m={m:.0f}B "
+                    f"measured={t * 1e6:.1f}us modelled={modelled * 1e6:.1f}us"
+                )
+    return out
+
+
+def probe_collectives(
+    topo: ClusterTopology,
+    mesh,
+    sizes,
+    *,
+    collectives=None,
+    include_lossy: bool = True,
+    local_stage: bool = True,
+    repeats: int = 5,
+    mach_axis: str = "mach",
+    core_axis: str = "core",
+    verbose: bool = False,
+) -> list[Measurement]:
+    """Time every executable registry strategy across a message-size sweep.
+
+    ``topo`` supplies the model's shape (and the preset prediction recorded
+    in ``t_modelled``); it must mirror ``mesh``'s (mach, core) extents.
+    ``sizes`` are target bytes per proc.
+
+    When ``local_stage`` is set (and the mesh spans more than one machine),
+    a second sweep runs on a single-machine sub-mesh (the first machine's
+    cores).  Those probes exercise only the local tier and the shared-memory
+    write, which cluster-wide totals barely expose -- without them the fit
+    cannot separate alpha_local/write_cost from noise (the tuning papers'
+    per-tier probe methodology).
+    """
+    mm, cc = (dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+              for a in (mach_axis, core_axis))
+    if (topo.n_machines, topo.procs_per_machine) != (mm, cc):
+        raise ValueError(
+            f"topology shape {topo.n_machines}x{topo.procs_per_machine} does "
+            f"not mirror mesh shape {mm}x{cc}"
+        )
+    kw = dict(
+        collectives=collectives, include_lossy=include_lossy,
+        repeats=repeats, mach_axis=mach_axis, core_axis=core_axis,
+        verbose=verbose,
+    )
+    out = _probe_stage(
+        topo, mesh, sizes,
+        shape=(topo.n_machines, topo.procs_per_machine, topo.degree), **kw,
+    )
+    if local_stage and topo.n_machines > 1:
+        from jax.sharding import Mesh
+
+        ax = list(mesh.axis_names)
+        idx = [slice(None)] * mesh.devices.ndim
+        idx[ax.index(mach_axis)] = slice(0, 1)
+        sub_mesh = Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
+        sub_topo = topo.with_(n_machines=1)
+        out += _probe_stage(
+            sub_topo, sub_mesh, sizes,
+            shape=(1, topo.procs_per_machine, topo.degree), **kw,
+        )
+    return out
+
+
+# ----------------------------------------------------------------------
+# Fitting: iterated weighted linear least squares on cost_features
+# ----------------------------------------------------------------------
+
+def fit_topology(
+    measurements,
+    n_machines: int,
+    procs_per_machine: int,
+    degree: int,
+    *,
+    assemble_cost: float = 0.0,
+    include_lossy: bool = False,
+    max_iter: int = 12,
+    tol: float = 1e-4,
+) -> FitResult:
+    """Least-squares-fit per-tier alpha/beta and write_cost from timings.
+
+    Minimizes the *relative* residual sum((model(theta) - t) / t)^2 over
+    theta = (alpha_l, beta_l, alpha_g, beta_g, write_cost); relative
+    weighting keeps microsecond-scale small-message rows (which pin the
+    alphas) from being drowned by millisecond-scale large-message rows
+    (which pin the betas).  ``assemble_cost`` is held fixed (it is exactly
+    collinear with the alphas -- see module docstring).
+
+    Lossy (q8) probes are excluded by default: their wall-clock includes
+    encode/decode compute the wire model doesn't describe.
+    """
+    ms = [
+        m for m in measurements
+        if include_lossy or not registry.get_spec(m.collective, m.strategy).lossy
+    ]
+    if len(ms) < 5:
+        raise ValueError(
+            f"need >= 5 measurements to fit 5 parameters, got {len(ms)}"
+        )
+    # Schedule structure (ops, bytes, rounds) depends only on the cluster
+    # shape, never on the tier parameters -- build once per measurement
+    # (honoring its probe shape), then re-linearize cheaply each iteration.
+    shape_topo = ClusterTopology.fitted(
+        n_machines, procs_per_machine, degree,
+        alpha_local=1e-6, beta_local=1e-9, alpha_global=1e-6, beta_global=1e-9,
+        write_cost=1e-6, assemble_cost=assemble_cost,
+    )
+
+    def topo_of(m: Measurement) -> ClusterTopology:
+        if m.shape is None or m.shape == (n_machines, procs_per_machine, degree):
+            return shape_topo
+        return shape_topo.with_(
+            n_machines=m.shape[0], procs_per_machine=m.shape[1],
+            degree=m.shape[2],
+        )
+
+    def build_all(base: ClusterTopology | None = None):
+        out = []
+        for m in ms:
+            topo_m = topo_of(m)
+            if base is not None:
+                topo_m = base.with_(
+                    n_machines=topo_m.n_machines,
+                    procs_per_machine=topo_m.procs_per_machine,
+                    degree=topo_m.degree,
+                )
+            out.append(
+                registry.get_spec(m.collective, m.strategy).build_schedule(
+                    topo_m, m.nbytes, root=m.root, payloads=False
+                )
+            )
+        return out
+
+    scheds = build_all()
+    t = np.array([m.t_measured for m in ms])
+    wts = 1.0 / np.maximum(t, 1e-12)
+    theta = np.array(shape_topo.param_vector())
+    n_iter = 0
+    for n_iter in range(1, max_iter + 1):
+        F = np.array([cost_features(s, params=tuple(theta)) for s in scheds])
+        rhs = (t - F[:, 5] * assemble_cost) * wts
+        sol, *_ = np.linalg.lstsq(F[:, :5] * wts[:, None], rhs, rcond=None)
+        sol = np.maximum(sol, _FLOORS)
+        # Project onto the model's feasible region (Rule 2: local at least
+        # as fast as global) EVERY iteration, not just at the end: the
+        # argmax re-linearization is only self-correcting from a feasible
+        # iterate -- an infeasible one (local "slower" than global) labels
+        # the wrong op as each round's bottleneck and the iteration can
+        # converge to a spurious fixed point.
+        sol[0] = min(sol[0], sol[2])
+        sol[1] = min(sol[1], sol[3])
+        new = np.concatenate([sol, [assemble_cost]])
+        delta = float(np.max(np.abs(new - theta) / np.maximum(theta, 1e-12)))
+        theta = new
+        if delta < tol:
+            break
+    topo = ClusterTopology.fitted(
+        n_machines, procs_per_machine, degree,
+        alpha_local=theta[0], beta_local=theta[1],
+        alpha_global=theta[2], beta_global=theta[3],
+        write_cost=theta[4], assemble_cost=assemble_cost,
+    )
+    # Report the residual of the *projected* topology (what callers plan
+    # with), not the raw iterate.
+    pred = np.array([
+        simulate_rounds(s, check=False) for s in build_all(base=topo)
+    ])
+    rel_rmse = float(np.sqrt(np.mean(((pred - t) / t) ** 2)))
+    return FitResult(
+        topology=topo,
+        params=tuple(float(x) for x in theta),
+        rel_rmse=rel_rmse,
+        n_iterations=n_iter,
+        n_measurements=len(ms),
+    )
+
+
+def fit_calibration(
+    measurements,
+    shape_like: ClusterTopology,
+    *,
+    assemble_cost: float = 0.0,
+    include_lossy: bool = False,
+    meta: dict | None = None,
+) -> CalibrationResult:
+    """``fit_topology`` + provenance packaging for persistence."""
+    fit = fit_topology(
+        measurements,
+        shape_like.n_machines,
+        shape_like.procs_per_machine,
+        shape_like.degree,
+        assemble_cost=assemble_cost,
+        include_lossy=include_lossy,
+    )
+    return CalibrationResult(
+        topology=fit.topology,
+        measurements=tuple(measurements),
+        rel_rmse=fit.rel_rmse,
+        n_iterations=fit.n_iterations,
+        meta=dict(meta or {}, n_fit_measurements=fit.n_measurements),
+    )
+
+
+def calibrate(
+    topo: ClusterTopology,
+    mesh,
+    sizes=(1024.0, 16384.0, 262144.0),
+    *,
+    repeats: int = 5,
+    collectives=None,
+    mach_axis: str = "mach",
+    core_axis: str = "core",
+    verbose: bool = False,
+    meta: dict | None = None,
+) -> CalibrationResult:
+    """One-call probe -> fit on the current device mesh.
+
+    ``topo`` is the shape prior (its tier constants are only used for the
+    ``t_modelled`` trajectory column); the returned calibration carries a
+    topology of the same shape with *fitted* parameters.
+    """
+    ms = probe_collectives(
+        topo, mesh, sizes, collectives=collectives, repeats=repeats,
+        mach_axis=mach_axis, core_axis=core_axis, verbose=verbose,
+    )
+    base_meta = dict(
+        mesh_shape=list(mesh.devices.shape),
+        sizes=[float(s) for s in sizes],
+        repeats=repeats,
+    )
+    return fit_calibration(ms, topo, meta=dict(base_meta, **(meta or {})))

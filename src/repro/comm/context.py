@@ -22,7 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from functools import lru_cache
 
-from repro.core.simulator import simulate_rounds, validate
+from repro.core.simulator import affine_time
 from repro.core.topology import ClusterTopology
 
 from . import registry
@@ -64,13 +64,15 @@ def _affine_cost(
 ) -> tuple:
     """(A, B, n_rounds, gB, lB) with t(m) = A + B*m, global/local bytes = m*(gB, lB)."""
     spec = registry.get_spec(collective, strategy)
-    m1, m2 = 1024.0, 2048.0
-    s1 = spec.build_schedule(topo, m1, root=root, payloads=False)
-    s2 = spec.build_schedule(topo, m2, root=root, payloads=False)
-    validate(s1)  # non-strict: flat schedules may oversubscribe NICs
-    t1, t2 = simulate_rounds(s1, check=False), simulate_rounds(s2, check=False)
-    B = (t2 - t1) / (m2 - m1)
-    A = t1 - B * m1
+    m1, built = 1024.0, {}
+
+    def build(m: float):
+        if m not in built:
+            built[m] = spec.build_schedule(topo, m, root=root, payloads=False)
+        return built[m]
+
+    A, B = affine_time(build, m1=m1)
+    s1 = build(m1)
     return (A, B, s1.n_rounds, s1.total_global_bytes() / m1, s1.total_local_bytes() / m1)
 
 
@@ -259,6 +261,135 @@ class CommContext:
                 lossy_ok=lossy_ok, executable_only=executable_only,
             )
         ]
+
+    # ------------------------------------------------------------------
+    # calibration: build from measurements, confront the model with them
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_calibration(
+        cls,
+        source,
+        *,
+        n_machines: int | None = None,
+        procs_per_machine: int | None = None,
+        degree: int | None = None,
+        mach_axis: str = "mach",
+        core_axis: str = "core",
+    ) -> "CommContext":
+        """Context over an empirically fitted topology.
+
+        ``source`` is a ``calibrate.CalibrationResult`` or a path to a
+        calibration JSON written by ``calibrate.save_calibration``.  The
+        shape overrides transplant the fitted link tiers onto a different
+        cluster shape (e.g. calibrate on a 2x4 fake mesh, plan for 2x256
+        pods).
+        """
+        from .calibrate import (
+            CalibrationResult,
+            calibrated_cluster,
+            load_calibration,
+        )
+
+        calib = (
+            source
+            if isinstance(source, CalibrationResult)
+            else load_calibration(source)
+        )
+        topo = calibrated_cluster(
+            calib,
+            n_machines=n_machines,
+            procs_per_machine=procs_per_machine,
+            degree=degree,
+        )
+        return cls(topo, mach_axis=mach_axis, core_axis=core_axis)
+
+    def _topo_for(self, ms) -> ClusterTopology:
+        """This context's parameters on the measurement's probe shape."""
+        shape = getattr(ms, "shape", None)
+        topo = self.topo
+        if shape and tuple(shape) != (
+            topo.n_machines, topo.procs_per_machine, topo.degree
+        ):
+            topo = topo.with_(
+                n_machines=shape[0], procs_per_machine=shape[1],
+                degree=shape[2],
+            )
+        return topo
+
+    def validate_against_measurements(self, measurements) -> list[dict]:
+        """Modelled-vs-measured error per probe, under THIS context's model.
+
+        ``measurements`` is an iterable of ``calibrate.Measurement`` (or any
+        object with collective/strategy/nbytes/t_measured attributes).  Each
+        probe is modelled on its own recorded shape with this context's tier
+        parameters.  ``rel_error`` is signed: positive means the model
+        over-predicts.
+        """
+        rows = []
+        for ms in measurements:
+            spec = registry.get_spec(ms.collective, ms.strategy)
+            p = plan_for_spec(
+                self._topo_for(ms), spec, ms.nbytes,
+                root=getattr(ms, "root", 0),
+            )
+            rows.append(
+                dict(
+                    collective=ms.collective,
+                    strategy=ms.strategy,
+                    nbytes=ms.nbytes,
+                    shape=getattr(ms, "shape", None),
+                    t_measured=ms.t_measured,
+                    t_modelled=p.t_rounds,
+                    rel_error=(p.t_rounds - ms.t_measured) / ms.t_measured,
+                )
+            )
+        return rows
+
+    def crossover_table(self, measurements) -> list[dict]:
+        """Empirically best vs model-chosen strategy per (collective, nbytes).
+
+        Buckets the measurements (per probe shape), then reports for each
+        bucket the strategy with the best *measured* time, the strategy THIS
+        context's model ranks first among the measured candidates, and the
+        regret: measured time of the model's pick over the best measured
+        time (1.0 = the model chose optimally, regardless of absolute-time
+        error).
+        """
+        buckets: dict[tuple, list] = {}
+        for ms in measurements:
+            shape = getattr(ms, "shape", None)
+            key = (ms.collective, ms.nbytes, tuple(shape) if shape else None)
+            buckets.setdefault(key, []).append(ms)
+        rows = []
+        for (coll, nbytes, shape), group in sorted(
+            buckets.items(), key=lambda kv: (kv[0][0], kv[0][1], str(kv[0][2]))
+        ):
+            t_model = {
+                ms.strategy: plan_for_spec(
+                    self._topo_for(ms),
+                    registry.get_spec(coll, ms.strategy),
+                    nbytes,
+                    root=getattr(ms, "root", 0),
+                ).t_rounds
+                for ms in group
+            }
+            measured_best = min(group, key=lambda ms: ms.t_measured)
+            model_pick = min(group, key=lambda ms: t_model[ms.strategy])
+            rows.append(
+                dict(
+                    collective=coll,
+                    nbytes=nbytes,
+                    shape=shape,
+                    measured_best=measured_best.strategy,
+                    modelled_best=model_pick.strategy,
+                    agree=measured_best.strategy == model_pick.strategy,
+                    t_measured_best=measured_best.t_measured,
+                    t_measured_of_pick=model_pick.t_measured,
+                    regret=model_pick.t_measured / measured_best.t_measured,
+                )
+            )
+        return rows
 
     def cost_table(
         self,

@@ -26,6 +26,7 @@ is runnable.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any
 
 import jax
@@ -127,20 +128,48 @@ def pod_combine_q8(gpod, n_pods: int, gspecs):
 # Planner-driven selection
 # ----------------------------------------------------------------------
 
+def pod_sync_topology(n_pods: int, calibration: str | None = None):
+    """The topology ``pod_sync="auto"`` plans against.
+
+    Empirically calibrated parameters win over preset constants: an explicit
+    ``calibration`` path, else the file named by the ``REPRO_CALIBRATION``
+    environment variable, else the ``tpu_v5e_cluster`` preset.  Calibrated
+    tiers are transplanted onto the production pod shape (machine = pod).
+    """
+    from repro.core.topology import tpu_v5e_cluster
+
+    preset = tpu_v5e_cluster(n_pods=n_pods)
+    from .calibrate import CALIBRATION_ENV, calibrated_cluster, load_calibration
+
+    path = calibration or os.environ.get(CALIBRATION_ENV)
+    if not path:
+        return preset
+    calib = load_calibration(path)
+    return calibrated_cluster(
+        calib,
+        n_machines=n_pods,
+        procs_per_machine=preset.procs_per_machine,
+        degree=preset.degree,
+    )
+
+
 def select_pod_sync(
-    n_pods: int, grad_bytes: float, lossy_ok: bool = True
+    n_pods: int,
+    grad_bytes: float,
+    lossy_ok: bool = True,
+    calibration: str | None = None,
 ) -> str:
     """Let the cost model pick the pod-sync wire format ('flat' or 'q8').
 
-    Models the DCN tier as the machine tier of a multi-pod v5e cluster and
+    Models the DCN tier as the machine tier of a multi-pod cluster --
+    calibrated from measurements when a calibration file is supplied (or
+    named by ``$REPRO_CALIBRATION``), preset v5e constants otherwise -- and
     plans a gradient all-reduce of ``grad_bytes``; returns 'q8' when the
     best executable plan is the compressed one (only reachable with
     ``lossy_ok``).
     """
     if n_pods <= 1:
         return "flat"
-    from repro.core.topology import tpu_v5e_cluster
-
-    ctx = CommContext(tpu_v5e_cluster(n_pods=n_pods))
+    ctx = CommContext(pod_sync_topology(n_pods, calibration))
     pc = ctx.plan("all_reduce", grad_bytes, lossy_ok=lossy_ok)
     return "q8" if pc.plan.lossy else "flat"

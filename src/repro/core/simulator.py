@@ -144,6 +144,92 @@ def simulate_rounds(sched: Schedule, check: bool = True) -> float:
     return total
 
 
+# ----------------------------------------------------------------------
+# Linear cost decomposition (the calibration interface)
+# ----------------------------------------------------------------------
+
+N_COST_FEATURES = 6  # (alpha_l, beta_l, alpha_g, beta_g, write, assemble)
+
+
+def cost_features(
+    sched: Schedule, params: tuple | None = None
+) -> tuple[float, float, float, float, float, float]:
+    """Decompose ``simulate_rounds`` into a parameter-linear feature vector.
+
+    Returns coefficients ``f`` such that ``dot(f, params) ==
+    simulate_rounds(sched)`` where ``params`` is the topology's
+    ``param_vector()`` -- (local.alpha, local.beta, global.alpha,
+    global.beta, write_cost, assemble_cost).
+
+    The round model is piecewise linear in the parameters: each round costs
+    its most expensive op (times the NIC serialization factor), and *which*
+    op dominates depends on the parameters.  ``params`` selects the
+    linearization point (defaults to ``sched.topo``'s own values); the
+    identity above is exact as long as the per-round argmax doesn't change.
+    ``comm.calibrate`` iterates fit -> re-linearize until it does not.
+    """
+    topo = sched.topo
+    if params is None:
+        params = topo.param_vector()
+    al, bl, ag, bg, w, asm = params
+
+    def op_cost(op) -> float:
+        if isinstance(op, LocalWrite):
+            return w
+        if topo.co_located(op.src, op.dst):
+            return al + op.nbytes * bl + asm
+        return ag + op.nbytes * bg + asm
+
+    feats = [0.0] * N_COST_FEATURES
+    for rnd in sched.rounds:
+        if not rnd.ops:
+            continue
+        best = max(rnd.ops, key=op_cost)
+        mach_out: dict[int, int] = defaultdict(int)
+        mach_in: dict[int, int] = defaultdict(int)
+        has_global = False
+        has_write = False
+        for op in rnd.ops:
+            if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
+                has_global = True
+                mach_out[topo.machine_of(op.src)] += 1
+                mach_in[topo.machine_of(op.dst)] += 1
+            elif isinstance(op, LocalWrite):
+                has_write = True
+        serial = 1
+        for n in list(mach_out.values()) + list(mach_in.values()):
+            serial = max(serial, math.ceil(n / topo.degree))
+        row = [0.0] * N_COST_FEATURES
+        if isinstance(best, LocalWrite):
+            row[4] = 1.0
+        elif topo.co_located(best.src, best.dst):
+            row[0], row[1], row[5] = 1.0, best.nbytes, 1.0
+        else:
+            row[2], row[3], row[5] = 1.0, best.nbytes, 1.0
+        for i in range(N_COST_FEATURES):
+            feats[i] += row[i] * serial
+        if has_global and has_write:
+            feats[4] += 1.0
+    return tuple(feats)
+
+
+def affine_time(build, m1: float = 1024.0,
+                m2: float = 2048.0) -> tuple[float, float]:
+    """(A, B) with round-model time t(m) = A + B*m for a schedule family.
+
+    ``build`` maps a message size to a Schedule (which carries its own
+    topology); every generator's round time is exactly affine in m (each
+    op's bytes is a fixed multiple of m), so two evaluations pin the whole
+    curve and the predicted time for *arbitrary* m is O(1) thereafter.
+    """
+    s1, s2 = build(m1), build(m2)
+    validate(s1)  # non-strict: flat schedules may oversubscribe NICs
+    t1 = simulate_rounds(s1, check=False)
+    t2 = simulate_rounds(s2, check=False)
+    B = (t2 - t1) / (m2 - m1)
+    return t1 - B * m1, B
+
+
 def simulate_async(sched: Schedule, check: bool = True) -> float:
     """Continuous (LogP-style) simulated completion time, seconds.
 

@@ -114,6 +114,70 @@ class ClusterTopology:
     def with_(self, **kw) -> "ClusterTopology":
         return dataclasses.replace(self, **kw)
 
+    # ------------------------------------------------------------------
+    # calibration interface
+    # ------------------------------------------------------------------
+    def param_vector(self) -> tuple[float, float, float, float, float, float]:
+        """The model's free parameters as the canonical fit vector.
+
+        Order matches ``simulator.cost_features`` / ``comm.calibrate``:
+        (local.alpha, local.beta, global.alpha, global.beta, write_cost,
+        assemble_cost).
+        """
+        return (
+            self.local.alpha,
+            self.local.beta,
+            self.global_.alpha,
+            self.global_.beta,
+            self.write_cost,
+            self.assemble_cost,
+        )
+
+    @classmethod
+    def fitted(
+        cls,
+        n_machines: int,
+        procs_per_machine: int,
+        degree: int,
+        *,
+        alpha_local: float,
+        beta_local: float,
+        alpha_global: float,
+        beta_global: float,
+        write_cost: float,
+        assemble_cost: float = 0.0,
+        local_name: str = "local_fit",
+        global_name: str = "global_fit",
+    ) -> "ClusterTopology":
+        """Topology from empirically fitted parameters (``comm.calibrate``).
+
+        Measured fits can come back degenerate (a negative intercept from
+        noise, or a "local" tier that probed slower than the global one on
+        hardware where both tiers share a NIC), so this constructor projects
+        onto the model's feasible region instead of raising: every parameter
+        is floored at a small positive epsilon and the local tier is clamped
+        to be at least as fast as the global tier (Rule 2).
+        """
+        a_g = max(alpha_global, _FIT_ALPHA_FLOOR)
+        b_g = max(beta_global, _FIT_BETA_FLOOR)
+        a_l = min(max(alpha_local, _FIT_ALPHA_FLOOR), a_g)
+        b_l = min(max(beta_local, _FIT_BETA_FLOOR), b_g)
+        return cls(
+            n_machines=n_machines,
+            procs_per_machine=procs_per_machine,
+            degree=degree,
+            local=LinkTier(local_name, alpha=a_l, beta=b_l),
+            global_=LinkTier(global_name, alpha=a_g, beta=b_g),
+            write_cost=max(write_cost, _FIT_ALPHA_FLOOR),
+            assemble_cost=max(assemble_cost, 0.0),
+        )
+
+
+# Feasibility floors for fitted parameters: 1ns startup, 1 byte/ns * 1e3
+# bandwidth ceiling.  Anything below these is measurement noise.
+_FIT_ALPHA_FLOOR = 1e-9
+_FIT_BETA_FLOOR = 1e-12
+
 
 # ----------------------------------------------------------------------
 # Presets

@@ -109,12 +109,14 @@ def _pod_axes(mesh) -> str | None:
 
 def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
                pod_sync="flat", accum=None, remat=None,
-               policy="default") -> Cell:
+               policy="default", calibration="") -> Cell:
     """Build one train cell.
 
     ``pod_sync`` may be 'flat', 'q8', or 'auto' -- 'auto' defers the DCN
     wire format to ``repro.comm``'s cost model (planned per this model's
     gradient bytes; opts into the lossy q8 path when compression wins).
+    ``calibration`` optionally names a ``comm.calibrate`` JSON so that the
+    decision uses parameters fitted on this hardware instead of presets.
     The resolved format is recorded in ``meta['pod_sync']``.
     """
     cfg = effective_cfg(cfg, shape)
@@ -128,6 +130,7 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
         remat=remat if remat is not None else over.get("remat", "nothing"),
         pod_mode=pod_mode,
         pod_sync=pod_sync,
+        calibration=calibration,
         use_kernel=False,          # CPU dry-run lowers the jnp paths
         accum_dtype=over.get("accum_dtype", "float32"),
         model_in_batch=pol.fold_model,

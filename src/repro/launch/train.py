@@ -10,6 +10,7 @@ proves out); on this CPU box it runs reduced configs end-to-end:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -36,11 +37,21 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--remat", default="nothing")
-    ap.add_argument("--pod-sync", default="flat", choices=["flat", "q8"])
+    ap.add_argument("--pod-sync", default="flat",
+                    choices=["flat", "q8", "auto"],
+                    help="pod-tier wire format; 'auto' defers to the cost "
+                         "model (calibrated when --calibration or "
+                         "$REPRO_CALIBRATION names a fit)")
+    ap.add_argument("--calibration", default="",
+                    help="comm.calibrate JSON fitted on this hardware; "
+                         "consumed by --pod-sync auto")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 pod mesh (requires 256 devices)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="explicit pod-axis extent; >1 enables the manual "
+                         "pod-tier sync (pod_sync applies to the DCN seam)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--d-model", type=int, default=0,
                     help="override width (e.g. ~100M-param runs)")
@@ -57,16 +68,40 @@ def main() -> None:
     cfg = cfg.with_(compute_dtype="float32")  # CPU numerics
 
     if args.production_mesh:
-        mesh = make_production_mesh()
+        mesh = make_production_mesh(multi_pod=args.pods > 1)
+        pod_extent = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+        if args.pods > 1 and args.pods != pod_extent:
+            raise SystemExit(
+                f"--pods {args.pods} conflicts with the production mesh's "
+                f"fixed pod extent ({pod_extent})"
+            )
     else:
         n = len(jax.devices())
-        mesh = jax.make_mesh((n, 1), ("data", "model"))
+        if args.pods > 1:
+            if n % args.pods:
+                raise SystemExit(f"--pods {args.pods} does not divide {n} devices")
+            mesh = jax.make_mesh(
+                (args.pods, n // args.pods, 1), ("pod", "data", "model")
+            )
+        else:
+            mesh = jax.make_mesh((n, 1), ("data", "model"))
 
     pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % mesh.devices.shape[-1] == 0)
     tcfg = train_steps.TrainConfig(
         accum_steps=args.accum, remat=args.remat, pod_sync=args.pod_sync,
-        use_kernel=False,
+        pod_mode="manual" if "pod" in mesh.axis_names else "none",
+        use_kernel=False, calibration=args.calibration,
     )
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    resolved_sync = train_steps.resolve_pod_sync(
+        cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
+    )
+    tcfg = dataclasses.replace(tcfg, pod_sync=resolved_sync)
+    if n_pods > 1:
+        print(f"[train] pod_sync={resolved_sync} "
+              f"(requested {args.pod_sync!r}, "
+              f"calibration={args.calibration or '$REPRO_CALIBRATION/preset'})")
+
     ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
     step_fn, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
 

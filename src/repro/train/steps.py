@@ -57,6 +57,10 @@ class TrainConfig:
     n_pods: int = 1
     # bf16 halves the gradient-accumulator HBM for the 314B single-pod cell
     accum_dtype: str = "float32"
+    # path to a comm.calibrate JSON; pod_sync="auto" then plans against the
+    # empirically fitted topology instead of the preset v5e constants
+    # ("" = also honor $REPRO_CALIBRATION, else presets)
+    calibration: str = ""
 
     model_in_batch: bool = False   # fold_model policy: batch over model too
 
@@ -187,7 +191,10 @@ def resolve_pod_sync(
     if chips_per_pod is None:
         chips_per_pod = V5E_CHIPS_PER_POD
     grad_bytes = cfg.param_count() * 4.0 / chips_per_pod
-    return comm.select_pod_sync(n_pods, grad_bytes, lossy_ok=True)
+    return comm.select_pod_sync(
+        n_pods, grad_bytes, lossy_ok=True,
+        calibration=tcfg.calibration or None,
+    )
 
 
 def make_train_step(
