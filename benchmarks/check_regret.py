@@ -1,0 +1,108 @@
+"""CI gate on cost-model strategy-selection regret (BENCH_comm.json).
+
+``collective_bench`` records, per (collective, nbytes, shape) bucket, the
+regret of the model-chosen strategy: measured time of the model's pick over
+the best measured time (1.0 = the model chose optimally).  This script
+distils that into a small persisted summary (``--summary-out``) so the
+bench job's artifacts track regret across commits, and FAILS when the
+fitted model's choices regress beyond the thresholds -- the first step of
+the ROADMAP's "crossover-driven strategy pruning" trajectory.
+
+CPU fake-device timings are dispatch-noise-dominated, so the default
+thresholds are deliberately loose: they catch "the planner now picks a
+strategy that is measurably, repeatedly worse", not microsecond jitter.
+
+    python benchmarks/check_regret.py BENCH_comm.json \\
+        --summary-out BENCH_regret.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def evaluate(artifact: dict, max_mean_regret: float,
+             max_single_regret: float) -> tuple[dict, list[str]]:
+    crossover = artifact.get("crossover", [])
+    summary = artifact.get("summary", {})
+    mean_regret = summary.get(
+        "mean_regret",
+        sum(r["regret"] for r in crossover) / max(len(crossover), 1),
+    )
+    max_regret = max((r["regret"] for r in crossover), default=1.0)
+    worst = max(crossover, key=lambda r: r["regret"], default=None)
+    out = dict(
+        n_buckets=len(crossover),
+        mean_regret=mean_regret,
+        max_regret=max_regret,
+        crossover_agreement=summary.get("crossover_agreement"),
+        worst_bucket=(
+            dict(
+                collective=worst["collective"],
+                nbytes=worst["nbytes"],
+                shape=worst.get("shape"),
+                modelled_best=worst["modelled_best"],
+                measured_best=worst["measured_best"],
+                regret=worst["regret"],
+            )
+            if worst
+            else None
+        ),
+        thresholds=dict(
+            max_mean_regret=max_mean_regret,
+            max_single_regret=max_single_regret,
+        ),
+    )
+    failures = []
+    if not crossover:
+        failures.append("no crossover rows in artifact")
+    if mean_regret > max_mean_regret:
+        failures.append(
+            f"mean regret {mean_regret:.3f} > {max_mean_regret:.3f}"
+        )
+    if max_regret > max_single_regret:
+        failures.append(
+            f"max regret {max_regret:.3f} > {max_single_regret:.3f} "
+            f"(worst: {out['worst_bucket']})"
+        )
+    return out, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("artifact", help="BENCH_comm.json from collective_bench")
+    ap.add_argument("--max-mean-regret", type=float, default=2.0,
+                    help="fail when mean regret across crossover buckets "
+                         "exceeds this factor")
+    ap.add_argument("--max-single-regret", type=float, default=8.0,
+                    help="fail when any single bucket's regret exceeds "
+                         "this factor")
+    ap.add_argument("--summary-out", default="",
+                    help="also persist the regret summary JSON here")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as f:
+        artifact = json.load(f)
+    out, failures = evaluate(
+        artifact, args.max_mean_regret, args.max_single_regret
+    )
+    if args.summary_out:
+        with open(args.summary_out, "w") as f:
+            json.dump(out, f, indent=2)
+    print(
+        f"[regret] {out['n_buckets']} buckets "
+        f"mean={out['mean_regret']:.3f} max={out['max_regret']:.3f} "
+        f"agreement={out['crossover_agreement']}"
+    )
+    if failures:
+        for msg in failures:
+            print(f"[regret] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("[regret] ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -40,6 +40,91 @@ def _ensure_devices(n: int) -> None:
         )
 
 
+def _bench_bucketed_pod_sync(calib, repeats: int, grad_bytes: float):
+    """Measure monolithic vs bucketed pod sync on the live device mesh.
+
+    Every device plays one pod (machine = device, 1 proc, degree 1 -- the
+    shape the probe mesh can actually express); each holds a synthetic
+    gradient tree of ``grad_bytes`` and the four wire formats run through
+    ``comm.pod_sync_grads`` monolithically and at two bucket sizes.  Rows
+    pair the measured wall clock with the pipelined cost model's prediction
+    on the fitted topology, so BENCH_comm.json tracks where bucketing helps
+    in reality vs in the model.
+    """
+    import math
+    import time
+
+    import jax
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro import comm
+    from repro.comm.bucketing import pipelined_time_affine, stage_affine
+    from repro.comm.calibrate import calibrated_cluster
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("pod",))
+    topo = calibrated_cluster(
+        calib, n_machines=n, procs_per_machine=1, degree=1
+    )
+    elems = max(int(grad_bytes) // 4, n * 64)
+    rng = np.random.RandomState(0)
+    # a small tree (not one tensor) so bucketing crosses leaf boundaries
+    tree = {
+        "wa": rng.randn(n, elems // 2).astype(np.float32),
+        "wb": rng.randn(n, elems // 4, 1).astype(np.float32),
+        "wc": rng.randn(n, elems - elems // 2 - elems // 4).astype(
+            np.float32
+        ),
+    }
+    m_bytes = sum(v.nbytes for v in tree.values()) / n
+    rows = []
+    for fmt in comm.POD_SYNC_FORMATS:
+        stages = stage_affine(comm.pod_sync_builder(topo, fmt))
+        for bucket_bytes in (0, int(m_bytes) // 4, int(m_bytes) // 16):
+            f = jax.jit(
+                shard_map(
+                    lambda g, fmt=fmt, bb=bucket_bytes: comm.pod_sync_grads(
+                        g, fmt, "pod", bucket_bytes=bb
+                    ),
+                    mesh=mesh, in_specs=P("pod"), out_specs=P(),
+                    check_rep=False,
+                )
+            )
+            x = jax.device_put(tree)
+            jax.block_until_ready(f(x))  # compile + warmup
+            best = math.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(x))
+                best = min(best, time.perf_counter() - t0)
+            n_chunks = (
+                max(1, math.ceil(m_bytes / bucket_bytes))
+                if bucket_bytes
+                else 1
+            )
+            rows.append(
+                dict(
+                    fmt=fmt,
+                    bucket_bytes=bucket_bytes,
+                    n_chunks=n_chunks,
+                    grad_bytes=m_bytes,
+                    t_measured_us=best * 1e6,
+                    t_model_us=pipelined_time_affine(
+                        stages, m_bytes, n_chunks
+                    ) * 1e6,
+                )
+            )
+            print(
+                f"[bench] pod_sync {fmt} "
+                f"{'monolithic' if not bucket_bytes else f'{n_chunks} buckets'}"
+                f" measured={best * 1e6:.1f}us "
+                f"modelled={rows[-1]['t_model_us']:.1f}us"
+            )
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--quick", action="store_true",
@@ -116,6 +201,21 @@ def main(argv=None) -> None:
         for r in ctx_fit.crossover_table(calib.measurements)
     ]
 
+    # Bucketed-vs-monolithic pod sync on the same devices + fitted model,
+    # and the production-shape decision the trainer's `auto` would take
+    # with this calibration.
+    bucketed = _bench_bucketed_pod_sync(
+        calib, repeats, grad_bytes=max(sizes)
+    )
+    prod_decision = comm.plan_pod_sync(
+        2, 4e9,
+        topo=comm.calibrated_cluster(
+            calib, n_machines=2, procs_per_machine=256, degree=64
+        ),
+    )
+    print(f"[bench] production-shape auto decision: "
+          f"{prod_decision.describe()}")
+
     def mean_abs(rows_, key):
         return sum(abs(r[key]) for r in rows_) / max(len(rows_), 1)
 
@@ -125,6 +225,15 @@ def main(argv=None) -> None:
         calibration=calib.to_dict(),
         rows=rows,
         crossover=crossover,
+        bucketed=bucketed,
+        bucketed_decision=dict(
+            fmt=prod_decision.fmt,
+            bucket_bytes=prod_decision.bucket_bytes,
+            n_chunks=prod_decision.n_chunks,
+            t_modelled_us=prod_decision.t_modelled * 1e6,
+            t_monolithic_us=prod_decision.t_monolithic * 1e6,
+            modelled_speedup=prod_decision.speedup,
+        ),
         summary=dict(
             n_probes=len(rows),
             mean_abs_rel_error_preset=mean_abs(rows, "rel_error_preset"),
@@ -135,6 +244,7 @@ def main(argv=None) -> None:
             mean_regret=(
                 sum(r["regret"] for r in crossover) / max(len(crossover), 1)
             ),
+            max_regret=max((r["regret"] for r in crossover), default=1.0),
         ),
     )
     with open(args.out, "w") as f:

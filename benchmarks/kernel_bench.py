@@ -13,7 +13,11 @@ import numpy as np
 
 
 def _timeit(f, *args, n=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    out = f(*args)
+    if isinstance(out, tuple):
+        out[0].block_until_ready()
+    else:
+        jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(f(*args))

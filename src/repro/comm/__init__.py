@@ -24,6 +24,14 @@ The old free-function surface (``repro.core.make_policy`` / ``best_plan`` /
 """
 
 from . import impls as _impls  # noqa: F401  (registers all strategies)
+from .bucketing import (  # noqa: F401
+    BucketedChoice,
+    BucketLayout,
+    choose_n_chunks,
+    pack_buckets,
+    plan_buckets,
+    unpack_buckets,
+)
 from .calibrate import (  # noqa: F401
     CALIBRATION_ENV,
     CalibrationResult,
@@ -48,9 +56,14 @@ from .context import (  # noqa: F401
     plan_for_spec,
 )
 from .grad_sync import (  # noqa: F401
+    LOSSY_POD_SYNC_FORMATS,
     POD_SYNC_FORMATS,
+    PodSyncDecision,
+    plan_pod_sync,
+    pod_combine,
     pod_combine_flat,
     pod_combine_q8,
+    pod_sync_builder,
     pod_sync_grads,
     pod_sync_topology,
     select_pod_sync,

@@ -1,0 +1,305 @@
+"""Gradient bucketing: fixed-byte buckets + cost-model-chosen bucket size.
+
+The trainer's pod-tier sync shipped the whole gradient as one monolithic
+exchange: full serialization, zero overlap between the local (shared-memory
+/ ICI) tier and the global (DCN) tier.  This module supplies the two halves
+of the bucketed, pipelined alternative:
+
+1. **Tree <-> buckets.**  ``plan_buckets`` flattens a gradient pytree into
+   contiguous fixed-byte buckets.  Leaves are grouped by (dtype, sharding
+   key) -- a bucket never mixes dtypes or intra-pod layouts -- then each
+   group's leaves are concatenated into one flat vector and split at fixed
+   byte boundaries, so every bucket except a group's last has exactly the
+   requested size (leaves are split mid-tensor when they straddle a
+   boundary; ``unpack_buckets`` reassembles them exactly).
+
+2. **Bucket-size selection.**  ``choose_n_chunks`` prices the chunked
+   schedule under ``simulate_pipelined``: small buckets fill the pipeline
+   (more overlap between round k's local combine and round k+1's global
+   send) but pay the per-message alpha once per bucket; large buckets
+   amortize alpha but serialize the tiers.  With PR 2's fitted per-tier
+   alpha/beta the crossover is computed, not folklore.  Per-stage times are
+   affine in the chunk size (every op's bytes is a fixed multiple of m), so
+   the sweep costs two schedule builds total, mirroring ``affine_time``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.simulator import PipelinedCost, pipeline_stages, validate
+
+
+# ----------------------------------------------------------------------
+# Tree <-> fixed-byte buckets
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LeafSlot:
+    """Where one tree leaf lives inside its group's flat vector."""
+
+    leaf_index: int          # position in jax.tree.leaves order
+    offset: int              # element offset within the group vector
+    size: int                # trailing (non-batch) element count
+    shape: tuple             # trailing shape (batch dims excluded)
+
+
+@dataclass(frozen=True)
+class BucketGroup:
+    """One (dtype, sharding-key) group: contiguous leaves, fixed-size split."""
+
+    key: tuple
+    slots: tuple
+    total_elems: int
+    bucket_elems: int
+
+    @property
+    def n_buckets(self) -> int:
+        return max(1, math.ceil(self.total_elems / self.bucket_elems))
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Round-trippable description of a bucketed tree.
+
+    ``pack_buckets`` produces ``n_buckets`` arrays of
+    ``[*batch_shape, bucket_elems]`` (a group's last bucket may be short);
+    ``unpack_buckets`` restores the original tree (optionally with a
+    different batch shape -- the pod-combined output has none).
+    """
+
+    treedef: object
+    groups: tuple
+    batch_ndim: int
+    batch_shape: tuple
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(g.n_buckets for g in self.groups)
+
+    def describe(self) -> str:
+        return (
+            f"{self.n_buckets} buckets over {len(self.groups)} "
+            f"(dtype, sharding) groups"
+        )
+
+
+def _leaf_key(leaf, spec) -> tuple:
+    return (str(leaf.dtype), str(spec) if spec is not None else "")
+
+
+def plan_buckets(
+    tree,
+    bucket_bytes: int,
+    *,
+    specs=None,
+    batch_ndim: int = 0,
+) -> BucketLayout:
+    """Plan fixed-byte buckets for ``tree``.
+
+    specs:       optional pytree of per-leaf sharding specs (same structure);
+                 leaves with different specs never share a bucket.
+    batch_ndim:  leading dims excluded from bucketing (1 for the vmap-mode
+                 [n_pods, ...] gradient stacks); must agree across leaves.
+    """
+    import jax
+
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot bucket an empty tree")
+    if specs is not None:
+        from jax.sharding import PartitionSpec
+
+        spec_leaves = jax.tree.flatten(
+            specs,
+            is_leaf=lambda x: x is None or isinstance(x, PartitionSpec),
+        )[0]
+    else:
+        spec_leaves = [None] * len(leaves)
+    if len(spec_leaves) != len(leaves):
+        raise ValueError(
+            f"specs tree has {len(spec_leaves)} leaves, grads {len(leaves)}"
+        )
+    batch_shape = tuple(leaves[0].shape[:batch_ndim])
+    groups: dict[tuple, list] = {}
+    order: list[tuple] = []
+    for i, (leaf, spec) in enumerate(zip(leaves, spec_leaves)):
+        if tuple(leaf.shape[:batch_ndim]) != batch_shape:
+            raise ValueError(
+                f"leaf {i} batch shape {leaf.shape[:batch_ndim]} != "
+                f"{batch_shape}"
+            )
+        key = _leaf_key(leaf, spec)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append((i, leaf))
+    out = []
+    for key in order:
+        slots, offset = [], 0
+        itemsize = groups[key][0][1].dtype.itemsize
+        for i, leaf in groups[key]:
+            trailing = tuple(leaf.shape[batch_ndim:])
+            size = int(math.prod(trailing)) if trailing else 1
+            slots.append(LeafSlot(i, offset, size, trailing))
+            offset += size
+        bucket_elems = max(1, int(bucket_bytes) // itemsize)
+        out.append(
+            BucketGroup(
+                key=key, slots=tuple(slots), total_elems=offset,
+                bucket_elems=bucket_elems,
+            )
+        )
+    return BucketLayout(
+        treedef=treedef, groups=tuple(out), batch_ndim=batch_ndim,
+        batch_shape=batch_shape,
+    )
+
+
+def pack_buckets(layout: BucketLayout, tree) -> list:
+    """Tree -> list of contiguous bucket arrays ``[*batch, <=bucket_elems]``."""
+    import jax
+    import jax.numpy as jnp
+
+    leaves = jax.tree.leaves(tree)
+    buckets = []
+    for g in layout.groups:
+        flat = jnp.concatenate(
+            [
+                leaves[s.leaf_index].reshape(*layout.batch_shape, -1)
+                for s in g.slots
+            ],
+            axis=-1,
+        )
+        for b in range(g.n_buckets):
+            lo = b * g.bucket_elems
+            hi = min(lo + g.bucket_elems, g.total_elems)
+            buckets.append(flat[..., lo:hi])
+    return buckets
+
+
+def unpack_buckets(layout: BucketLayout, buckets, *, batch_shape=None):
+    """Inverse of ``pack_buckets``.
+
+    ``batch_shape`` overrides the layout's (pass ``()`` when the combine
+    collapsed the pod dim); bucket arrays must carry that batch shape.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if batch_shape is None:
+        batch_shape = layout.batch_shape
+    batch_shape = tuple(batch_shape)
+    if len(buckets) != layout.n_buckets:
+        raise ValueError(
+            f"got {len(buckets)} buckets, layout has {layout.n_buckets}"
+        )
+    leaves = [None] * sum(len(g.slots) for g in layout.groups)
+    pos = 0
+    for g in layout.groups:
+        flat = jnp.concatenate(
+            list(buckets[pos:pos + g.n_buckets]), axis=-1
+        )
+        pos += g.n_buckets
+        for s in g.slots:
+            piece = flat[..., s.offset:s.offset + s.size]
+            leaves[s.leaf_index] = piece.reshape(*batch_shape, *s.shape)
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+# ----------------------------------------------------------------------
+# Cost-model-chosen bucket size
+# ----------------------------------------------------------------------
+
+# Bucket sizes below this stop amortizing even a calibrated DCN alpha and
+# explode the bucket count; sizes are swept in powers of two above it.
+MIN_BUCKET_BYTES = 1 << 16
+MAX_CHUNKS = 256
+
+
+@dataclass(frozen=True)
+class BucketedChoice:
+    """Outcome of a pipelined bucket-size sweep for one schedule family."""
+
+    n_chunks: int
+    bucket_bytes: float
+    t_monolithic: float       # n_chunks=1: the unbucketed schedule
+    t_pipelined: float
+    stages_monolithic: tuple
+
+    @property
+    def speedup(self) -> float:
+        return self.t_monolithic / self.t_pipelined if self.t_pipelined else 1.0
+
+
+def stage_affine(build, m1: float = 1024.0, m2: float = 2048.0) -> list:
+    """Per-pipeline-stage (kind, A, B) with stage time t(m) = A + B*m.
+
+    Stage structure (which rounds exist, which tier each uses) is
+    independent of the message size; only durations scale, and they scale
+    affinely (every op's bytes is a fixed multiple of m).  Two builds pin
+    every stage's curve, after which pipelined times for arbitrary chunk
+    sizes are O(n_stages) -- the ``affine_time`` idiom extended per stage.
+    """
+    s1, s2 = build(m1), build(m2)
+    validate(s1)
+    st1, st2 = pipeline_stages(s1), pipeline_stages(s2)
+    if [k for k, _ in st1] != [k for k, _ in st2]:
+        raise ValueError("stage structure changed with message size")
+    out = []
+    for (kind, t1), (_, t2) in zip(st1, st2):
+        B = (t2 - t1) / (m2 - m1)
+        out.append((kind, t1 - B * m1, B))
+    return out
+
+
+def pipelined_time_affine(stages, m: float, n_chunks: int) -> float:
+    """Pipelined total from per-stage affine coefficients (exact, O(S))."""
+    chunk_m = m / n_chunks
+    ts = [A + B * chunk_m for _, A, B in stages]
+    return sum(ts) + (n_chunks - 1) * max(ts, default=0.0)
+
+
+def choose_n_chunks(
+    build,
+    nbytes: float,
+    *,
+    min_bucket_bytes: int = MIN_BUCKET_BYTES,
+    max_chunks: int = MAX_CHUNKS,
+) -> BucketedChoice:
+    """Sweep chunk counts under the pipelined cost view; return the best.
+
+    ``build``: message size -> Schedule (e.g. a registry spec's
+    ``build_schedule`` partial).  The sweep covers n_chunks = 1, 2, 4, ...
+    while the chunk stays >= ``min_bucket_bytes`` (latency amortization
+    floor) -- the alpha/beta of ``build``'s topology decide the winner.
+    """
+    stages = stage_affine(build)
+    t_mono = pipelined_time_affine(stages, nbytes, 1)
+    best_n, best_t = 1, t_mono
+    n = 2
+    while n <= max_chunks and nbytes / n >= min_bucket_bytes:
+        t = pipelined_time_affine(stages, nbytes, n)
+        if t < best_t:
+            best_n, best_t = n, t
+        n *= 2
+    return BucketedChoice(
+        n_chunks=best_n,
+        bucket_bytes=math.ceil(nbytes / best_n),
+        t_monolithic=t_mono,
+        t_pipelined=best_t,
+        stages_monolithic=tuple(
+            (k, A + B * nbytes) for k, A, B in stages
+        ),
+    )
+
+
+def simulate_choice(build, nbytes: float, n_chunks: int) -> PipelinedCost:
+    """Exact (non-affine) pipelined cost for one chunk count -- the slow
+    twin of ``pipelined_time_affine`` used by tests to cross-check it."""
+    from repro.core.simulator import simulate_pipelined
+
+    return simulate_pipelined(build, nbytes, n_chunks, check=False)

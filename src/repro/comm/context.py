@@ -73,7 +73,10 @@ def _affine_cost(
 
     A, B = affine_time(build, m1=m1)
     s1 = build(m1)
-    return (A, B, s1.n_rounds, s1.total_global_bytes() / m1, s1.total_local_bytes() / m1)
+    return (
+        A, B, s1.n_rounds,
+        s1.total_global_bytes() / m1, s1.total_local_bytes() / m1,
+    )
 
 
 def plan_for_spec(
@@ -244,6 +247,49 @@ class CommContext:
             lossy_ok=lossy_ok, executable_only=executable_only,
         )
         return self._bind(p)
+
+    def plan_bucketed(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        strategy: str | None = None,
+        root: int = 0,
+        lossy_ok: bool = False,
+        min_bucket_bytes: int | None = None,
+        max_chunks: int | None = None,
+    ):
+        """Bucket-size sweep under the pipelined cost view.
+
+        Picks the strategy exactly like ``plan`` (unless pinned via
+        ``strategy``), then sweeps chunk counts with
+        ``bucketing.choose_n_chunks``: the message is cut into n equal
+        buckets and chunk k+1's local stage overlaps chunk k's global
+        stage (``simulate_pipelined``).  Returns a
+        ``bucketing.BucketedChoice`` whose ``n_chunks``/``bucket_bytes``
+        the fitted alpha/beta chose -- the latency-amortization vs
+        pipeline-fill tradeoff, computed instead of folklore.
+        """
+        from . import bucketing
+
+        if strategy is None:
+            strategy = best_plan(
+                self.topo, collective, nbytes, root=root, lossy_ok=lossy_ok,
+                executable_only=True,
+            ).strategy
+        spec = registry.get_spec(collective, strategy)
+        kw = {}
+        if min_bucket_bytes is not None:
+            kw["min_bucket_bytes"] = min_bucket_bytes
+        if max_chunks is not None:
+            kw["max_chunks"] = max_chunks
+        return bucketing.choose_n_chunks(
+            lambda m: spec.build_schedule(
+                self.topo, m, root=root, payloads=False
+            ),
+            nbytes,
+            **kw,
+        )
 
     def plans(
         self,

@@ -6,27 +6,35 @@ or shard_map ``axis_names={'pod'}`` in the reference impls): the inter-pod
 DCN tier -- the paper's "global edges" -- is always scheduled by the
 planner, never left to the partitioner.
 
-Two wire formats cross the pod seam:
+Four wire formats cross the pod seam:
 
-  'flat' -- full-precision mean of FSDP shards.  Because parameters (hence
-            per-pod grads) are FSDP-sharded over 'data', each chip's shard
-            is distinct and the reduce is the paper's Rule-3 parallel-egress
-            exchange: 256 cross-pod pairs each move 1/256th of the gradient
-            concurrently.
-  'q8'   -- int8 payload + f32 block scales only (lossy, opt-in): ~4x fewer
-            bytes on the DCN tier.  Decoding goes through the single
-            ``q8_decode_sum`` path shared with the manual hierarchical
-            all-reduce.
+  'flat'  -- full-precision mean of FSDP shards (parallel-egress psum).
+  'q8'    -- int8 payload + f32 block scales, replicated across pods (the
+             gather path: every pod receives every other pod's compressed
+             gradient, ~(P-1)x the compressed bytes).  Lossy, opt-in.
+  'rs'    -- reduce-scatter + all-gather: each pod sends 1/P of the
+             gradient per peer and receives reduced shards back --
+             bandwidth-optimal full precision.
+  'rs_q8' -- the reduce-scatter exchange with int8 payload both ways:
+             compressed sub-shards out, re-compressed reduced shards back.
+             The cheapest DCN bytes of the four (lossy, opt-in).
 
-``select_pod_sync`` asks the cost model which format to use for a given
-pod count and gradient size -- the registry guarantees whatever it picks
-is runnable.
+On top of the wire format, the gradient can be cut into fixed-byte
+**buckets** (``repro.comm.bucketing``) so bucket k's local combine overlaps
+bucket k+1's global exchange -- the paper's Rule-3 tier concurrency.
+``plan_pod_sync`` prices every (format, bucket count) candidate with
+``simulate_pipelined`` on the (optionally calibrated) pod topology and
+returns the winning ``PodSyncDecision``; ``pod_sync="auto"`` in the trainer
+consumes it.  The registry guarantees whatever it picks is runnable.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 import os
+import warnings
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -34,8 +42,53 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import schedules as S
+
+from . import bucketing
 from .context import CommContext
-from .impls import _axis_size, q8_decode_sum, q8_encode
+from .impls import (
+    _axis_size,
+    _q8_scaled_schedule,
+    q8_decode,
+    q8_decode_sum,
+    q8_encode,
+)
+
+POD_SYNC_FORMATS = ("flat", "q8", "rs", "rs_q8")
+LOSSY_POD_SYNC_FORMATS = ("q8", "rs_q8")
+
+
+# ----------------------------------------------------------------------
+# Sharding-constraint helper (vmap-mode combiners)
+# ----------------------------------------------------------------------
+
+_warned_pin_fallback = False
+
+
+def _pin(x, sp):
+    """``with_sharding_constraint`` that degrades (once, loudly) to identity.
+
+    The vmap-mode combiners pin intermediates to 'pod'-axis specs; unit
+    tests and single-host paths legitimately run them without a pod mesh in
+    scope, where jax raises RuntimeError (no ambient mesh) or ValueError
+    (axis not in the ambient mesh).  Only those two are swallowed -- and a
+    RuntimeWarning fires on first fallback so a production run silently
+    losing its DCN placement is visible, not invisible (the seed swallowed
+    TypeError too, hiding genuine spec-construction bugs).
+    """
+    global _warned_pin_fallback
+    try:
+        return jax.lax.with_sharding_constraint(x, sp)
+    except (ValueError, RuntimeError) as e:
+        if not _warned_pin_fallback:
+            _warned_pin_fallback = True
+            warnings.warn(
+                f"pod-sync sharding constraint {sp} not applied ({e}); "
+                "gradient placement is left to the partitioner",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return x
 
 
 # ----------------------------------------------------------------------
@@ -53,8 +106,58 @@ def _pod_mean_q8(g: jax.Array, pod_axis: str, n_pods: int) -> jax.Array:
     return q8_decode_sum(qg, sg, last, g.shape, g.dtype, scale=1.0 / n_pods)
 
 
+def _pod_mean_rs(g: jax.Array, pod_axis: str, n_pods: int) -> jax.Array:
+    """Reduce-scatter + all-gather over the pod seam: 1/P per peer out,
+    reduced shards back -- bandwidth-optimal, full precision."""
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n_pods
+    flat = jnp.pad(flat, (0, pad))
+    shard = lax.psum_scatter(flat, pod_axis, scatter_dimension=0, tiled=True)
+    full = lax.all_gather(shard, pod_axis, axis=0, tiled=True)
+    return (full[: g.size] / n_pods).reshape(g.shape)
+
+
+def _pod_mean_rs_q8(g: jax.Array, pod_axis: str, n_pods: int) -> jax.Array:
+    """The reduce-scatter exchange with int8 wire format both directions.
+
+    Sub-shards quantize locally and cross the DCN as an all_to_all (each
+    pod sends (P-1)/P of the compressed gradient); the dequantized,
+    reduced shard is re-quantized for the compressed all-gather back.
+    Double quantization: tolerance is ~2x the single-pass q8 error.
+    """
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n_pods
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(n_pods, -1)      # row i -> pod i's shard
+    B = blocks.shape[-1]
+    q, scale, last = q8_encode(blocks)
+    qx = lax.all_to_all(q, pod_axis, split_axis=0, concat_axis=0, tiled=True)
+    sx = lax.all_to_all(
+        scale, pod_axis, split_axis=0, concat_axis=0, tiled=True
+    )
+    shard = q8_decode_sum(
+        qx, sx, last, (B,), g.dtype, scale=1.0 / n_pods
+    )
+    q2, s2, last2 = q8_encode(shard)
+    qg = lax.all_gather(q2, pod_axis, axis=0, tiled=False)
+    sg = lax.all_gather(s2, pod_axis, axis=0, tiled=False)
+    full = q8_decode(qg, sg, last2, (n_pods * B,), g.dtype)
+    return full[: g.size].reshape(g.shape)
+
+
+_POD_MEAN_IMPLS = {
+    "flat": _pod_mean_flat,
+    "q8": _pod_mean_q8,
+    "rs": _pod_mean_rs,
+    "rs_q8": _pod_mean_rs_q8,
+}
+
+
 def pod_sync_grads(
-    grads: Any, strategy: str, pod_axis: str = "pod"
+    grads: Any,
+    strategy: str,
+    pod_axis: str = "pod",
+    bucket_bytes: int = 0,
 ) -> Any:
     """Average gradients across pods (the DCN tier), planner-chosen strategy.
 
@@ -62,17 +165,25 @@ def pod_sync_grads(
     'data'/'model' axes stay GSPMD-auto, so each leaf here is the pod-local
     gradient, still sharded over the intra-pod mesh.
 
-    strategy:
-      'flat'    -- psum full-precision shards across pods.
-      'q8'      -- int8-compress shards before crossing the DCN tier (lossy).
+    strategy:      one of ``POD_SYNC_FORMATS`` (see module docstring).
+    bucket_bytes:  when > 0, the grad tree is packed into contiguous
+                   fixed-byte buckets first and each bucket synced
+                   independently -- the runnable twin of the pipelined
+                   schedule ``simulate_pipelined`` prices.
     """
     n_pods = _axis_size(pod_axis)
-    if strategy == "flat":
-        f = functools.partial(_pod_mean_flat, pod_axis=pod_axis, n_pods=n_pods)
-    elif strategy == "q8":
-        f = functools.partial(_pod_mean_q8, pod_axis=pod_axis, n_pods=n_pods)
-    else:
-        raise ValueError(f"unknown pod sync strategy {strategy!r}")
+    if strategy not in _POD_MEAN_IMPLS:
+        raise ValueError(
+            f"unknown pod sync strategy {strategy!r}; expected one of "
+            f"{POD_SYNC_FORMATS}"
+        )
+    f = functools.partial(
+        _POD_MEAN_IMPLS[strategy], pod_axis=pod_axis, n_pods=n_pods
+    )
+    if bucket_bytes:
+        layout = bucketing.plan_buckets(grads, bucket_bytes)
+        buckets = bucketing.pack_buckets(layout, grads)
+        return bucketing.unpack_buckets(layout, [f(b) for b in buckets])
     return jax.tree.map(f, grads)
 
 
@@ -80,16 +191,13 @@ def pod_sync_grads(
 # vmap-mode combiners (what train.steps compiles; same wire formats)
 # ----------------------------------------------------------------------
 
-POD_SYNC_FORMATS = ("flat", "q8")
-
-
 def pod_combine_flat(gpod, n_pods: int):
     """Full-precision mean over the leading pod dim (see module docstring)."""
     return jax.tree.map(lambda g: jnp.mean(g, axis=0), gpod)
 
 
 def pod_combine_q8(gpod, n_pods: int, gspecs):
-    """int8-compressed DCN exchange (lossy, opt-in).
+    """int8-compressed DCN exchange (lossy, opt-in; the gather format).
 
     Per-pod shards quantize locally; only int8 payload + f32 block scales
     are replicated across pods (the sharding constraint pins the transfer),
@@ -109,11 +217,7 @@ def pod_combine_q8(gpod, n_pods: int, gspecs):
             entries.append(None)
 
         def pin(x, pod_entry):
-            sp = P(pod_entry, *entries[1:], None)
-            try:
-                return jax.lax.with_sharding_constraint(x, sp)
-            except (ValueError, RuntimeError, TypeError):
-                return x
+            return _pin(x, P(pod_entry, *entries[1:], None))
         q = pin(pin(q, "pod"), None)
         s = pin(pin(s, "pod"), None)
         return q8_decode_sum(
@@ -122,6 +226,106 @@ def pod_combine_q8(gpod, n_pods: int, gspecs):
 
     return jax.tree.map(combine, gpod, gspecs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def _combine_1d_flat(x: jax.Array, n_pods: int) -> jax.Array:
+    return jnp.mean(x, axis=0)
+
+
+def _combine_1d_q8(x: jax.Array, n_pods: int) -> jax.Array:
+    """Gather-format q8 on a [pods, L] bucket."""
+    q, s, _ = jax.vmap(q8_encode)(x)
+    last = x.shape[-1]
+    q = _pin(_pin(q, P("pod", None, None)), P(None, None, None))
+    s = _pin(_pin(s, P("pod", None, None)), P(None, None, None))
+    return q8_decode_sum(q, s, last, x.shape[1:], x.dtype,
+                         scale=1.0 / n_pods)
+
+
+def _combine_1d_rs(x: jax.Array, n_pods: int) -> jax.Array:
+    """RS + AG on a [pods, L] bucket, expressed through GSPMD constraints:
+    the src->dest transpose is the scatter exchange, the replicating
+    reshape is the all-gather."""
+    L = x.shape[-1]
+    pad = (-L) % n_pods
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    y = xp.reshape(n_pods, n_pods, -1)            # [src, dest, B]
+    y = _pin(y, P("pod", None, None))
+    z = _pin(jnp.swapaxes(y, 0, 1), P("pod", None, None))
+    shard = _pin(jnp.sum(z, axis=1) / n_pods, P("pod", None))
+    full = _pin(shard.reshape(-1), P(None))
+    return full[:L]
+
+
+def _combine_1d_rs_q8(x: jax.Array, n_pods: int) -> jax.Array:
+    """Compressed RS + compressed AG on a [pods, L] bucket."""
+    L = x.shape[-1]
+    pad = (-L) % n_pods
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    y = xp.reshape(n_pods, n_pods, -1)            # [src, dest, B]
+    B = y.shape[-1]
+    y = _pin(y, P("pod", None, None))
+    q, s, _ = jax.vmap(jax.vmap(q8_encode))(y)    # [src, dest, nblk, 64]
+    qt = _pin(jnp.swapaxes(q, 0, 1), P("pod", None, None, None))
+    st = _pin(jnp.swapaxes(s, 0, 1), P("pod", None, None, None))
+    acc = jnp.sum(qt.astype(jnp.float32) * st, axis=1) / n_pods
+    shard = acc.reshape(n_pods, -1)[:, :B]        # [dest, B] mean shards
+    shard = _pin(shard, P("pod", None))
+    q2, s2, _ = jax.vmap(q8_encode)(shard)
+    q2 = _pin(_pin(q2, P("pod", None, None)), P(None, None, None))
+    s2 = _pin(_pin(s2, P("pod", None, None)), P(None, None, None))
+    full = q8_decode(q2, s2, B, (n_pods * B,), x.dtype)
+    return full[:L]
+
+
+_BUCKET_COMBINERS = {
+    "flat": _combine_1d_flat,
+    "q8": _combine_1d_q8,
+    "rs": _combine_1d_rs,
+    "rs_q8": _combine_1d_rs_q8,
+}
+
+
+def pod_combine(gpod, n_pods: int, gspecs=None, *, fmt: str = "flat",
+                bucket_bytes: int = 0):
+    """vmap-mode pod-tier combine: wire format + optional bucketing.
+
+    gpod:          grad tree, every leaf [n_pods, ...].
+    gspecs:        tree of P('pod', *param_spec) leaf specs (required for
+                   the unbucketed 'q8' path, which preserves per-leaf
+                   intra-pod sharding; used for bucket grouping otherwise).
+    fmt:           one of ``POD_SYNC_FORMATS``.
+    bucket_bytes:  > 0 packs the tree into fixed-byte buckets (grouped by
+                   dtype + sharding; ``repro.comm.bucketing``) and combines
+                   per bucket -- the hot path the pipelined cost model
+                   prices.  0 = monolithic per-leaf combine.
+    """
+    if fmt not in POD_SYNC_FORMATS:
+        raise ValueError(
+            f"unknown pod_sync format {fmt!r}; expected one of "
+            f"{POD_SYNC_FORMATS}"
+        )
+    if bucket_bytes:
+        layout = bucketing.plan_buckets(
+            gpod, bucket_bytes, specs=gspecs, batch_ndim=1
+        )
+        buckets = bucketing.pack_buckets(layout, gpod)
+        combiner = _BUCKET_COMBINERS[fmt]
+        done = [combiner(b, n_pods) for b in buckets]
+        return bucketing.unpack_buckets(layout, done, batch_shape=())
+    if fmt == "flat":
+        return pod_combine_flat(gpod, n_pods)
+    if fmt == "q8":
+        if gspecs is None:
+            raise ValueError("pod_combine(fmt='q8') requires gspecs")
+        return pod_combine_q8(gpod, n_pods, gspecs)
+    combiner = _BUCKET_COMBINERS[fmt]
+
+    def per_leaf(g):
+        flat = combiner(g.reshape(n_pods, -1), n_pods)
+        return flat.reshape(g.shape[1:]).astype(g.dtype)
+
+    return jax.tree.map(per_leaf, gpod)
 
 
 # ----------------------------------------------------------------------
@@ -153,23 +357,198 @@ def pod_sync_topology(n_pods: int, calibration: str | None = None):
     )
 
 
+def _compose_schedules(name: str, parts) -> S.Schedule:
+    """Sequential composition: one Schedule running ``parts`` back to back
+    (costing only -- check_semantics does not apply to composites)."""
+    out = S.Schedule(name, "pod_sync", parts[0].topo, parts[0].nbytes)
+    for p in parts:
+        out.rounds.extend(p.rounds)
+    return out
+
+
+def pod_sync_builder(topo, fmt: str):
+    """``m -> Schedule``: the costable schedule family of one wire format.
+
+    'flat'  -> the bandwidth-optimal all-reduce (what psum of FSDP shards
+               lowers to at gradient sizes).
+    'q8'    -> the compressed tree all-reduce (the gather-flavored format).
+    'rs'    -> reduce_scatter(m) then all_gather(m/P) composed -- the
+               explicit two-phase exchange the bucketed sync runs.
+    'rs_q8' -> the same composition with q8-scaled global tiers.
+    """
+    ag_q8 = _q8_scaled_schedule(S.allgather_hier_par)
+    P_ = topo.n_procs
+
+    def build(m: float) -> S.Schedule:
+        if fmt == "flat":
+            return S.allreduce_hier_par_bw(topo, m, payloads=False)
+        if fmt == "q8":
+            return _q8_scaled_schedule(S.allreduce_hier_par)(
+                topo, m, payloads=False
+            )
+        if fmt == "rs":
+            return _compose_schedules(
+                "pod_sync_rs",
+                [
+                    S.reducescatter_hier_par(topo, m, payloads=False),
+                    S.allgather_hier_par(topo, m / P_, payloads=False),
+                ],
+            )
+        if fmt == "rs_q8":
+            return _compose_schedules(
+                "pod_sync_rs_q8",
+                [
+                    _q8_scaled_schedule(S.reducescatter_hier_par)(
+                        topo, m, payloads=False
+                    ),
+                    ag_q8(topo, m / P_, payloads=False),
+                ],
+            )
+        raise ValueError(f"unknown pod_sync format {fmt!r}")
+
+    return build
+
+
+@dataclass(frozen=True)
+class PodSyncDecision:
+    """What the cost model chose for the pod seam: format + bucket size."""
+
+    fmt: str
+    bucket_bytes: int          # 0 = monolithic
+    n_chunks: int
+    t_modelled: float          # pipelined modelled seconds for the gradient
+    t_monolithic: float        # same format, single bucket
+    lossy: bool
+
+    @property
+    def bucketed(self) -> bool:
+        return self.n_chunks > 1 or self.bucket_bytes > 0
+
+    @property
+    def speedup(self) -> float:
+        return (
+            self.t_monolithic / self.t_modelled if self.t_modelled else 1.0
+        )
+
+    def describe(self) -> str:
+        if not self.bucketed:
+            b = "monolithic"
+        elif self.n_chunks > 1:
+            b = f"{self.n_chunks} x {self.bucket_bytes / 1e6:.2f}MB buckets"
+        else:
+            b = f"{self.bucket_bytes / 1e6:.2f}MB buckets"
+        return (
+            f"pod_sync={self.fmt} [{b}] t={self.t_modelled * 1e3:.2f}ms "
+            f"(monolithic {self.t_monolithic * 1e3:.2f}ms)"
+            + (" lossy" if self.lossy else "")
+        )
+
+
+def plan_pod_sync(
+    n_pods: int,
+    grad_bytes: float,
+    *,
+    lossy_ok: bool = True,
+    calibration: str | None = None,
+    bucketed: bool = True,
+    bucket_bytes: int | None = None,
+    topo=None,
+    min_bucket_bytes: int = bucketing.MIN_BUCKET_BYTES,
+    max_chunks: int = bucketing.MAX_CHUNKS,
+) -> PodSyncDecision:
+    """Price every (wire format, bucket count) candidate; return the best.
+
+    Formats are costed on the (optionally calibrated) pod topology via
+    ``pod_sync_builder``; each format's bucket count is swept under the
+    pipelined view (``bucketing.choose_n_chunks``), so the decision weighs
+    latency amortization against tier overlap with the fitted alpha/beta --
+    not folklore constants.  ``bucket_bytes`` pins the bucket size instead
+    of sweeping (the formats are then ranked AT that chunking, so a forced
+    size cannot ride on another size's format choice); ``topo`` overrides
+    the topology entirely (benchmarks pass the probe-mesh shape).
+    """
+    if n_pods <= 1:
+        return PodSyncDecision("flat", 0, 1, 0.0, 0.0, False)
+    if topo is None:
+        topo = pod_sync_topology(n_pods, calibration)
+    formats = [
+        f for f in POD_SYNC_FORMATS
+        if lossy_ok or f not in LOSSY_POD_SYNC_FORMATS
+    ]
+    forced_chunks = (
+        max(1, math.ceil(grad_bytes / bucket_bytes)) if bucket_bytes else None
+    )
+    best: PodSyncDecision | None = None
+    for fmt in formats:
+        build = pod_sync_builder(topo, fmt)
+        if forced_chunks is not None:
+            stages = bucketing.stage_affine(build)
+            cand = PodSyncDecision(
+                fmt=fmt,
+                bucket_bytes=int(bucket_bytes),
+                n_chunks=forced_chunks,
+                t_modelled=bucketing.pipelined_time_affine(
+                    stages, grad_bytes, forced_chunks
+                ),
+                t_monolithic=bucketing.pipelined_time_affine(
+                    stages, grad_bytes, 1
+                ),
+                lossy=fmt in LOSSY_POD_SYNC_FORMATS,
+            )
+        else:
+            choice = bucketing.choose_n_chunks(
+                build,
+                grad_bytes,
+                min_bucket_bytes=min_bucket_bytes,
+                max_chunks=max_chunks if bucketed else 1,
+            )
+            cand = PodSyncDecision(
+                fmt=fmt,
+                bucket_bytes=(
+                    int(choice.bucket_bytes) if choice.n_chunks > 1 else 0
+                ),
+                n_chunks=choice.n_chunks,
+                t_modelled=choice.t_pipelined,
+                t_monolithic=choice.t_monolithic,
+                lossy=fmt in LOSSY_POD_SYNC_FORMATS,
+            )
+        if best is None or cand.t_modelled < best.t_modelled:
+            best = cand
+    return best
+
+
 def select_pod_sync(
     n_pods: int,
     grad_bytes: float,
     lossy_ok: bool = True,
     calibration: str | None = None,
 ) -> str:
-    """Let the cost model pick the pod-sync wire format ('flat' or 'q8').
+    """Cost-model-chosen pod-sync wire format (one of POD_SYNC_FORMATS).
 
     Models the DCN tier as the machine tier of a multi-pod cluster --
     calibrated from measurements when a calibration file is supplied (or
-    named by ``$REPRO_CALIBRATION``), preset v5e constants otherwise -- and
-    plans a gradient all-reduce of ``grad_bytes``; returns 'q8' when the
-    best executable plan is the compressed one (only reachable with
-    ``lossy_ok``).
+    named by ``$REPRO_CALIBRATION``), preset v5e constants otherwise.
+    Format only; ``plan_pod_sync`` also returns the bucket size.
     """
-    if n_pods <= 1:
-        return "flat"
-    ctx = CommContext(pod_sync_topology(n_pods, calibration))
-    pc = ctx.plan("all_reduce", grad_bytes, lossy_ok=lossy_ok)
-    return "q8" if pc.plan.lossy else "flat"
+    return plan_pod_sync(
+        n_pods, grad_bytes, lossy_ok=lossy_ok, calibration=calibration,
+        bucketed=False,
+    ).fmt
+
+
+# Re-exported for the planner surface; CommContext gains bucketed planning
+# through this module's schedule compositions.
+__all__ = [
+    "POD_SYNC_FORMATS",
+    "LOSSY_POD_SYNC_FORMATS",
+    "PodSyncDecision",
+    "plan_pod_sync",
+    "pod_combine",
+    "pod_combine_flat",
+    "pod_combine_q8",
+    "pod_sync_builder",
+    "pod_sync_grads",
+    "pod_sync_topology",
+    "select_pod_sync",
+    "CommContext",
+]

@@ -537,6 +537,109 @@ def allreduce_flat_ring(
     return sched
 
 
+def reducescatter_flat_ring(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Classic flat ring reduce-scatter: P-1 rounds of m/P bytes.
+
+    The first half of ``allreduce_flat_ring``: proc p ends holding the
+    fully reduced shard (p+1) % P.  Hierarchy-oblivious -- ring edges cross
+    machine seams blind, so on multi-core clusters the simulator charges
+    the shared-NIC serialization just like the flat all-reduce.
+    """
+    sched = Schedule("reducescatter_flat_ring", "reduce_scatter", topo, m)
+    P = topo.n_procs
+    shard_m = m / P
+    holdings = (
+        [{s: {("rs", s, p)} for s in range(P)} for p in range(P)]
+        if payloads
+        else None
+    )
+    for step in range(P - 1):
+        rnd = sched.new_round()
+        moves = []
+        for p in range(P):
+            shard = (p - step) % P
+            pay = frozenset(holdings[p][shard]) if payloads else EMPTY
+            moves.append((p, (p + 1) % P, shard, pay))
+            rnd.add(Send(p, (p + 1) % P, shard_m, pay))
+        if payloads:
+            for p, q, shard, pay in moves:
+                holdings[q][shard] |= set(pay)
+    return sched
+
+
+def reducescatter_hier_par(
+    topo: ClusterTopology, m: float, payloads: bool = True
+) -> Schedule:
+    """Hierarchy-aware reduce-scatter (Rules 1+3; bandwidth-optimal).
+
+    The first half of ``allreduce_hier_par_bw``:
+
+    Phase 1: intra-machine ring reduce-scatter -- (c-1) local rounds of m/c;
+             proc i of each machine ends holding reduced local shard (i+1)%c.
+    Phase 2: cross-machine ring reduce-scatter run independently per local
+             shard (Rule 3: all c procs drive their machine's egress links
+             at once) -- (M-1) global rounds of m/(c*M) sub-shards.
+
+    Every proc ends with 1/P of the fully reduced vector; global bytes per
+    machine m*(M-1)/M -- half an all-reduce, the bandwidth-optimal exchange
+    the bucketed gradient sync is built on.
+    """
+    sched = Schedule("reducescatter_hier_par", "reduce_scatter", topo, m)
+    c = topo.procs_per_machine
+    M = topo.n_machines
+    P = topo.n_procs
+    shard_m = m / c
+    holdings = (
+        [
+            {s: {("lrs", topo.machine_of(p), s, p % c)} for s in range(c)}
+            for p in range(P)
+        ]
+        if payloads
+        else None
+    )
+
+    # Phase 1: local ring reduce-scatter (per machine, lockstep).
+    if c > 1:
+        for step in range(c - 1):
+            rnd = sched.new_round()
+            moves = []
+            for mach in range(M):
+                procs = list(topo.procs_of(mach))
+                for i in range(c):
+                    p, q = procs[i], procs[(i + 1) % c]
+                    shard = (i - step) % c
+                    pay = (
+                        frozenset(holdings[p][shard]) if payloads else EMPTY
+                    )
+                    rnd.add(Send(p, q, shard_m, pay))
+                    moves.append((q, shard, pay))
+            if payloads:
+                for q, shard, pay in moves:
+                    holdings[q][shard] |= set(pay)
+
+    # Phase 2: cross-machine ring reduce-scatter per shard (all in parallel).
+    if M > 1:
+        sub_m = shard_m / M
+        for step in range(M - 1):
+            rnd = sched.new_round()
+            for mach in range(M):
+                nxt = (mach + 1) % M
+                for i in range(c):
+                    src = list(topo.procs_of(mach))[i]
+                    dst = list(topo.procs_of(nxt))[i]
+                    rnd.add(
+                        Send(
+                            src,
+                            dst,
+                            sub_m,
+                            _pay(payloads, [("xstripe", "rs", step, mach, i)]),
+                        )
+                    )
+    return sched
+
+
 def allreduce_hier_par(
     topo: ClusterTopology, m: float, payloads: bool = True
 ) -> Schedule:

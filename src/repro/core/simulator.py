@@ -107,6 +107,38 @@ def _op_cost(topo: ClusterTopology, op) -> float:
     return tier.transfer_time(op.nbytes) + topo.assemble_cost
 
 
+def _round_shape(topo: ClusterTopology, rnd: Round) -> tuple[int, bool, bool]:
+    """(NIC serialization factor, has_global, has_write) for one round."""
+    mach_out: dict[int, int] = defaultdict(int)
+    mach_in: dict[int, int] = defaultdict(int)
+    has_global = False
+    has_write = False
+    for op in rnd.ops:
+        if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
+            has_global = True
+            mach_out[topo.machine_of(op.src)] += 1
+            mach_in[topo.machine_of(op.dst)] += 1
+        elif isinstance(op, LocalWrite):
+            has_write = True
+    serial = 1
+    for n in list(mach_out.values()) + list(mach_in.values()):
+        serial = max(serial, math.ceil(n / topo.degree))
+    return serial, has_global, has_write
+
+
+def _round_time(topo: ClusterTopology, rnd: Round) -> float:
+    """One round's duration: most expensive op times the NIC serialization
+    factor, plus the chained write slack (see ``simulate_rounds``)."""
+    if not rnd.ops:
+        return 0.0
+    serial, has_global, has_write = _round_shape(topo, rnd)
+    dur = max(_op_cost(topo, op) for op in rnd.ops) * serial
+    if has_global and has_write:
+        # chained shared-memory publish hides inside the round slack
+        dur += topo.write_cost
+    return dur
+
+
 def simulate_rounds(sched: Schedule, check: bool = True) -> float:
     """Round-based (telephone) simulated completion time, seconds.
 
@@ -117,31 +149,97 @@ def simulate_rounds(sched: Schedule, check: bool = True) -> float:
     if check:
         validate(sched)
     topo = sched.topo
-    total = 0.0
+    return sum(_round_time(topo, rnd) for rnd in sched.rounds)
+
+
+# ----------------------------------------------------------------------
+# Pipelined (bucketed) cost view
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PipelinedCost:
+    """Modelled time for a schedule run as ``n_chunks`` pipelined chunks.
+
+    t_chunk:       one chunk through every stage (the chunk latency).
+    t_serial:      ``n_chunks * t_chunk`` -- bucketed but UNpipelined (each
+                   chunk waits for the previous one to fully finish).
+    t_pipelined:   the overlapped time: while chunk k's global exchange is
+                   on the wire, chunk k+1's local combine proceeds.
+    stages:        per-stage ('local' | 'global', seconds) breakdown of one
+                   chunk.
+    """
+
+    n_chunks: int
+    chunk_bytes: float
+    t_chunk: float
+    t_serial: float
+    t_pipelined: float
+    stages: tuple
+
+    @property
+    def speedup_vs_serial(self) -> float:
+        return self.t_serial / self.t_pipelined if self.t_pipelined else 1.0
+
+
+def pipeline_stages(sched: Schedule) -> list[tuple[str, float]]:
+    """Contiguous same-tier runs of rounds, as ('local'|'global', seconds).
+
+    A round is 'global' when it carries any cross-machine Send, else
+    'local' (clique reads and shared-memory writes).  Consecutive rounds on
+    the same tier merge into one pipeline stage: the tiers are distinct
+    resources (Rule 2), so a chunk's stages must run in order but chunk
+    k+1 may occupy a stage as soon as chunk k has vacated it.
+    """
+    topo = sched.topo
+    stages: list[tuple[str, float]] = []
     for rnd in sched.rounds:
         if not rnd.ops:
             continue
-        dur = max(_op_cost(topo, op) for op in rnd.ops)
-        mach_out: dict[int, int] = defaultdict(int)
-        mach_in: dict[int, int] = defaultdict(int)
-        has_global = False
-        has_write = False
-        for op in rnd.ops:
-            if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
-                has_global = True
-                mach_out[topo.machine_of(op.src)] += 1
-                mach_in[topo.machine_of(op.dst)] += 1
-            elif isinstance(op, LocalWrite):
-                has_write = True
-        serial = 1
-        for n in list(mach_out.values()) + list(mach_in.values()):
-            serial = max(serial, math.ceil(n / topo.degree))
-        dur *= serial
-        if has_global and has_write:
-            # chained shared-memory publish hides inside the round slack
-            dur += topo.write_cost
-        total += dur
-    return total
+        _, has_global, _ = _round_shape(topo, rnd)
+        kind = "global" if has_global else "local"
+        dur = _round_time(topo, rnd)
+        if stages and stages[-1][0] == kind:
+            stages[-1] = (kind, stages[-1][1] + dur)
+        else:
+            stages.append((kind, dur))
+    return stages
+
+
+def simulate_pipelined(build, m: float, n_chunks: int,
+                       check: bool = True) -> PipelinedCost:
+    """Price a bucketed, pipelined schedule family (the paper's Rule-3
+    concurrency between tiers, made costable).
+
+    The m-byte message is split into ``n_chunks`` equal chunks; each chunk
+    runs the schedule ``build(m / n_chunks)``.  Maximal runs of same-tier
+    rounds form pipeline stages (``pipeline_stages``); chunk k+1 enters
+    stage s as soon as chunk k has released it AND chunk k+1 cleared stage
+    s-1 -- so round k's local combine overlaps round k+1's global send.
+    Linear-pipeline bound:
+
+        T = sum_s t_s + (n_chunks - 1) * max_s t_s
+
+    which is strictly below the serial ``n_chunks * sum_s t_s`` whenever
+    more than one stage has nonzero duration (i.e. there is local work to
+    hide under the global exchange).
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    chunk_m = m / n_chunks
+    sched = build(chunk_m)
+    if check:
+        validate(sched)
+    stages = pipeline_stages(sched)
+    t_chunk = sum(t for _, t in stages)
+    bottleneck = max((t for _, t in stages), default=0.0)
+    return PipelinedCost(
+        n_chunks=n_chunks,
+        chunk_bytes=chunk_m,
+        t_chunk=t_chunk,
+        t_serial=n_chunks * t_chunk,
+        t_pipelined=t_chunk + (n_chunks - 1) * bottleneck,
+        stages=tuple(stages),
+    )
 
 
 # ----------------------------------------------------------------------
@@ -171,6 +269,19 @@ def cost_features(
     topo = sched.topo
     if params is None:
         params = topo.param_vector()
+    feats = [0.0] * N_COST_FEATURES
+    for rnd in sched.rounds:
+        row = _round_feature_row(topo, rnd, params)
+        for i in range(N_COST_FEATURES):
+            feats[i] += row[i]
+    return tuple(feats)
+
+
+def _round_feature_row(topo: ClusterTopology, rnd: Round, params) -> list:
+    """One round's contribution to the ``cost_features`` vector, such that
+    ``dot(row, params) == _round_time`` at the linearization point."""
+    if not rnd.ops:
+        return [0.0] * N_COST_FEATURES
     al, bl, ag, bg, w, asm = params
 
     def op_cost(op) -> float:
@@ -180,36 +291,61 @@ def cost_features(
             return al + op.nbytes * bl + asm
         return ag + op.nbytes * bg + asm
 
-    feats = [0.0] * N_COST_FEATURES
+    best = max(rnd.ops, key=op_cost)
+    serial, has_global, has_write = _round_shape(topo, rnd)
+    row = [0.0] * N_COST_FEATURES
+    if isinstance(best, LocalWrite):
+        row[4] = 1.0
+    elif topo.co_located(best.src, best.dst):
+        row[0], row[1], row[5] = 1.0, best.nbytes, 1.0
+    else:
+        row[2], row[3], row[5] = 1.0, best.nbytes, 1.0
+    row = [x * serial for x in row]
+    if has_global and has_write:
+        row[4] += 1.0
+    return row
+
+
+def pipelined_cost_features(
+    build, m: float, n_chunks: int, params: tuple | None = None
+) -> tuple[float, float, float, float, float, float]:
+    """``cost_features`` analogue for ``simulate_pipelined``.
+
+    Returns f with ``dot(f, params) == simulate_pipelined(...).t_pipelined``
+    at the linearization point ``params`` (the schedule topology's own
+    parameters by default): the sum of every stage's features plus
+    (n_chunks - 1) copies of the bottleneck stage's -- piecewise linear in
+    the parameters exactly like the round model, so calibration's
+    Gauss-Newton re-linearization applies to pipelined schedules unchanged.
+    """
+    sched = build(m / n_chunks)
+    topo = sched.topo
+    if params is None:
+        params = topo.param_vector()
+    # Stage rows, grouped exactly like pipeline_stages.
+    stage_rows: list[tuple[str, list]] = []
     for rnd in sched.rounds:
         if not rnd.ops:
             continue
-        best = max(rnd.ops, key=op_cost)
-        mach_out: dict[int, int] = defaultdict(int)
-        mach_in: dict[int, int] = defaultdict(int)
-        has_global = False
-        has_write = False
-        for op in rnd.ops:
-            if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
-                has_global = True
-                mach_out[topo.machine_of(op.src)] += 1
-                mach_in[topo.machine_of(op.dst)] += 1
-            elif isinstance(op, LocalWrite):
-                has_write = True
-        serial = 1
-        for n in list(mach_out.values()) + list(mach_in.values()):
-            serial = max(serial, math.ceil(n / topo.degree))
-        row = [0.0] * N_COST_FEATURES
-        if isinstance(best, LocalWrite):
-            row[4] = 1.0
-        elif topo.co_located(best.src, best.dst):
-            row[0], row[1], row[5] = 1.0, best.nbytes, 1.0
+        _, has_global, _ = _round_shape(topo, rnd)
+        kind = "global" if has_global else "local"
+        row = _round_feature_row(topo, rnd, params)
+        if stage_rows and stage_rows[-1][0] == kind:
+            prev = stage_rows[-1][1]
+            stage_rows[-1] = (kind, [a + b for a, b in zip(prev, row)])
         else:
-            row[2], row[3], row[5] = 1.0, best.nbytes, 1.0
+            stage_rows.append((kind, row))
+    feats = [0.0] * N_COST_FEATURES
+    bottleneck_row, bottleneck_t = None, -1.0
+    for _, row in stage_rows:
+        t = sum(f * p for f, p in zip(row, params))
+        if t > bottleneck_t:
+            bottleneck_row, bottleneck_t = row, t
         for i in range(N_COST_FEATURES):
-            feats[i] += row[i] * serial
-        if has_global and has_write:
-            feats[4] += 1.0
+            feats[i] += row[i]
+    if bottleneck_row is not None:
+        for i in range(N_COST_FEATURES):
+            feats[i] += (n_chunks - 1) * bottleneck_row[i]
     return tuple(feats)
 
 
@@ -310,7 +446,7 @@ def _replay_knowledge(sched: Schedule) -> dict[int, set]:
     elif sched.collective in ("gather", "all_gather"):
         for p in range(P):
             know[p].add(p)
-    elif sched.collective == "all_reduce":
+    elif sched.collective in ("all_reduce", "reduce_scatter"):
         c = sched.topo.procs_per_machine
         for p in range(P):
             for s in range(P):
@@ -357,10 +493,54 @@ def check_semantics(sched: Schedule) -> None:
                 raise ScheduleError(f"all_gather incomplete: {p} lacks {lack}")
     elif sched.collective == "all_reduce":
         _check_allreduce(sched, know)
+    elif sched.collective == "reduce_scatter":
+        _check_reduce_scatter(sched, know)
     elif sched.collective == "all_to_all":
         _check_alltoall(sched)
     else:  # pragma: no cover
         raise ScheduleError(f"unknown collective {sched.collective}")
+
+
+def _check_reduce_scatter(sched: Schedule, know) -> None:
+    """Each proc must fully reduce its designated 1/P shard; hierarchical
+    variants must additionally move the bandwidth-optimal m*(M-1)/M global
+    bytes per machine (half an all-reduce)."""
+    topo = sched.topo
+    P = topo.n_procs
+    M, c, m = topo.n_machines, topo.procs_per_machine, sched.nbytes
+    if sched.name == "reducescatter_flat_ring":
+        for p in range(P):
+            shard = (p + 1) % P
+            lack = [q for q in range(P) if ("rs", shard, q) not in know[p]]
+            if lack:
+                raise ScheduleError(
+                    f"reduce_scatter: proc {p} shard {shard} missing "
+                    f"contribs {lack}"
+                )
+    else:
+        # Phase-1 local reduce-scatter completeness via real payloads ...
+        for mach in range(M):
+            procs = list(topo.procs_of(mach))
+            for i, p in enumerate(procs):
+                shard = (i + 1) % c
+                lack = [
+                    j
+                    for j in range(c)
+                    if ("lrs", mach, shard, j) not in know[p]
+                ]
+                if lack:
+                    raise ScheduleError(
+                        f"reduce_scatter: machine {mach} proc {p} shard "
+                        f"{shard} missing local contribs {lack}"
+                    )
+        # ... plus the inter-machine volume lower bound for phase 2.
+        if M > 1:
+            gbytes = sched.total_global_bytes()
+            need = M * m * (M - 1) / M * 0.999
+            if gbytes < need:
+                raise ScheduleError(
+                    f"reduce_scatter: global bytes {gbytes} < required {need}"
+                )
 
 
 def _check_allreduce(sched: Schedule, know) -> None:

@@ -89,7 +89,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
             "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
             "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
             "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
-            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)
+            ),
         }
         rec["memory"]["peak_per_device_bytes"] = (
             rec["memory"]["argument_bytes"]
@@ -176,7 +178,11 @@ def main() -> None:
         print(
             f"[{status}] {arch:20s} {shape:12s} {mk:6s} "
             f"mem/dev={mem:7.2f}GiB flops={fl:.3e} t={rec.get('total_s', 0)}s"
-            + ("" if rec.get("ok") or rec.get("skipped") else f"  ERR={rec.get('error','')[:120]}"),
+            + (
+                ""
+                if rec.get("ok") or rec.get("skipped")
+                else f"  ERR={rec.get('error', '')[:120]}"
+            ),
             flush=True,
         )
     print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}", flush=True)

@@ -112,12 +112,14 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
                policy="default", calibration="") -> Cell:
     """Build one train cell.
 
-    ``pod_sync`` may be 'flat', 'q8', or 'auto' -- 'auto' defers the DCN
-    wire format to ``repro.comm``'s cost model (planned per this model's
-    gradient bytes; opts into the lossy q8 path when compression wins).
-    ``calibration`` optionally names a ``comm.calibrate`` JSON so that the
-    decision uses parameters fitted on this hardware instead of presets.
-    The resolved format is recorded in ``meta['pod_sync']``.
+    ``pod_sync`` may be any of ``comm.POD_SYNC_FORMATS`` ('flat', 'q8',
+    'rs', 'rs_q8') or 'auto' -- 'auto' defers the DCN wire format AND the
+    bucket size to ``repro.comm``'s pipelined cost model (planned per this
+    model's gradient bytes; opts into the lossy q8 paths when compression
+    wins).  ``calibration`` optionally names a ``comm.calibrate`` JSON so
+    that the decision uses parameters fitted on this hardware instead of
+    presets.  The resolved format and bucket size are recorded in
+    ``meta['pod_sync']`` / ``meta['bucket_bytes']``.
     """
     cfg = effective_cfg(cfg, shape)
     pol = make_policy_for(cfg, mesh, variant=policy)
@@ -136,12 +138,15 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
         model_in_batch=pol.fold_model,
     )
     # Resolve 'auto' once, here: the step is built from the concrete format
-    # and meta records exactly what the compiled step runs.
+    # + bucket size and meta records exactly what the compiled step runs.
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
-    pod_sync = train_steps.resolve_pod_sync(
+    decision = train_steps.plan_pod_sync(
         cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
     )
-    tcfg = dataclasses.replace(tcfg, pod_sync=pod_sync)
+    pod_sync = decision.fmt
+    tcfg = dataclasses.replace(
+        tcfg, pod_sync=pod_sync, bucket_bytes=decision.bucket_bytes
+    )
     ocfg = adamw.AdamWConfig(moment_dtype=over.get("moments", "float32"))
     step, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
 
@@ -158,7 +163,8 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
                                is_leaf=lambda x: isinstance(x, P))
     in_sh = (n(pspecs), n(ospecs), n(bspecs))
     meta = dict(kind="train", accum=tcfg.accum_steps, remat=tcfg.remat,
-                pod_mode=pod_mode, pod_sync=pod_sync, policy=policy)
+                pod_mode=pod_mode, pod_sync=pod_sync,
+                bucket_bytes=tcfg.bucket_bytes, policy=policy)
     return Cell(
         name=f"{cfg.name}:{shape.name}",
         fn=step,

@@ -38,10 +38,15 @@ def main() -> None:
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--remat", default="nothing")
     ap.add_argument("--pod-sync", default="flat",
-                    choices=["flat", "q8", "auto"],
-                    help="pod-tier wire format; 'auto' defers to the cost "
-                         "model (calibrated when --calibration or "
+                    choices=["flat", "q8", "rs", "rs_q8", "auto"],
+                    help="pod-tier wire format; 'rs'/'rs_q8' use the "
+                         "bandwidth-optimal reduce-scatter exchange, "
+                         "'auto' defers to the pipelined cost model "
+                         "(calibrated when --calibration or "
                          "$REPRO_CALIBRATION names a fit)")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="pod-sync bucket size in bytes (0 = monolithic; "
+                         "with --pod-sync auto the cost model chooses)")
     ap.add_argument("--calibration", default="",
                     help="comm.calibrate JSON fitted on this hardware; "
                          "consumed by --pod-sync auto")
@@ -89,26 +94,33 @@ def main() -> None:
     pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % mesh.devices.shape[-1] == 0)
     tcfg = train_steps.TrainConfig(
         accum_steps=args.accum, remat=args.remat, pod_sync=args.pod_sync,
+        bucket_bytes=args.bucket_bytes,
         pod_mode="manual" if "pod" in mesh.axis_names else "none",
         use_kernel=False, calibration=args.calibration,
     )
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
-    resolved_sync = train_steps.resolve_pod_sync(
+    decision = train_steps.plan_pod_sync(
         cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
     )
-    tcfg = dataclasses.replace(tcfg, pod_sync=resolved_sync)
+    tcfg = dataclasses.replace(
+        tcfg, pod_sync=decision.fmt, bucket_bytes=decision.bucket_bytes
+    )
     if n_pods > 1:
-        print(f"[train] pod_sync={resolved_sync} "
+        print(f"[train] {decision.describe()} "
               f"(requested {args.pod_sync!r}, "
               f"calibration={args.calibration or '$REPRO_CALIBRATION/preset'})")
 
-    ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+    ocfg = adamw.AdamWConfig(
+        lr=args.lr, total_steps=args.steps,
+        warmup_steps=max(args.steps // 20, 5),
+    )
     step_fn, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
 
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"batch={args.global_batch}x{args.seq} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+          f"batch={args.global_batch}x{args.seq} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     opt_state = adamw.init_state(params)
 
     data = make_pipeline(DataConfig(
@@ -117,12 +129,20 @@ def main() -> None:
     ))
 
     jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def stepper(p, o, b):
+        # Trace inside the mesh context so the pod-sync sharding
+        # constraints (PartitionSpecs over 'pod') resolve instead of
+        # falling back (see comm.grad_sync._pin).
+        with mesh:
+            return jitted(p, o, b)
+
     lcfg = train_loop.LoopConfig(
         total_steps=args.steps, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, log_every=10,
     )
     t0 = time.time()
-    state = train_loop.run(jitted, params, opt_state, data, lcfg)
+    state = train_loop.run(stepper, params, opt_state, data, lcfg)
     dt = time.time() - t0
     tok_s = args.steps * args.global_batch * args.seq / dt
     print(f"[train] done: {args.steps} steps in {dt:.1f}s "

@@ -185,8 +185,12 @@ def attention_decode(
     q, k = _rotate(q, k, pos if not cfg.mrope else _mrope_pos(pos), cfg)
     S = cache_k.shape[1]
     slot = position % S
-    cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
-    cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    cache_k = lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0)
+    )
+    cache_v = lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0)
+    )
     g = H // Hkv
     qh = q.reshape(B, 1, Hkv, g, Dh)
     logits = jnp.einsum(

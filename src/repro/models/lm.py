@@ -137,15 +137,24 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
         "final_norm": layers.init_rmsnorm(cfg.d_model),
     }
     if cfg.family in ("dense", "moe", "vlm"):
-        p["blocks"] = _stack([_init_dense_block(ks[i], cfg) for i in range(cfg.n_layers)])
+        p["blocks"] = _stack(
+            [_init_dense_block(ks[i], cfg) for i in range(cfg.n_layers)]
+        )
     elif cfg.family == "ssm":
-        p["blocks"] = _stack([_init_rwkv_block(ks[i], cfg) for i in range(cfg.n_layers)])
+        p["blocks"] = _stack(
+            [_init_rwkv_block(ks[i], cfg) for i in range(cfg.n_layers)]
+        )
     elif cfg.family == "hybrid":
-        p["blocks"] = _stack([_init_mamba_block(ks[i], cfg) for i in range(cfg.n_layers)])
+        p["blocks"] = _stack(
+            [_init_mamba_block(ks[i], cfg) for i in range(cfg.n_layers)]
+        )
         p["shared_attn"] = _init_dense_block(ks[-2], cfg)
     elif cfg.family == "encdec":
         p["enc_blocks"] = _stack(
-            [_init_dense_block(ks[cfg.n_layers + i], cfg) for i in range(cfg.n_enc_layers)]
+            [
+                _init_dense_block(ks[cfg.n_layers + i], cfg)
+                for i in range(cfg.n_enc_layers)
+            ]
         )
         p["blocks"] = _stack(
             [_init_encdec_dec_block(ks[i], cfg) for i in range(cfg.n_layers)]
@@ -204,7 +213,9 @@ def forward(
 
     if cfg.family in ("dense", "moe", "vlm"):
         def body(carry, pl_):
-            y, aux = _dense_block_fwd(pl_, _constrain(carry, batch_axes), positions, cfg, use_kernel)
+            y, aux = _dense_block_fwd(
+                pl_, _constrain(carry, batch_axes), positions, cfg, use_kernel
+            )
             return _constrain(y, batch_axes), aux
         x, auxs = _scan_blocks(body, x, params["blocks"], cfg, remat)
         aux = jnp.sum(auxs)
@@ -360,7 +371,14 @@ def decode_step(
             return c + y, (tm_shift, tm_state, cm_shift)
 
         x, (tms, tmst, cms) = lax.scan(
-            body, x, (params["blocks"], cache["tm_shift"], cache["tm_state"], cache["cm_shift"])
+            body,
+            x,
+            (
+                params["blocks"],
+                cache["tm_shift"],
+                cache["tm_state"],
+                cache["cm_shift"],
+            ),
         )
         cache = dict(cache, tm_shift=tms, tm_state=tmst, cm_shift=cms)
 
@@ -379,7 +397,9 @@ def decode_step(
             def inner(c_, xs_):
                 pl_, conv1, ssm1 = xs_
                 h = layers.rmsnorm(pl_["norm"], c_, cfg.norm_eps)
-                y, (conv1, ssm1) = ssm.mamba2_decode(pl_["mamba"], h, (conv1, ssm1), cfg)
+                y, (conv1, ssm1) = ssm.mamba2_decode(
+                    pl_["mamba"], h, (conv1, ssm1), cfg
+                )
                 return c_ + y, (conv1, ssm1)
 
             c, (convg, ssmg) = lax.scan(inner, c, (pg, convg, ssmg))
@@ -392,7 +412,9 @@ def decode_step(
             return c, (convg, ssmg, ckg, cvg)
 
         x, (convs, ssms, ks, vs) = lax.scan(
-            group_body, x, (grouped_blocks, grouped_conv, grouped_ssm, cache["k"], cache["v"])
+            group_body,
+            x,
+            (grouped_blocks, grouped_conv, grouped_ssm, cache["k"], cache["v"]),
         )
         cache = dict(
             cache,
@@ -529,7 +551,10 @@ def prefill(
             return c + y, (tm_shift, tm_state, cm_shift)
 
         x, (tms, tmst, cms) = lax.scan(body, x, params["blocks"])
-        cache = dict(cache, tm_shift=tms.astype(dt), tm_state=tmst, cm_shift=cms.astype(dt))
+        cache = dict(
+            cache, tm_shift=tms.astype(dt), tm_state=tmst,
+            cm_shift=cms.astype(dt),
+        )
 
     elif cfg.family == "hybrid":
         G = cfg.n_layers // cfg.attn_every
@@ -608,6 +633,8 @@ def prefill(
         raise ValueError(cfg.family)
 
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = layers.unembed(params["embed"], x[:, -1:], cfg.vocab_size).astype(jnp.float32)
+    logits = layers.unembed(params["embed"], x[:, -1:], cfg.vocab_size).astype(
+        jnp.float32
+    )
     cache["pos"] = jnp.asarray(S, jnp.int32)
     return logits[:, 0], cache

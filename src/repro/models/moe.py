@@ -44,7 +44,10 @@ MOE_GROUP = 2048  # tokens per dispatch group
 
 def _capacity(n_tokens: int, cfg) -> int:
     cap = int(
-        math.ceil(n_tokens * cfg.n_experts_per_tok * cfg.capacity_factor / cfg.n_experts)
+        math.ceil(
+            n_tokens * cfg.n_experts_per_tok * cfg.capacity_factor
+            / cfg.n_experts
+        )
     )
     return max(cap, 1)
 

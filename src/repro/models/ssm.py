@@ -116,7 +116,10 @@ def mamba2_decode(p: Params, u: jax.Array, state, cfg):
 def mamba2_state_init(cfg, batch: int, dtype=jnp.float32):
     return (
         jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
-        jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
     )
 
 
@@ -155,7 +158,9 @@ def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
     """x_{t-1} stream; prev is the carry token for decode."""
     if prev is None:
         return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
-    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1) if x.shape[1] > 1 else prev[:, None]
+    if x.shape[1] > 1:
+        return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return prev[:, None]
 
 
 def _rwkv_wkv(r, k, v, w, u, head_dim: int, state=None, chunk: int = 64):

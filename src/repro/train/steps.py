@@ -16,10 +16,13 @@ Three pod modes (the paper-vs-baseline axis of this framework):
                   or int8-compressed (q8) where only int8 payloads + f32
                   block scales cross the pod seam.
 
-The pod-tier wire formats and their planner live in ``repro.comm``: the
-combiners here are ``comm.pod_combine_flat`` / ``comm.pod_combine_q8``, and
-``pod_sync="auto"`` lets the cost model pick the format per gradient size
-(``comm.select_pod_sync``) -- the registry guarantees the pick is runnable.
+The pod-tier wire formats ('flat', 'q8', and the reduce-scatter-based 'rs'
+/ 'rs_q8') and their planner live in ``repro.comm``: the combiner here is
+``comm.pod_combine`` (optionally bucketed into fixed-byte buckets so the
+local tier of bucket k+1 overlaps the DCN exchange of bucket k), and
+``pod_sync="auto"`` lets the pipelined cost model pick format AND bucket
+size per gradient (``comm.plan_pod_sync``) -- the registry guarantees the
+pick is runnable.
 
 (Implementation note: an earlier version used shard_map(axis_names={'pod'})
 for the manual tier; XLA 0.8's SPMD partitioner check-fails on gather /
@@ -32,6 +35,7 @@ reference implementations and are exercised by multi-device tests.)
 from __future__ import annotations
 
 from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -51,8 +55,13 @@ class TrainConfig:
     remat: str = "nothing"       # see lm.REMAT_POLICIES
     aux_weight: float = 0.01
     pod_mode: str = "none"       # none | gspmd | manual
-    pod_sync: str = "flat"       # flat | q8 | auto   (manual mode only;
-    #                              auto = let repro.comm's planner pick)
+    pod_sync: str = "flat"       # flat | q8 | rs | rs_q8 | auto  (manual
+    #                              mode only; auto = let repro.comm's
+    #                              planner pick format AND bucket size)
+    # pod-tier bucket size in bytes: 0 = monolithic sync; with
+    # pod_sync="auto" the planner's pipelined cost model chooses it
+    # (an explicit value here always wins)
+    bucket_bytes: int = 0
     use_kernel: bool = True
     n_pods: int = 1
     # bf16 halves the gradient-accumulator HBM for the 314B single-pod cell
@@ -152,10 +161,12 @@ def _accum_grads(loss_fn, params, batch, accum: int,
 # ----------------------------------------------------------------------
 
 def _constrain_tree(tree, spec_tree):
+    # Same narrow fallback as repro.comm.grad_sync._pin: only the
+    # "no/incompatible ambient mesh" errors degrade to identity.
     def c(x, sp):
         try:
             return jax.lax.with_sharding_constraint(x, sp)
-        except (ValueError, RuntimeError, TypeError):
+        except (ValueError, RuntimeError):
             return x
     return jax.tree.map(c, tree, spec_tree, is_leaf=lambda x: x is None)
 
@@ -165,19 +176,20 @@ pod_combine_flat = comm.pod_combine_flat
 pod_combine_q8 = comm.pod_combine_q8
 
 
-def resolve_pod_sync(
+def plan_pod_sync(
     cfg: ModelConfig,
     tcfg: "TrainConfig",
     n_pods: int,
     chips_per_pod: int | None = None,
-) -> str:
-    """Resolve ``pod_sync='auto'`` through the cost model.
+) -> "comm.PodSyncDecision":
+    """Resolve the pod-tier sync decision (wire format + bucket size).
 
-    Plans a DCN-tier all-reduce of this model's per-chip FSDP gradient
+    Plans a DCN-tier gradient sync of this model's per-chip FSDP gradient
     shard (f32 bytes / chips in one pod -- pass ``chips_per_pod`` from the
-    actual mesh; defaults to the production v5e pod size) and returns the
-    chosen wire format; 'auto' opts into the lossy q8 path when the model
-    says compression wins.
+    actual mesh; defaults to the production v5e pod size).  ``pod_sync=
+    'auto'`` lets the pipelined cost model pick the wire format AND the
+    bucket count (opting into the lossy q8 paths when compression wins);
+    an explicit format (and ``bucket_bytes``) short-circuits the planner.
     """
     if tcfg.pod_sync != "auto":
         if tcfg.pod_sync not in comm.POD_SYNC_FORMATS:
@@ -185,16 +197,35 @@ def resolve_pod_sync(
                 f"unknown pod_sync {tcfg.pod_sync!r}; expected one of "
                 f"{comm.POD_SYNC_FORMATS + ('auto',)}"
             )
-        return tcfg.pod_sync
+        return comm.PodSyncDecision(
+            fmt=tcfg.pod_sync,
+            bucket_bytes=tcfg.bucket_bytes,
+            n_chunks=1,
+            t_modelled=0.0, t_monolithic=0.0,
+            lossy=tcfg.pod_sync in comm.LOSSY_POD_SYNC_FORMATS,
+        )
     if n_pods <= 1 or tcfg.pod_mode != "manual":
-        return "flat"
+        return comm.PodSyncDecision("flat", 0, 1, 0.0, 0.0, False)
     if chips_per_pod is None:
         chips_per_pod = V5E_CHIPS_PER_POD
     grad_bytes = cfg.param_count() * 4.0 / chips_per_pod
-    return comm.select_pod_sync(
+    # An explicit bucket_bytes pins the chunking: the planner then ranks
+    # the wire formats AT that bucket size instead of sweeping it.
+    return comm.plan_pod_sync(
         n_pods, grad_bytes, lossy_ok=True,
         calibration=tcfg.calibration or None,
+        bucket_bytes=tcfg.bucket_bytes or None,
     )
+
+
+def resolve_pod_sync(
+    cfg: ModelConfig,
+    tcfg: "TrainConfig",
+    n_pods: int,
+    chips_per_pod: int | None = None,
+) -> str:
+    """Back-compat wrapper: the chosen wire format only (see plan_pod_sync)."""
+    return plan_pod_sync(cfg, tcfg, n_pods, chips_per_pod).fmt
 
 
 def make_train_step(
@@ -210,9 +241,10 @@ def make_train_step(
     """
     loss_fn = make_loss_fn(cfg, tcfg)
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
-    pod_sync = resolve_pod_sync(
+    sync = plan_pod_sync(
         cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
     )
+    pod_sync, bucket_bytes = sync.fmt, sync.bucket_bytes
 
     def step_body(params, opt_state, batch):
         if tcfg.pod_mode == "manual" and n_pods > 1:
@@ -237,10 +269,10 @@ def make_train_step(
                 is_leaf=lambda x: isinstance(x, P),
             )
             gpod = _constrain_tree(gpod, gspecs)
-            if pod_sync == "q8":
-                grads = comm.pod_combine_q8(gpod, n_pods, gspecs)
-            else:
-                grads = comm.pod_combine_flat(gpod, n_pods)
+            grads = comm.pod_combine(
+                gpod, n_pods, gspecs, fmt=pod_sync,
+                bucket_bytes=bucket_bytes,
+            )
             loss, ce, aux = jnp.mean(losses), jnp.mean(ces), jnp.mean(auxs)
         else:
             loss, ce, aux, grads = _accum_grads(

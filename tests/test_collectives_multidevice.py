@@ -22,7 +22,9 @@ import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 
-COLLECTIVE_REFS = ["all_reduce", "all_to_all", "all_gather", "broadcast"]
+COLLECTIVE_REFS = [
+    "all_reduce", "all_to_all", "all_gather", "broadcast", "reduce_scatter",
+]
 
 
 def run_py(body: str) -> str:
@@ -67,6 +69,11 @@ def reference(collective, x, root=0):
         return np.tile(blocks[root], (8,) + (1,) * (x.ndim - 1))
     if collective == "all_gather":
         return np.tile(x, (8,) + (1,) * (x.ndim - 1))
+    if collective == "reduce_scatter":
+        # every impl returns the mach-major joint-order 1/P shard of the
+        # reduced flat vector; the global out-spec concatenation is then
+        # exactly that vector
+        return blocks.sum(axis=0).reshape(-1)
     raise ValueError(collective)
 
 strategies = [s for c, s in comm.executable_pairs() if c == COLLECTIVE]
@@ -198,10 +205,14 @@ def test_pod_modes_agree_numerically():
                                     cfg.vocab_size)
         batch = {"tokens": tokens, "labels": tokens}
 
-        resolved = T.resolve_pod_sync(
+        from repro import comm
+        decision = T.plan_pod_sync(
             cfg, T.TrainConfig(pod_mode="manual", pod_sync="auto"), 2)
-        assert resolved in ("flat", "q8"), resolved
-        print("auto pod_sync resolves to", resolved)
+        assert decision.fmt in comm.POD_SYNC_FORMATS, decision
+        assert T.resolve_pod_sync(
+            cfg, T.TrainConfig(pod_mode="manual", pod_sync="auto"), 2
+        ) == decision.fmt
+        print("auto pod_sync resolves to", decision.describe())
 
         outs = {}
         for mode, sync in [("gspmd", "flat"), ("manual", "flat"),
@@ -233,6 +244,120 @@ def test_pod_modes_agree_numerically():
                                   jax.tree.leaves(q8_p)))
         assert num < 1.0, num
         print("pod modes ok", base_l, man_l, q8_l)
+    """))
+
+
+def test_bucketed_rs_pod_sync_matches_monolithic():
+    """The perf-opt acceptance: bucketed 'rs' pod sync is numerically equal
+    to the monolithic flat path, and bucketed 'rs_q8' stays within q8
+    tolerance -- in both the shard_map reference and the vmap-mode
+    (train-step) combiners, on 8 fake devices."""
+    print(run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro import comm
+
+        rng = np.random.RandomState(0)
+        tree = {
+            "wa": rng.randn(8, 100, 17).astype(np.float32),
+            "wb": rng.randn(8, 333).astype(np.float32),
+            "wc": rng.randn(8, 65).astype(np.float32),
+        }
+        want = {k: v.mean(axis=0) for k, v in tree.items()}
+
+        # shard_map reference path over an 8-pod mesh
+        mesh = jax.make_mesh((8,), ("pod",))
+        def run(fmt, bucket_bytes):
+            f = jax.jit(shard_map(
+                lambda g: comm.pod_sync_grads(
+                    g, fmt, "pod", bucket_bytes=bucket_bytes),
+                mesh=mesh, in_specs=P("pod"), out_specs=P(),
+                check_rep=False))
+            return f({k: jnp.asarray(v) for k, v in tree.items()})
+
+        mono_flat = run("flat", 0)
+        for fmt, bb, tol in [("rs", 2048, 1e-6), ("rs", 977, 1e-6),
+                             ("rs_q8", 2048, 5e-2)]:
+            got = run(fmt, bb)
+            for k in tree:
+                a = np.asarray(got[k])
+                b = np.asarray(mono_flat[k]).reshape(a.shape)
+                err = np.abs(a - b).max() / np.abs(b).max()
+                assert err < tol, (fmt, bb, k, err)
+            print("shard_map bucketed", fmt, bb, "ok")
+
+        # vmap-mode combiners under a ('pod','data','model') mesh
+        mesh2 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        tree2 = {k: jnp.asarray(v[:2]) for k, v in tree.items()}
+        want2 = {k: np.asarray(v)[:2].mean(axis=0) for k, v in tree.items()}
+        gspecs = {k: P("pod", *([None] * (tree2[k].ndim - 1)))
+                  for k in tree2}
+        with mesh2:
+            mono = jax.jit(lambda g: comm.pod_combine(
+                g, 2, gspecs, fmt="flat"))(tree2)
+            for fmt, bb, tol in [("rs", 0, 1e-6), ("rs", 1024, 1e-6),
+                                 ("rs_q8", 1024, 5e-2)]:
+                got = jax.jit(lambda g, fmt=fmt, bb=bb: comm.pod_combine(
+                    g, 2, gspecs, fmt=fmt, bucket_bytes=bb))(tree2)
+                for k in tree2:
+                    a, b = np.asarray(got[k]), np.asarray(mono[k])
+                    err = np.abs(a - b).max() / np.abs(b).max()
+                    assert err < tol, (fmt, bb, k, err)
+                print("vmap bucketed", fmt, bb, "ok")
+        print("bucketed rs pod sync ok")
+    """))
+
+
+def test_q8_sharding_constraint_applies_on_mesh():
+    """Satellite regression for the silently-swallowed constraint: under a
+    real ('pod','data','model') mesh the q8 combiner's sharding constraints
+    must APPLY (Sharding custom-calls in the lowered HLO, no fallback
+    warning); outside a mesh the fallback warns exactly once."""
+    print(run_py("""
+        import warnings
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro import comm
+        from repro.comm import grad_sync
+
+        rng = np.random.RandomState(0)
+        g = jnp.asarray(rng.randn(2, 16, 256).astype(np.float32))
+        tree = {"w": g}
+        gspecs = {"w": P("pod", "data", None)}
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+        with mesh:
+            with warnings.catch_warnings():
+                warnings.simplefilter("error", RuntimeWarning)  # no fallback
+                lowered = jax.jit(
+                    lambda t: comm.pod_combine_q8(t, 2, gspecs)
+                ).lower(tree)
+                out = jax.jit(
+                    lambda t: comm.pod_combine_q8(t, 2, gspecs)
+                )(tree)
+        hlo = lowered.as_text()
+        assert "Sharding" in hlo, "no sharding custom-calls in lowered HLO"
+        want = np.asarray(g).mean(axis=0)
+        err = np.abs(np.asarray(out["w"]) - want).max() / np.abs(want).max()
+        assert err < 5e-2, err
+        print("constraint applied on mesh, err", err)
+
+        # outside any mesh: narrow fallback path, warns exactly once
+        assert not grad_sync._warned_pin_fallback
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out2 = jax.jit(lambda t: comm.pod_combine_q8(t, 2, gspecs))(tree)
+            out3 = jax.jit(
+                lambda t: comm.pod_combine_q8(t, 2, {"w": P("pod", None, None)})
+            )(tree)
+        runtime_warnings = [x for x in w
+                            if issubclass(x.category, RuntimeWarning)
+                            and "sharding constraint" in str(x.message)]
+        assert len(runtime_warnings) == 1, len(runtime_warnings)
+        assert grad_sync._warned_pin_fallback
+        np.testing.assert_allclose(np.asarray(out2["w"]), want, atol=1e-1)
+        print("fallback warns once outside mesh ok")
     """))
 
 

@@ -8,11 +8,19 @@ from repro.core import schedules as S
 from repro.core.planner import best_plan, enumerate_plans
 from repro.core.simulator import (
     check_semantics,
+    pipeline_stages,
+    pipelined_cost_features,
     simulate_async,
+    simulate_pipelined,
     simulate_rounds,
     validate,
 )
-from repro.core.topology import ClusterTopology, LinkTier, paper_smp_cluster, tpu_v5e_cluster
+from repro.core.topology import (
+    ClusterTopology,
+    LinkTier,
+    paper_smp_cluster,
+    tpu_v5e_cluster,
+)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -158,7 +166,9 @@ def test_cost_monotone_in_message_size(m, coll):
     topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
     for strat in S.GENERATORS[coll]:
         t1 = simulate_rounds(S.build(topo, coll, strat, m, payloads=False), check=False)
-        t2 = simulate_rounds(S.build(topo, coll, strat, 2 * m, payloads=False), check=False)
+        t2 = simulate_rounds(
+            S.build(topo, coll, strat, 2 * m, payloads=False), check=False
+        )
         assert t2 >= t1
 
 
@@ -170,6 +180,80 @@ def test_global_bytes_lower_bound_allreduce():
     for strat in S.GENERATORS["all_reduce"]:
         sched = S.build(topo, "all_reduce", strat, m, payloads=False)
         assert sched.total_global_bytes() >= bound * 0.99, strat
+
+
+# ----------------------------------------------------------------------
+# Pipelined (bucketed) view
+# ----------------------------------------------------------------------
+
+PIPE_CELLS = [
+    ("all_reduce", "hier_par"),
+    ("all_reduce", "hier_par_bw"),
+    ("reduce_scatter", "hier_par"),
+    ("all_gather", "hier_par"),
+    ("all_to_all", "hier_par"),
+]
+
+
+@pytest.mark.parametrize("coll,strat", PIPE_CELLS)
+@pytest.mark.parametrize("n_chunks", [2, 4, 16])
+def test_pipelined_strictly_beats_serial_chunking(coll, strat, n_chunks):
+    """The perf-opt acceptance: whenever n_chunks > 1 and the schedule has
+    nonzero local work (alongside its global work), the pipelined time is
+    strictly below the unpipelined chunked schedule -- overlapping round
+    k's local combine with round k+1's global send must pay off."""
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    build = lambda m: S.build(topo, coll, strat, m, payloads=False)
+    pc = simulate_pipelined(build, 1e6, n_chunks)
+    kinds = {k for k, t in pc.stages if t > 0}
+    assert kinds == {"local", "global"}, pc.stages  # both tiers present
+    assert pc.t_pipelined < pc.t_serial
+    # and the one-chunk case degenerates to the plain round model
+    mono = simulate_pipelined(build, 1e6, 1)
+    assert mono.t_pipelined == mono.t_serial
+    assert mono.t_chunk == pytest.approx(
+        simulate_rounds(build(1e6), check=False), rel=1e-12
+    )
+
+
+def test_pipelined_no_local_work_no_gain():
+    """With one proc per machine there is no local tier to overlap: the
+    pipelined time equals the serial chunked time (and chunking itself
+    only pays extra alphas)."""
+    topo = paper_smp_cluster(n_machines=8, cores=1, nics=1)
+    build = lambda m: S.build(topo, "all_reduce", "hier_par_bw", m,
+                              payloads=False)
+    pc = simulate_pipelined(build, 1e6, 8)
+    assert {k for k, _ in pc.stages} == {"global"}
+    assert pc.t_pipelined == pytest.approx(pc.t_serial)
+
+
+def test_pipeline_stages_partition_the_rounds():
+    """Stages are maximal same-tier runs; their durations sum to the
+    round-model total."""
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    sched = S.build(topo, "all_reduce", "hier_par_bw", 65536.0,
+                    payloads=False)
+    stages = pipeline_stages(sched)
+    kinds = [k for k, _ in stages]
+    assert all(a != b for a, b in zip(kinds, kinds[1:]))  # maximal runs
+    assert sum(t for _, t in stages) == pytest.approx(
+        simulate_rounds(sched, check=False), rel=1e-12
+    )
+
+
+def test_pipelined_cost_features_exact():
+    """dot(pipelined_cost_features, params) == simulate_pipelined at the
+    linearization point -- calibration's fit applies to pipelined
+    schedules unchanged."""
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    for coll, strat in PIPE_CELLS:
+        build = lambda m: S.build(topo, coll, strat, m, payloads=False)
+        for n in (1, 3, 8):
+            f = pipelined_cost_features(build, 2e5, n)
+            t_lin = sum(a * b for a, b in zip(f, topo.param_vector()))
+            want = simulate_pipelined(build, 2e5, n, check=False).t_pipelined
+            assert t_lin == pytest.approx(want, rel=1e-12), (coll, strat, n)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,142 @@
+"""q8 codec edge cases: odd trailing dims, zero blocks, bf16, error bounds.
+
+Property-style round-trip tests via the hypothesis shim (tier-1 env runs a
+deterministic boundary sweep; CI runs real hypothesis).  The codec contract
+being pinned: blockwise symmetric int8 quantization over the last axis has
+per-element absolute error <= max|block| / 127 (half an int8 step, doubled
+for slack), exactly-zero blocks decode to exactly zero, and trailing dims
+that don't divide ``Q8_BLOCK`` round-trip without corrupting shape.
+"""
+
+import numpy as np
+import pytest
+
+from repro.comm import Q8_BLOCK, q8_decode, q8_decode_sum, q8_encode
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # tier-1 env has no hypothesis; CI installs it
+    from _hypothesis_compat import given, settings, strategies as st
+
+
+def _roundtrip(x):
+    import jax.numpy as jnp
+
+    xj = jnp.asarray(x)
+    q, s, last = q8_encode(xj)
+    assert last == x.shape[-1]
+    assert q.dtype == jnp.int8
+    assert q.shape[-1] == Q8_BLOCK
+    y = q8_decode(q, s, last, xj.shape, xj.dtype)
+    assert y.shape == xj.shape and y.dtype == xj.dtype
+    return np.asarray(q), np.asarray(s), np.asarray(y, dtype=np.float64)
+
+
+@given(
+    last=st.integers(1, 2 * Q8_BLOCK + 3),
+    lead=st.sampled_from([(), (3,), (2, 5)]),
+)
+@settings(max_examples=24, deadline=None)
+def test_roundtrip_bound_odd_trailing_dims(last, lead):
+    """Trailing dims not divisible by Q8_BLOCK: shape survives and the
+    per-block error bound holds on the real (unpadded) elements."""
+    rng = np.random.RandomState(last * 31 + len(lead))
+    x = (rng.randn(*lead, last) * 10).astype(np.float32)
+    _, _, y = _roundtrip(x)
+    # per-block bound: |x - y| <= max|block| / 127 (rounding is half a
+    # step; factor 2 slack for the f32 scale itself being rounded)
+    flat_x = x.reshape(-1, last)
+    flat_y = y.reshape(-1, last)
+    for row_x, row_y in zip(flat_x, flat_y):
+        for lo in range(0, last, Q8_BLOCK):
+            blk = row_x[lo:lo + Q8_BLOCK]
+            bound = np.abs(blk).max() / 127.0 + 1e-12
+            assert np.abs(blk - row_y[lo:lo + Q8_BLOCK]).max() <= bound
+
+
+def test_zero_blocks_decode_to_exact_zero():
+    """All-zero blocks hit the scale==0 guard: scale forced to 1, q == 0,
+    decode returns exact zeros (no NaNs from 0/0)."""
+    x = np.zeros((3, 130), np.float32)
+    q, s, y = _roundtrip(x)
+    assert np.all(q == 0)
+    assert np.all(s == 1.0)
+    assert np.all(y == 0.0)
+    # mixed: one zero block among live ones stays exactly zero
+    x = np.zeros((Q8_BLOCK * 3,), np.float32)
+    x[:Q8_BLOCK] = 7.5
+    x[2 * Q8_BLOCK:] = -3.25
+    _, _, y = _roundtrip(x)
+    assert np.all(y[Q8_BLOCK:2 * Q8_BLOCK] == 0.0)
+    assert not np.isnan(y).any()
+
+
+@given(last=st.integers(1, 200))
+@settings(max_examples=16, deadline=None)
+def test_bf16_roundtrip(last):
+    """bf16 inputs: decode returns bf16 of the right shape, error within
+    the combined q8 + bf16 resolution."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(last)
+    x32 = (rng.randn(4, last) * 5).astype(np.float32)
+    x = jnp.asarray(x32).astype(jnp.bfloat16)
+    q, s, lastq = q8_encode(x)
+    assert s.dtype == jnp.float32  # scales stay f32 even for bf16 payloads
+    y = q8_decode(q, s, lastq, x.shape, x.dtype)
+    assert y.dtype == jnp.bfloat16 and y.shape == x.shape
+    xf = np.asarray(x, dtype=np.float32)
+    yf = np.asarray(y, dtype=np.float32)
+    scale = np.abs(xf).max() + 1e-9
+    # 1/127 quantization + ~1/128 bf16 mantissa, generous slack
+    assert np.abs(xf - yf).max() / scale < 0.03
+
+
+def test_decode_sum_matches_sum_of_decodes():
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0)
+    xs = [(rng.randn(97) * 3).astype(np.float32) for _ in range(4)]
+    qs, ss = [], []
+    for x in xs:
+        q, s, last = q8_encode(jnp.asarray(x))
+        qs.append(q)
+        ss.append(s)
+    got = np.asarray(
+        q8_decode_sum(
+            jnp.stack(qs), jnp.stack(ss), 97, (97,), jnp.float32,
+            scale=0.25,
+        )
+    )
+    want = np.mean(
+        [
+            np.asarray(q8_decode(q, s, 97, (97,), jnp.float32))
+            for q, s in zip(qs, ss)
+        ],
+        axis=0,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_encode_rejects_nothing_but_preserves_large_tensors_shape():
+    """Leading dims are never flattened (the >2^31-element contract): the
+    block structure only reshapes the last axis."""
+    import jax.numpy as jnp
+
+    x = jnp.ones((5, 7, Q8_BLOCK * 2 + 1), jnp.float32)
+    q, s, last = q8_encode(x)
+    assert q.shape == (5, 7, 3, Q8_BLOCK)
+    assert s.shape == (5, 7, 3, 1)
+    assert last == Q8_BLOCK * 2 + 1
+
+
+@pytest.mark.parametrize("shape", [(64,), (100,), (3, 7, 11)])
+def test_roundtrip_relative_error_small(shape):
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(42)
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32) * 10)
+    q, s, last = q8_encode(x)
+    y = q8_decode(q, s, last, x.shape, x.dtype)
+    err = float(jnp.max(jnp.abs(x - y)) / jnp.max(jnp.abs(x)))
+    assert err < 1e-2, (shape, err)
