@@ -143,13 +143,16 @@ def main(argv=None) -> None:
                     help="timing repeats per probe (0 = preset)")
     ap.add_argument("--save-calibration", default="",
                     help="also write the fitted calibration JSON here")
+    ap.add_argument("--no-three-tier", action="store_true",
+                    help="skip the three-tier (shm / numa / gige) probe "
+                         "sweep over the same mesh")
     args = ap.parse_args(argv)
 
     _ensure_devices(args.mach * args.core)
     import jax
 
     from repro import comm
-    from repro.core.topology import paper_smp_cluster
+    from repro.core.topology import paper_smp_3tier, paper_smp_cluster
 
     if len(jax.devices()) < args.mach * args.core:
         raise SystemExit(
@@ -176,30 +179,77 @@ def main(argv=None) -> None:
             n_devices=len(jax.devices()),
         ),
     )
-    ctx_fit = comm.CommContext(calib.topology)
-    ctx_preset = comm.CommContext(preset)
-    val_fit = ctx_fit.validate_against_measurements(calib.measurements)
-    val_preset = ctx_preset.validate_against_measurements(calib.measurements)
-
-    rows = []
-    for ms, vf, vp in zip(calib.measurements, val_fit, val_preset):
-        rows.append(
-            dict(
-                collective=ms.collective,
-                strategy=ms.strategy,
-                nbytes=ms.nbytes,
-                shape=list(ms.shape) if ms.shape else None,
-                t_measured_us=ms.t_measured * 1e6,
-                t_model_preset_us=vp["t_modelled"] * 1e6,
-                t_model_fitted_us=vf["t_modelled"] * 1e6,
-                rel_error_preset=vp["rel_error"],
-                rel_error_fitted=vf["rel_error"],
-            )
+    def measurement_rows(calib_, preset_topo, tiers: int):
+        ctx_f = comm.CommContext(calib_.topology)
+        val_f = ctx_f.validate_against_measurements(calib_.measurements)
+        val_p = comm.CommContext(preset_topo).validate_against_measurements(
+            calib_.measurements
         )
-    crossover = [
-        dict(r, shape=list(r["shape"]) if r["shape"] else None)
-        for r in ctx_fit.crossover_table(calib.measurements)
-    ]
+        out = []
+        for ms, vf, vp in zip(calib_.measurements, val_f, val_p):
+            out.append(
+                dict(
+                    collective=ms.collective,
+                    strategy=ms.strategy,
+                    nbytes=ms.nbytes,
+                    root=ms.root,
+                    shape=list(ms.shape) if ms.shape else None,
+                    fanout=list(ms.fanout) if ms.fanout else None,
+                    tiers=tiers,
+                    t_measured_us=ms.t_measured * 1e6,
+                    t_model_preset_us=vp["t_modelled"] * 1e6,
+                    t_model_fitted_us=vf["t_modelled"] * 1e6,
+                    rel_error_preset=vp["rel_error"],
+                    rel_error_fitted=vf["rel_error"],
+                )
+            )
+        xo = [
+            dict(r, shape=list(r["shape"]) if r["shape"] else None,
+                 tiers=tiers)
+            for r in ctx_f.crossover_table(calib_.measurements)
+        ]
+        return out, xo
+
+    rows, crossover = measurement_rows(calib, preset, tiers=2)
+
+    # Three-tier preset sweep over the SAME mesh: the core axis realizes
+    # (cores x boards) of a shm / numa / gige hierarchy, so BENCH_comm.json
+    # and the regret gate track strategy selection per network level
+    # (stage-per-tier probes included).
+    three_tier = None
+    if not args.no_three_tier and args.core % 2 == 0 and args.core >= 4:
+        preset3 = paper_smp_3tier(
+            n_machines=args.mach, boards=2, cores=args.core // 2,
+            nics=args.degree,
+        )
+        print(f"[bench] probing 3-tier {'x'.join(map(str, preset3.fanout))} "
+              f"hierarchy on the same mesh")
+        calib3 = comm.calibrate(
+            preset3, mesh, sizes, repeats=repeats, verbose=True,
+            meta=dict(quick=args.quick, tiers=3),
+        )
+        rows3, xo3 = measurement_rows(calib3, preset3, tiers=3)
+        rows += rows3
+        crossover += xo3
+        prod3 = comm.plan_pod_sync(
+            2, 4e9,
+            topo=comm.calibrated_cluster(
+                calib3, fanout=(4, 64, 2), degree=64
+            ),
+        )
+        three_tier = dict(
+            calibration=calib3.to_dict(),
+            n_probes=len(rows3),
+            bucketed_decision=dict(
+                fmt=prod3.fmt,
+                bucket_bytes=prod3.bucket_bytes,
+                n_chunks=prod3.n_chunks,
+                t_modelled_us=prod3.t_modelled * 1e6,
+                modelled_speedup=prod3.speedup,
+            ),
+        )
+        print(f"[bench] 3-tier production-shape auto decision: "
+              f"{prod3.describe()}")
 
     # Bucketed-vs-monolithic pod sync on the same devices + fitted model,
     # and the production-shape decision the trainer's `auto` would take
@@ -225,6 +275,7 @@ def main(argv=None) -> None:
         calibration=calib.to_dict(),
         rows=rows,
         crossover=crossover,
+        three_tier=three_tier,
         bucketed=bucketed,
         bucketed_decision=dict(
             fmt=prod_decision.fmt,

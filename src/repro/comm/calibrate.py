@@ -45,7 +45,10 @@ from repro.core.topology import ClusterTopology
 from . import registry
 from .context import plan_for_spec
 
-CALIBRATION_VERSION = 1
+# v2 serializes the topology as a tier LIST (fanout + per-tier alpha/beta),
+# the N-tier generalization; v1 files (fixed local/global pair) are upgraded
+# transparently by ``CalibrationResult.from_dict``.
+CALIBRATION_VERSION = 2
 
 # Environment variable naming a calibration JSON; when set, ``pod_sync="auto"``
 # and other planner consumers use fitted parameters instead of presets.
@@ -53,7 +56,16 @@ CALIBRATION_ENV = "REPRO_CALIBRATION"
 
 # Feasibility floors applied during the fit (pre-projection): solutions are
 # clipped here so a noisy column can't drive a parameter negative.
-_FLOORS = np.array([1e-9, 1e-12, 1e-9, 1e-12, 1e-9])
+_ALPHA_FLOOR = 1e-9
+_BETA_FLOOR = 1e-12
+
+
+def _floors(n_tiers: int) -> np.ndarray:
+    """Per-parameter floors for the free vector (alphas/betas per tier,
+    then write_cost)."""
+    return np.array(
+        [_ALPHA_FLOOR, _BETA_FLOOR] * n_tiers + [_ALPHA_FLOOR]
+    )
 
 
 @dataclass(frozen=True)
@@ -65,11 +77,19 @@ class Measurement:
     t_measured:  wall-clock seconds (min over repeats).
     t_modelled:  round-model prediction under the topology used at probe
                  time (the preset), for trajectory tracking.
+    root:        the rooted collective's root proc (broadcast/gather probes
+                 sweep several roots -- root placement changes which
+                 machine pays egress serialization).
     shape:       (n_machines, procs_per_machine, degree) of the cluster the
                  probe ran on, or None for the calibration's full shape.
                  Single-machine probes (shape[0] == 1) are pure local-tier
                  exercises -- they pin alpha_local and write_cost, which
                  contribute only a few percent of any cluster-wide total.
+    fanout:      full tier hierarchy of the probe shape (innermost first).
+                 Stage probes on an N-tier topology truncate the hierarchy
+                 (e.g. one pod of a 3-tier cluster probes fanout (4, 64, 1));
+                 ``shape`` keeps the collapsed two-level view for
+                 back-compat.  None means "derive from shape".
     """
 
     collective: str
@@ -79,6 +99,7 @@ class Measurement:
     t_modelled: float | None = None
     root: int = 0
     shape: tuple[int, int, int] | None = None
+    fanout: tuple | None = None
 
     def to_dict(self) -> dict:
         return dict(
@@ -89,6 +110,7 @@ class Measurement:
             t_modelled=self.t_modelled,
             root=self.root,
             shape=list(self.shape) if self.shape else None,
+            fanout=list(self.fanout) if self.fanout else None,
         )
 
     @classmethod
@@ -96,6 +118,10 @@ class Measurement:
         d = dict(d)
         if d.get("shape"):
             d["shape"] = tuple(d["shape"])
+        if d.get("fanout"):
+            d["fanout"] = tuple(d["fanout"])
+        else:
+            d.pop("fanout", None)
         return cls(**d)
 
 
@@ -125,13 +151,12 @@ class CalibrationResult:
         return dict(
             version=CALIBRATION_VERSION,
             topology=dict(
-                n_machines=t.n_machines,
-                procs_per_machine=t.procs_per_machine,
+                fanout=list(t.fanout),
                 degree=t.degree,
-                local=dict(name=t.local.name, alpha=t.local.alpha,
-                           beta=t.local.beta),
-                global_=dict(name=t.global_.name, alpha=t.global_.alpha,
-                             beta=t.global_.beta),
+                tiers=[
+                    dict(name=tier.name, alpha=tier.alpha, beta=tier.beta)
+                    for tier in t.tiers
+                ],
                 write_cost=t.write_cost,
                 assemble_cost=t.assemble_cost,
             ),
@@ -140,24 +165,39 @@ class CalibrationResult:
             measurements=[ms.to_dict() for ms in self.measurements],
         )
 
+    @staticmethod
+    def _upgrade_v1(d: dict) -> dict:
+        """Rewrite a version-1 (fixed local/global pair) file as version 2."""
+        td = d["topology"]
+        out = dict(d)
+        out["version"] = 2
+        out["topology"] = dict(
+            fanout=[td["procs_per_machine"], td["n_machines"]],
+            degree=td["degree"],
+            tiers=[td["local"], td["global_"]],
+            write_cost=td["write_cost"],
+            assemble_cost=td["assemble_cost"],
+        )
+        return out
+
     @classmethod
     def from_dict(cls, d: dict) -> "CalibrationResult":
+        if d.get("version") == 1:
+            d = cls._upgrade_v1(d)
         if d.get("version") != CALIBRATION_VERSION:
             raise ValueError(
                 f"unsupported calibration version {d.get('version')!r} "
-                f"(expected {CALIBRATION_VERSION})"
+                f"(expected <= {CALIBRATION_VERSION})"
             )
         td = d["topology"]
-        topo = ClusterTopology.fitted(
-            td["n_machines"], td["procs_per_machine"], td["degree"],
-            alpha_local=td["local"]["alpha"],
-            beta_local=td["local"]["beta"],
-            alpha_global=td["global_"]["alpha"],
-            beta_global=td["global_"]["beta"],
+        topo = ClusterTopology.fitted_tiers(
+            td["fanout"],
+            td["degree"],
+            alphas=[tier["alpha"] for tier in td["tiers"]],
+            betas=[tier["beta"] for tier in td["tiers"]],
             write_cost=td["write_cost"],
             assemble_cost=td["assemble_cost"],
-            local_name=td["local"]["name"],
-            global_name=td["global_"]["name"],
+            names=tuple(tier["name"] for tier in td["tiers"]),
         )
         return cls(
             topology=topo,
@@ -186,26 +226,47 @@ def calibrated_cluster(
     n_machines: int | None = None,
     procs_per_machine: int | None = None,
     degree: int | None = None,
+    fanout=None,
 ) -> ClusterTopology:
     """Fitted link tiers transplanted onto a (possibly different) shape.
 
     Calibration probes run on whatever mesh is available (a 2x4 fake-device
     box in CI); production plans for 2x256 pods.  Per-link alpha/beta and the
-    shared-memory write cost carry over; the shape does not.
+    shared-memory write cost carry over; the shape does not.  ``fanout``
+    replaces the whole hierarchy shape (must have one entry per fitted
+    tier); the legacy ``n_machines`` / ``procs_per_machine`` overrides
+    adjust the outermost / inner extents of a two-level view.
     """
     t = calib.topology
-    return ClusterTopology.fitted(
-        n_machines or t.n_machines,
-        procs_per_machine or t.procs_per_machine,
+    if fanout is not None:
+        if len(fanout) != t.n_tiers:
+            raise ValueError(
+                f"fanout {tuple(fanout)} has {len(fanout)} levels, the "
+                f"calibration fitted {t.n_tiers} tiers"
+            )
+        fanout = tuple(int(f) for f in fanout)
+    else:
+        fanout = list(t.fanout)
+        if n_machines:
+            fanout[-1] = n_machines
+        if procs_per_machine:
+            if t.n_tiers == 2:
+                fanout[0] = procs_per_machine
+            elif procs_per_machine != math.prod(fanout[:-1]):
+                raise ValueError(
+                    f"procs_per_machine={procs_per_machine} is ambiguous on "
+                    f"a {t.n_tiers}-tier calibration (inner fanout "
+                    f"{tuple(fanout[:-1])}); pass fanout= instead"
+                )
+        fanout = tuple(fanout)
+    return ClusterTopology.fitted_tiers(
+        fanout,
         degree or t.degree,
-        alpha_local=t.local.alpha,
-        beta_local=t.local.beta,
-        alpha_global=t.global_.alpha,
-        beta_global=t.global_.beta,
+        alphas=[tier.alpha for tier in t.tiers],
+        betas=[tier.beta for tier in t.tiers],
         write_cost=t.write_cost,
         assemble_cost=t.assemble_cost,
-        local_name=t.local.name,
-        global_name=t.global_.name,
+        names=tuple(tier.name for tier in t.tiers),
     )
 
 
@@ -301,29 +362,41 @@ def _probe_stage(
             continue
         if not spec.supports(topo):
             continue
-        for size in sizes:
-            m = _probe_m(size)
-            t = measure_strategy(
-                spec, mesh, m, mach_axis=mach_axis, core_axis=core_axis,
-                repeats=repeats,
-            )
-            modelled = plan_for_spec(topo, spec, m).t_rounds
-            out.append(
-                Measurement(
-                    collective=spec.collective,
-                    strategy=spec.strategy,
-                    nbytes=m,
-                    t_measured=t,
-                    t_modelled=modelled,
-                    shape=shape,
+        roots = [0]
+        if spec.caps.needs_root and topo.n_procs > 1:
+            # Rooted calibration (ROADMAP "per-root cost caching"): sweep a
+            # root in the first machine AND one in the last -- root
+            # placement changes which machine pays egress serialization,
+            # and on the single-machine stage the far root exercises the
+            # local boundary instead.
+            roots = sorted({0, topo.n_procs - 1})
+        for root in roots:
+            for size in sizes:
+                m = _probe_m(size)
+                t = measure_strategy(
+                    spec, mesh, m, mach_axis=mach_axis, core_axis=core_axis,
+                    root=root, repeats=repeats,
                 )
-            )
-            if verbose:
-                print(
-                    f"[probe] {topo.n_machines}x{topo.procs_per_machine} "
-                    f"{spec.collective}/{spec.strategy} m={m:.0f}B "
-                    f"measured={t * 1e6:.1f}us modelled={modelled * 1e6:.1f}us"
+                modelled = plan_for_spec(topo, spec, m, root=root).t_rounds
+                out.append(
+                    Measurement(
+                        collective=spec.collective,
+                        strategy=spec.strategy,
+                        nbytes=m,
+                        t_measured=t,
+                        t_modelled=modelled,
+                        root=root,
+                        shape=shape,
+                        fanout=topo.fanout,
+                    )
                 )
+                if verbose:
+                    print(
+                        f"[probe] {'x'.join(map(str, topo.fanout))} "
+                        f"{spec.collective}/{spec.strategy} m={m:.0f}B "
+                        f"root={root} measured={t * 1e6:.1f}us "
+                        f"modelled={modelled * 1e6:.1f}us"
+                    )
     return out
 
 
@@ -346,12 +419,14 @@ def probe_collectives(
     in ``t_modelled``); it must mirror ``mesh``'s (mach, core) extents.
     ``sizes`` are target bytes per proc.
 
-    When ``local_stage`` is set (and the mesh spans more than one machine),
-    a second sweep runs on a single-machine sub-mesh (the first machine's
-    cores).  Those probes exercise only the local tier and the shared-memory
-    write, which cluster-wide totals barely expose -- without them the fit
-    cannot separate alpha_local/write_cost from noise (the tuning papers'
-    per-tier probe methodology).
+    When ``local_stage`` is set, one extra sweep runs per *inner* tier
+    boundary on a truncated sub-mesh (stage ``l`` keeps one level-``l``
+    group: the classic single-machine stage for a two-tier topology, plus
+    e.g. a one-pod stage and a one-host stage for a three-tier one).  Those
+    probes exercise only the inner tiers and the shared-memory write, which
+    cluster-wide totals barely expose -- without them the fit cannot
+    separate each boundary's alpha/beta from noise (the tuning papers'
+    per-tier probe methodology, stage-per-tier).
     """
     mm, cc = (dict(zip(mesh.axis_names, mesh.devices.shape))[a]
               for a in (mach_axis, core_axis))
@@ -369,18 +444,22 @@ def probe_collectives(
         topo, mesh, sizes,
         shape=(topo.n_machines, topo.procs_per_machine, topo.degree), **kw,
     )
-    if local_stage and topo.n_machines > 1:
+    if local_stage:
         from jax.sharding import Mesh
 
         ax = list(mesh.axis_names)
-        idx = [slice(None)] * mesh.devices.ndim
-        idx[ax.index(mach_axis)] = slice(0, 1)
-        sub_mesh = Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
-        sub_topo = topo.with_(n_machines=1)
-        out += _probe_stage(
-            sub_topo, sub_mesh, sizes,
-            shape=(1, topo.procs_per_machine, topo.degree), **kw,
-        )
+        for level in range(topo.n_tiers - 1, 0, -1):
+            stage_topo = topo.stage(level)
+            if stage_topo.n_procs == topo.n_procs:
+                continue  # outermost extent already 1: the full sweep is it
+            idx = [slice(None)] * mesh.devices.ndim
+            idx[ax.index(mach_axis)] = slice(0, 1)
+            idx[ax.index(core_axis)] = slice(0, stage_topo.procs_per_machine)
+            sub_mesh = Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
+            out += _probe_stage(
+                stage_topo, sub_mesh, sizes,
+                shape=(1, stage_topo.procs_per_machine, topo.degree), **kw,
+            )
     return out
 
 
@@ -390,10 +469,11 @@ def probe_collectives(
 
 def fit_topology(
     measurements,
-    n_machines: int,
-    procs_per_machine: int,
-    degree: int,
+    n_machines: int | None = None,
+    procs_per_machine: int | None = None,
+    degree: int = 1,
     *,
+    fanout=None,
     assemble_cost: float = 0.0,
     include_lossy: bool = False,
     max_iter: int = 12,
@@ -401,51 +481,71 @@ def fit_topology(
 ) -> FitResult:
     """Least-squares-fit per-tier alpha/beta and write_cost from timings.
 
+    The fitted hierarchy is ``fanout`` (innermost first, one entry per link
+    tier); the legacy positional (n_machines, procs_per_machine) pair is
+    the two-tier shorthand ``fanout=(procs_per_machine, n_machines)``.
     Minimizes the *relative* residual sum((model(theta) - t) / t)^2 over
-    theta = (alpha_l, beta_l, alpha_g, beta_g, write_cost); relative
-    weighting keeps microsecond-scale small-message rows (which pin the
-    alphas) from being drowned by millisecond-scale large-message rows
-    (which pin the betas).  ``assemble_cost`` is held fixed (it is exactly
-    collinear with the alphas -- see module docstring).
+    theta = (alpha_0, beta_0, ..., alpha_{T-1}, beta_{T-1}, write_cost);
+    relative weighting keeps microsecond-scale small-message rows (which
+    pin the alphas) from being drowned by millisecond-scale large-message
+    rows (which pin the betas).  ``assemble_cost`` is held fixed (it is
+    exactly collinear with the alphas -- see module docstring).
+
+    Measurements from truncated probe stages (``Measurement.fanout``
+    shorter than the fit's) contribute columns only for the tiers they
+    exercise -- the stage-per-tier methodology that lets the fit separate
+    each boundary's alpha/beta from noise.
 
     Lossy (q8) probes are excluded by default: their wall-clock includes
     encode/decode compute the wire model doesn't describe.
     """
+    if fanout is None:
+        if n_machines is None or procs_per_machine is None:
+            raise ValueError(
+                "pass fanout= (N-tier) or the legacy "
+                "(n_machines, procs_per_machine) pair"
+            )
+        fanout = (procs_per_machine, n_machines)
+    fanout = tuple(int(f) for f in fanout)
+    T = len(fanout)
+    width = 2 * T + 2  # per-tier (alpha, beta) + (write, assemble)
+    n_free = 2 * T + 1
     ms = [
         m for m in measurements
         if include_lossy or not registry.get_spec(m.collective, m.strategy).lossy
     ]
-    if len(ms) < 5:
+    if len(ms) < n_free:
         raise ValueError(
-            f"need >= 5 measurements to fit 5 parameters, got {len(ms)}"
+            f"need >= {n_free} measurements to fit {n_free} parameters, "
+            f"got {len(ms)}"
         )
     # Schedule structure (ops, bytes, rounds) depends only on the cluster
     # shape, never on the tier parameters -- build once per measurement
     # (honoring its probe shape), then re-linearize cheaply each iteration.
-    shape_topo = ClusterTopology.fitted(
-        n_machines, procs_per_machine, degree,
-        alpha_local=1e-6, beta_local=1e-9, alpha_global=1e-6, beta_global=1e-9,
+    shape_topo = ClusterTopology.fitted_tiers(
+        fanout, degree,
+        alphas=[1e-6] * T, betas=[1e-9] * T,
         write_cost=1e-6, assemble_cost=assemble_cost,
     )
 
-    def topo_of(m: Measurement) -> ClusterTopology:
-        if m.shape is None or m.shape == (n_machines, procs_per_machine, degree):
-            return shape_topo
-        return shape_topo.with_(
-            n_machines=m.shape[0], procs_per_machine=m.shape[1],
-            degree=m.shape[2],
-        )
+    def shape_of(m: Measurement) -> tuple:
+        """(fanout, degree) of the probe, defaulting to the fit's own."""
+        if m.fanout is not None:
+            fan = tuple(m.fanout)
+        elif m.shape is not None:
+            fan = (m.shape[1], m.shape[0])
+        else:
+            return fanout, degree
+        deg = m.shape[2] if m.shape is not None else degree
+        return fan, deg
 
     def build_all(base: ClusterTopology | None = None):
+        src = base if base is not None else shape_topo
         out = []
         for m in ms:
-            topo_m = topo_of(m)
-            if base is not None:
-                topo_m = base.with_(
-                    n_machines=topo_m.n_machines,
-                    procs_per_machine=topo_m.procs_per_machine,
-                    degree=topo_m.degree,
-                )
+            fan, deg = shape_of(m)
+            topo_m = src if (fan, deg) == (fanout, degree) \
+                else src.with_shape(fan, deg)
             out.append(
                 registry.get_spec(m.collective, m.strategy).build_schedule(
                     topo_m, m.nbytes, root=m.root, payloads=False
@@ -453,34 +553,52 @@ def fit_topology(
             )
         return out
 
+    def feature_matrix(scheds, theta) -> np.ndarray:
+        """Full-width rows; truncated-stage schedules only populate the
+        columns of the tiers they exercise (tier identity is preserved by
+        truncation: stage tiers ARE the innermost fit tiers)."""
+        F = np.zeros((len(scheds), width))
+        for i, s in enumerate(scheds):
+            Ts = s.topo.n_tiers
+            sub = tuple(theta[: 2 * Ts]) + (theta[-2], theta[-1])
+            row = cost_features(s, params=sub)
+            F[i, : 2 * Ts] = row[: 2 * Ts]
+            F[i, -2:] = row[-2:]
+        return F
+
     scheds = build_all()
     t = np.array([m.t_measured for m in ms])
     wts = 1.0 / np.maximum(t, 1e-12)
     theta = np.array(shape_topo.param_vector())
+    floors = _floors(T)
     n_iter = 0
     for n_iter in range(1, max_iter + 1):
-        F = np.array([cost_features(s, params=tuple(theta)) for s in scheds])
-        rhs = (t - F[:, 5] * assemble_cost) * wts
-        sol, *_ = np.linalg.lstsq(F[:, :5] * wts[:, None], rhs, rcond=None)
-        sol = np.maximum(sol, _FLOORS)
-        # Project onto the model's feasible region (Rule 2: local at least
-        # as fast as global) EVERY iteration, not just at the end: the
-        # argmax re-linearization is only self-correcting from a feasible
-        # iterate -- an infeasible one (local "slower" than global) labels
-        # the wrong op as each round's bottleneck and the iteration can
-        # converge to a spurious fixed point.
-        sol[0] = min(sol[0], sol[2])
-        sol[1] = min(sol[1], sol[3])
+        F = feature_matrix(scheds, theta)
+        rhs = (t - F[:, -1] * assemble_cost) * wts
+        sol, *_ = np.linalg.lstsq(
+            F[:, :n_free] * wts[:, None], rhs, rcond=None
+        )
+        sol = np.maximum(sol, floors)
+        # Project onto the model's feasible region (Rule 2: every tier at
+        # least as fast as the tier outside it) EVERY iteration, not just
+        # at the end: the argmax re-linearization is only self-correcting
+        # from a feasible iterate -- an infeasible one (an inner tier
+        # "slower" than an outer one) labels the wrong op as each round's
+        # bottleneck and the iteration can converge to a spurious fixed
+        # point.
+        for i in range(T - 2, -1, -1):
+            sol[2 * i] = min(sol[2 * i], sol[2 * (i + 1)])
+            sol[2 * i + 1] = min(sol[2 * i + 1], sol[2 * (i + 1) + 1])
         new = np.concatenate([sol, [assemble_cost]])
         delta = float(np.max(np.abs(new - theta) / np.maximum(theta, 1e-12)))
         theta = new
         if delta < tol:
             break
-    topo = ClusterTopology.fitted(
-        n_machines, procs_per_machine, degree,
-        alpha_local=theta[0], beta_local=theta[1],
-        alpha_global=theta[2], beta_global=theta[3],
-        write_cost=theta[4], assemble_cost=assemble_cost,
+    topo = ClusterTopology.fitted_tiers(
+        fanout, degree,
+        alphas=[theta[2 * i] for i in range(T)],
+        betas=[theta[2 * i + 1] for i in range(T)],
+        write_cost=theta[-2], assemble_cost=assemble_cost,
     )
     # Report the residual of the *projected* topology (what callers plan
     # with), not the raw iterate.
@@ -508,9 +626,8 @@ def fit_calibration(
     """``fit_topology`` + provenance packaging for persistence."""
     fit = fit_topology(
         measurements,
-        shape_like.n_machines,
-        shape_like.procs_per_machine,
-        shape_like.degree,
+        degree=shape_like.degree,
+        fanout=shape_like.fanout,
         assemble_cost=assemble_cost,
         include_lossy=include_lossy,
     )

@@ -215,8 +215,8 @@ class CommContext:
 
     def __repr__(self) -> str:
         return (
-            f"CommContext({self.topo.n_machines}x"
-            f"{self.topo.procs_per_machine}, degree={self.topo.degree}, "
+            f"CommContext({'x'.join(map(str, reversed(self.topo.fanout)))}, "
+            f"degree={self.topo.degree}, "
             f"axes=({self.mach_axis!r}, {self.core_axis!r}))"
         )
 
@@ -320,6 +320,7 @@ class CommContext:
         n_machines: int | None = None,
         procs_per_machine: int | None = None,
         degree: int | None = None,
+        fanout=None,
         mach_axis: str = "mach",
         core_axis: str = "core",
     ) -> "CommContext":
@@ -329,7 +330,7 @@ class CommContext:
         calibration JSON written by ``calibrate.save_calibration``.  The
         shape overrides transplant the fitted link tiers onto a different
         cluster shape (e.g. calibrate on a 2x4 fake mesh, plan for 2x256
-        pods).
+        pods); ``fanout`` replaces the whole tier hierarchy's extents.
         """
         from .calibrate import (
             CalibrationResult,
@@ -347,14 +348,20 @@ class CommContext:
             n_machines=n_machines,
             procs_per_machine=procs_per_machine,
             degree=degree,
+            fanout=fanout,
         )
         return cls(topo, mach_axis=mach_axis, core_axis=core_axis)
 
     def _topo_for(self, ms) -> ClusterTopology:
         """This context's parameters on the measurement's probe shape."""
-        shape = getattr(ms, "shape", None)
         topo = self.topo
-        if shape and tuple(shape) != (
+        fanout = getattr(ms, "fanout", None)
+        shape = getattr(ms, "shape", None)
+        if fanout:
+            degree = shape[2] if shape else topo.degree
+            if (tuple(fanout), degree) != (topo.fanout, topo.degree):
+                topo = topo.with_shape(fanout, degree)
+        elif shape and tuple(shape) != (
             topo.n_machines, topo.procs_per_machine, topo.degree
         ):
             topo = topo.with_(

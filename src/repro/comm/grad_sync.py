@@ -332,29 +332,64 @@ def pod_combine(gpod, n_pods: int, gspecs=None, *, fmt: str = "flat",
 # Planner-driven selection
 # ----------------------------------------------------------------------
 
-def pod_sync_topology(n_pods: int, calibration: str | None = None):
+def pod_sync_topology(
+    n_pods: int,
+    calibration: str | None = None,
+    topology: str = "v5e",
+):
     """The topology ``pod_sync="auto"`` plans against.
 
-    Empirically calibrated parameters win over preset constants: an explicit
-    ``calibration`` path, else the file named by the ``REPRO_CALIBRATION``
-    environment variable, else the ``tpu_v5e_cluster`` preset.  Calibrated
-    tiers are transplanted onto the production pod shape (machine = pod).
+    ``topology`` names a ``repro.core.topology.TOPOLOGY_PRESETS`` entry
+    ('v5e' = the classic two-tier collapse, 'v5e_3tier' = the full
+    ICI / host-PCIe / DCN hierarchy).  Empirically calibrated parameters
+    win over preset constants: an explicit ``calibration`` path, else the
+    file named by the ``REPRO_CALIBRATION`` environment variable, else the
+    preset.  Calibrated tiers are transplanted onto the production pod
+    shape (machine = pod) when the fitted hierarchy matches the preset's;
+    a tier-count mismatch falls back to the preset shape of the
+    calibration's own hierarchy (with a warning).
     """
-    from repro.core.topology import tpu_v5e_cluster
+    from repro.core.topology import topology_preset
 
-    preset = tpu_v5e_cluster(n_pods=n_pods)
+    preset = topology_preset(topology, n_pods)
     from .calibrate import CALIBRATION_ENV, calibrated_cluster, load_calibration
 
     path = calibration or os.environ.get(CALIBRATION_ENV)
     if not path:
         return preset
     calib = load_calibration(path)
-    return calibrated_cluster(
-        calib,
-        n_machines=n_pods,
-        procs_per_machine=preset.procs_per_machine,
-        degree=preset.degree,
+    if calib.topology.n_tiers == preset.n_tiers:
+        return calibrated_cluster(
+            calib, fanout=preset.fanout, degree=preset.degree
+        )
+    # Tier-count mismatch: keep the fitted parameters but plan on a
+    # PRODUCTION-scale shape of the calibrated hierarchy (never the tiny
+    # probe-mesh fanout/degree the calibration happened to run on).
+    from repro.core.topology import TOPOLOGY_PRESETS
+
+    for name in ("v5e", "v5e_3tier", *TOPOLOGY_PRESETS):
+        alt = TOPOLOGY_PRESETS[name](n_pods)
+        if alt.n_tiers == calib.topology.n_tiers:
+            warnings.warn(
+                f"calibration {path!r} fitted {calib.topology.n_tiers} "
+                f"tiers but the {topology!r} preset has {preset.n_tiers}; "
+                f"planning the calibrated tiers on the {name!r} preset "
+                "shape",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return calibrated_cluster(
+                calib, fanout=alt.fanout, degree=alt.degree
+            )
+    warnings.warn(
+        f"calibration {path!r} fitted {calib.topology.n_tiers} tiers but "
+        f"the {topology!r} preset has {preset.n_tiers} and no preset "
+        "matches; planning on the calibrated hierarchy with the preset's "
+        "pod count",
+        RuntimeWarning,
+        stacklevel=2,
     )
+    return calibrated_cluster(calib, n_machines=n_pods)
 
 
 def _compose_schedules(name: str, parts) -> S.Schedule:
@@ -450,6 +485,7 @@ def plan_pod_sync(
     *,
     lossy_ok: bool = True,
     calibration: str | None = None,
+    topology: str = "v5e",
     bucketed: bool = True,
     bucket_bytes: int | None = None,
     topo=None,
@@ -462,15 +498,17 @@ def plan_pod_sync(
     ``pod_sync_builder``; each format's bucket count is swept under the
     pipelined view (``bucketing.choose_n_chunks``), so the decision weighs
     latency amortization against tier overlap with the fitted alpha/beta --
-    not folklore constants.  ``bucket_bytes`` pins the bucket size instead
-    of sweeping (the formats are then ranked AT that chunking, so a forced
-    size cannot ride on another size's format choice); ``topo`` overrides
-    the topology entirely (benchmarks pass the probe-mesh shape).
+    not folklore constants.  ``topology`` names the preset hierarchy (e.g.
+    'v5e_3tier' plans the DCN seam atop the full ICI / host-PCIe / DCN
+    model); ``bucket_bytes`` pins the bucket size instead of sweeping (the
+    formats are then ranked AT that chunking, so a forced size cannot ride
+    on another size's format choice); ``topo`` overrides the topology
+    entirely (benchmarks pass the probe-mesh shape).
     """
     if n_pods <= 1:
         return PodSyncDecision("flat", 0, 1, 0.0, 0.0, False)
     if topo is None:
-        topo = pod_sync_topology(n_pods, calibration)
+        topo = pod_sync_topology(n_pods, calibration, topology=topology)
     formats = [
         f for f in POD_SYNC_FORMATS
         if lossy_ok or f not in LOSSY_POD_SYNC_FORMATS
@@ -522,17 +560,18 @@ def select_pod_sync(
     grad_bytes: float,
     lossy_ok: bool = True,
     calibration: str | None = None,
+    topology: str = "v5e",
 ) -> str:
     """Cost-model-chosen pod-sync wire format (one of POD_SYNC_FORMATS).
 
     Models the DCN tier as the machine tier of a multi-pod cluster --
     calibrated from measurements when a calibration file is supplied (or
-    named by ``$REPRO_CALIBRATION``), preset v5e constants otherwise.
+    named by ``$REPRO_CALIBRATION``), preset constants otherwise.
     Format only; ``plan_pod_sync`` also returns the bucket size.
     """
     return plan_pod_sync(
         n_pods, grad_bytes, lossy_ok=lossy_ok, calibration=calibration,
-        bucketed=False,
+        topology=topology, bucketed=False,
     ).fmt
 
 

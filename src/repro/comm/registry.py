@@ -270,6 +270,25 @@ def resolve_impl(collective: str, impl_tag: str) -> Callable:
     raise RegistryError(f"no runnable impl {impl_tag!r} for {collective!r}")
 
 
+def _smoke_topologies():
+    """Small 2- and 3-tier instances every strategy must plan on."""
+    from repro.core.topology import ClusterTopology, LinkTier
+
+    shm = LinkTier("shm", alpha=1e-6, beta=1e-9)
+    mid = LinkTier("mid", alpha=2e-6, beta=2e-9)
+    eth = LinkTier("eth", alpha=1e-5, beta=1e-8)
+    return (
+        ClusterTopology(
+            tiers=(shm, eth), fanout=(2, 2), degree=1,
+            write_cost=1e-6, assemble_cost=1e-6,
+        ),
+        ClusterTopology(
+            tiers=(shm, mid, eth), fanout=(2, 2, 2), degree=2,
+            write_cost=1e-6, assemble_cost=1e-6,
+        ),
+    )
+
+
 def validate_registry(regs: Iterable[CollectiveSpec] | None = None) -> None:
     """Import-time consistency check over the whole registry.
 
@@ -279,7 +298,10 @@ def validate_registry(regs: Iterable[CollectiveSpec] | None = None) -> None:
       construction -- this re-checks after any manual mutation);
     * every collective exposes at least one executable, lossless strategy
       (the planner must always be able to return something runnable);
-    * rooted-ness metadata is uniform within a collective.
+    * rooted-ness metadata is uniform within a collective;
+    * every strategy's schedule builds, validates, and passes its semantics
+      check on BOTH a two-tier and a three-tier topology instance -- the
+      tier-hierarchy generalization can never leave a strategy behind.
     """
     regs = list(regs) if regs is not None else list(_REGISTRY.values())
     if not regs:
@@ -307,3 +329,23 @@ def validate_registry(regs: Iterable[CollectiveSpec] | None = None) -> None:
         rooted = {sp.caps.needs_root for sp in group}
         if len(rooted) != 1:
             raise RegistryError(f"{coll}: inconsistent needs_root metadata")
+    from repro.core.simulator import check_semantics, validate
+
+    for topo in _smoke_topologies():
+        for sp in regs:
+            if not sp.supports(topo):
+                continue
+            try:
+                sched = sp.build_schedule(topo, 1024.0, payloads=True)
+                validate(sched)
+                if not sp.lossy:
+                    # q8 variants are byte-scaled twins of checked
+                    # schedules; the volume bounds in check_semantics are
+                    # deliberately below their compressed global bytes.
+                    check_semantics(sched)
+            except Exception as e:
+                raise RegistryError(
+                    f"{sp.collective}/{sp.strategy} does not plan on the "
+                    f"{topo.n_tiers}-tier {'x'.join(map(str, topo.fanout))} "
+                    f"smoke topology: {e}"
+                ) from e

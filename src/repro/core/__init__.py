@@ -18,9 +18,12 @@ over ``repro.comm``; new code should use ``repro.comm`` directly::
 """
 
 from .topology import (  # noqa: F401
+    TOPOLOGY_PRESETS,
     ClusterTopology,
     LinkTier,
     paper_smp_cluster,
+    topology_preset,
+    tpu_v5e_3tier,
     tpu_v5e_cluster,
 )
 

@@ -114,6 +114,267 @@ def _pay(payloads: bool, items) -> frozenset:
 
 
 # ======================================================================
+# N-tier primitives
+# ======================================================================
+#
+# The hierarchical generators compose these per-tier pieces instead of
+# special-casing "local then global": rings run lockstep at any tier of the
+# hierarchy, and fan-out/fan-in inside a machine recurses through the inner
+# tiers (tier-0 shared-memory writes, seeding Sends across the tiers above).
+# On a two-tier topology every helper degenerates to exactly the paper's
+# two-phase schedule.
+
+def _tier_rings(topo: ClusterTopology, level: int) -> list:
+    """All rings over tier ``level``: each ring lists the ``fanout[level]``
+    procs that share every hierarchical coordinate except coordinate
+    ``level`` (so its edges are exactly tier-``level`` links)."""
+    stride = topo.group_size(level)
+    span = stride * topo.fanout[level]
+    rings = []
+    for outer in range(topo.n_procs // span):
+        for off in range(stride):
+            base = outer * span + off
+            rings.append(
+                [base + k * stride for k in range(topo.fanout[level])]
+            )
+    return rings
+
+
+def _ring_rs_stage(
+    sched: Schedule,
+    topo: ClusterTopology,
+    level: int,
+    m: float,
+    payloads: bool,
+    holdings=None,
+) -> None:
+    """Lockstep ring reduce-scatter at tier ``level``.
+
+    Working set per proc is m / group_size(level); each of the
+    fanout[level] - 1 rounds moves m / group_size(level + 1) bytes per ring
+    member.  At tier 0 the real contribution tokens flow through
+    ``holdings`` (the semantics checker consumes them); outer tiers carry
+    synthetic stripe tokens.
+    """
+    f = topo.fanout[level]
+    if f <= 1:
+        return
+    send_m = m / topo.group_size(level + 1)
+    rings = _tier_rings(topo, level)
+    for step in range(f - 1):
+        rnd = sched.new_round()
+        moves = []
+        for ring_id, ring in enumerate(rings):
+            for i in range(f):
+                p, q = ring[i], ring[(i + 1) % f]
+                shard = (i - step) % f
+                if level == 0 and holdings is not None and payloads:
+                    pay = frozenset(holdings[p][shard])
+                elif level == 0:
+                    pay = EMPTY
+                else:
+                    pay = _pay(
+                        payloads, [("xstripe", "rs", level, step, ring_id, i)]
+                    )
+                rnd.add(Send(p, q, send_m, pay))
+                if level == 0 and holdings is not None:
+                    moves.append((q, shard, pay))
+        if payloads and level == 0 and holdings is not None:
+            for q, shard, pay in moves:
+                holdings[q][shard] |= set(pay)
+
+
+def _ring_ag_stage(
+    sched: Schedule,
+    topo: ClusterTopology,
+    level: int,
+    m: float,
+    payloads: bool,
+    token: str = "xstripe",
+) -> None:
+    """Lockstep ring all-gather at tier ``level`` (the RS stage's inverse):
+    fanout[level] - 1 rounds of m / group_size(level + 1) bytes."""
+    f = topo.fanout[level]
+    if f <= 1:
+        return
+    send_m = m / topo.group_size(level + 1)
+    rings = _tier_rings(topo, level)
+    for step in range(f - 1):
+        rnd = sched.new_round()
+        for ring_id, ring in enumerate(rings):
+            for i in range(f):
+                p, q = ring[i], ring[(i + 1) % f]
+                rnd.add(
+                    Send(
+                        p, q, send_m,
+                        _pay(payloads, [(token, "ag", level, step, ring_id, i)]),
+                    )
+                )
+
+
+def _nearest_free(topo: ClusterTopology, knowers, used, target: int):
+    """The free proc in ``knowers`` sharing the deepest group with
+    ``target`` (so the seeding Send crosses the cheapest possible tier)."""
+    best, best_level = None, None
+    for p in sorted(knowers):
+        if p in used:
+            continue
+        if p == target:
+            return p
+        level = topo.tier_index(p, target)
+        if best is None or level < best_level:
+            best, best_level = p, level
+    return best
+
+
+def _publish_all(sched: Schedule, topo: ClusterTopology, items) -> None:
+    """Fan each (writer, nbytes, payload) out to every proc of its machine.
+
+    On a two-tier cluster this is ONE round of Rule-1 LocalWrites (shared
+    memory spans the machine).  Deeper hierarchies publish tier-recursively:
+    every knowing proc writes its shared-memory (tier-0) group, and
+    still-uncovered groups are seeded across the machine's inner link tiers
+    in doubling rounds -- each seeding Send chains the landing group's write
+    into the same round (the paper's internal-edges-hide rule).
+    """
+    items = [it for it in items if it is not None]
+    if not items:
+        return
+    knows = [{w} for (w, _, _) in items]
+    group_sets = [
+        sorted(
+            {topo.inner_group_of(p) for p in topo.procs_of(topo.machine_of(w))}
+        )
+        for (w, _, _) in items
+    ]
+
+    def uncovered(ix):
+        return [
+            g
+            for g in group_sets[ix]
+            if any(p not in knows[ix] for p in topo.group_procs(1, g))
+        ]
+
+    pending = [ix for ix in range(len(items)) if uncovered(ix)]
+    while pending:
+        rnd = sched.new_round()
+        used_src: set = set()
+        used_dst: set = set()
+        for ix in pending:
+            writer, nb, pay = items[ix]
+            for g in uncovered(ix):
+                procs = list(topo.group_procs(1, g))
+                knowers = [p for p in procs if p in knows[ix]]
+                if knowers:
+                    w = next((p for p in knowers if p not in used_src), None)
+                    if w is None:
+                        continue
+                    readers = tuple(p for p in procs if p != w)
+                    if readers:
+                        rnd.add(LocalWrite(w, readers, nb, pay))
+                    used_src.add(w)
+                    knows[ix].update(procs)
+                else:
+                    dst = next(
+                        (
+                            p for p in procs
+                            if p not in used_dst and p not in used_src
+                        ),
+                        None,
+                    )
+                    if dst is None:
+                        dst = next(
+                            (p for p in procs if p not in used_dst), None
+                        )
+                    if dst is None:
+                        continue
+                    src = _nearest_free(topo, knows[ix], used_src, dst)
+                    if src is None:
+                        continue
+                    rnd.add(Send(src, dst, nb, pay))
+                    used_src.add(src)
+                    used_dst.add(dst)
+                    knows[ix].add(dst)
+                    readers = tuple(p for p in procs if p != dst)
+                    if readers and dst not in used_src:
+                        # chained Rule-1 write in the same round: dst
+                        # receives the seed and sources the publish (only
+                        # when its send port is still free -- it may have
+                        # seeded ANOTHER item's group earlier this round).
+                        rnd.add(LocalWrite(dst, readers, nb, pay))
+                        used_src.add(dst)
+                        knows[ix].update(procs)
+        pending = [ix for ix in pending if uncovered(ix)]
+
+
+def _distribute(sched: Schedule, topo: ClusterTopology, items) -> None:
+    """Get each (src, dests, nbytes, payload) from ``src`` to every proc in
+    ``dests`` (all within src's machine).
+
+    One Rule-1 write on a two-tier cluster; on deeper hierarchies dests in
+    src's shared-memory group are written while dests in other groups are
+    seeded across the inner tiers (chaining each landing group's write).
+    """
+    items = [it for it in items if it is not None and it[1]]
+    if not items:
+        return
+    knows = [{s} for (s, _, _, _) in items]
+
+    def missing(ix):
+        return [p for p in items[ix][1] if p not in knows[ix]]
+
+    pending = [ix for ix in range(len(items)) if missing(ix)]
+    while pending:
+        rnd = sched.new_round()
+        used_src: set = set()
+        used_dst: set = set()
+        for ix in pending:
+            src, dests, nb, pay = items[ix]
+            by_group: dict[int, list] = {}
+            for p in missing(ix):
+                by_group.setdefault(topo.inner_group_of(p), []).append(p)
+            for g, dst_list in sorted(by_group.items()):
+                procs = list(topo.group_procs(1, g))
+                knowers = [p for p in procs if p in knows[ix]]
+                if knowers:
+                    w = next((p for p in knowers if p not in used_src), None)
+                    if w is None:
+                        continue
+                    readers = tuple(p for p in dst_list if p != w)
+                    if readers:
+                        rnd.add(LocalWrite(w, readers, nb, pay))
+                    used_src.add(w)
+                    knows[ix].update(dst_list)
+                else:
+                    dst = next(
+                        (
+                            p for p in dst_list
+                            if p not in used_dst and p not in used_src
+                        ),
+                        None,
+                    )
+                    if dst is None:
+                        dst = next(
+                            (p for p in dst_list if p not in used_dst), None
+                        )
+                    if dst is None:
+                        continue
+                    s = _nearest_free(topo, knows[ix], used_src, dst)
+                    if s is None:
+                        continue
+                    rnd.add(Send(s, dst, nb, pay))
+                    used_src.add(s)
+                    used_dst.add(dst)
+                    knows[ix].add(dst)
+                    readers = tuple(p for p in dst_list if p != dst)
+                    if readers and dst not in used_src:
+                        rnd.add(LocalWrite(dst, readers, nb, pay))
+                        used_src.add(dst)
+                        knows[ix].update(dst_list)
+        pending = [ix for ix in pending if missing(ix)]
+
+
+# ======================================================================
 # BROADCAST
 # ======================================================================
 
@@ -164,11 +425,12 @@ def bcast_hier_seq(
             rnd.add(Send(leaders[src_mach], leader, m, payload))
             leaders[dst_mach] = leader
         covered.extend(batch)
-    rnd = sched.new_round()
-    for mach, leader in leaders.items():
-        readers = tuple(p for p in topo.procs_of(mach) if p != leader)
-        if readers:
-            rnd.add(LocalWrite(leader, readers, m, payload))
+    # Leaders publish machine-wide: one Rule-1 write per machine on a
+    # two-tier cluster, a tier-recursive fan-out on deeper hierarchies.
+    _publish_all(
+        sched, topo,
+        [(leader, m, payload) for _, leader in sorted(leaders.items())],
+    )
     return sched
 
 
@@ -177,46 +439,83 @@ def bcast_hier_par(
 ) -> Schedule:
     """The paper's broadcast: local write + degree-parallel egress.
 
-    Once a machine holds the value every proc holds it (Rule 1 write), so the
-    machine can seed up to ``degree`` new machines per round (Rule 3):
-    coverage multiplies by (degree+1) per global round ==>
-    ceil(log_{d+1}(M)) global rounds.
+    Once a machine's shared-memory group holds the value every co-located
+    proc holds it (Rule 1 write), so a machine can seed up to ``degree`` new
+    machines per round (Rule 3): on a two-tier cluster coverage multiplies
+    by (degree+1) per global round ==> ceil(log_{d+1}(M)) global rounds.
+
+    Tier-recursive form: every seeding Send (machine-level or across a
+    machine's inner tiers) chains the landing tier-0 group's Rule-1 write
+    into the same round; knowing procs not busy with Rule-3 egress seed
+    still-uncovered shared-memory groups of their own machine across the
+    inner tiers.  A two-tier topology reproduces the paper's schedule
+    exactly (the whole machine is one tier-0 group, so machines are fully
+    covered the round they are seeded).
     """
     sched = Schedule("bcast_hier_par", "broadcast", topo, m, root=root)
     payload = _pay(payloads, [("bcast", root)])
     d = min(topo.degree, topo.procs_per_machine)
-    root_mach = topo.machine_of(root)
+    knows = {root}
 
-    # Round 0: publish inside the root machine so all its procs can send.
-    rnd = sched.new_round()
-    readers = tuple(p for p in topo.procs_of(root_mach) if p != root)
-    if readers:
-        rnd.add(LocalWrite(root, readers, m, payload))
-
-    covered = [root_mach]
-    remaining = [j for j in range(topo.n_machines) if j != root_mach]
-    while remaining:
+    # Round 0: publish inside the root's shared-memory group so its procs
+    # can fan out in parallel (Rule 1).
+    peers = tuple(p for p in topo.inner_peers(root) if p != root)
+    if peers:
         rnd = sched.new_round()
-        new = []
-        k = 0
-        for src_mach in covered:
-            for s in list(topo.procs_of(src_mach))[:d]:
-                if k >= len(remaining):
+        rnd.add(LocalWrite(root, peers, m, payload))
+        knows.update(peers)
+
+    while len(knows) < topo.n_procs:
+        rnd = sched.new_round()
+        used_src: set = set()
+        new_knows: set = set()
+        by_mach: dict[int, list] = {}
+        for p in sorted(knows):
+            by_mach.setdefault(topo.machine_of(p), []).append(p)
+        targets = [
+            mach for mach in range(topo.n_machines) if mach not in by_mach
+        ]
+
+        def seed(src: int, dst: int) -> None:
+            """Send + chained Rule-1 write covering dst's tier-0 group."""
+            rnd.add(Send(src, dst, m, payload))
+            used_src.add(src)
+            new_knows.add(dst)
+            lw = tuple(q for q in topo.inner_peers(dst) if q != dst)
+            if lw:
+                rnd.add(LocalWrite(dst, lw, m, payload))
+                used_src.add(dst)
+                new_knows.update(lw)
+
+        # Rule 3: covered machines seed uncovered machines on up to d
+        # parallel egress links each.
+        ti = 0
+        for mach, procs in sorted(by_mach.items()):
+            for src in procs[:d]:
+                if ti >= len(targets):
                     break
-                dst_mach = remaining[k]
-                leader = next(iter(topo.procs_of(dst_mach)))
-                rnd.add(Send(s, leader, m, payload))
-                # Rule 2: intra-machine publish chains inside the same global
-                # round (internal edges hide in the round length).
-                lw = tuple(p for p in topo.procs_of(dst_mach) if p != leader)
-                if lw:
-                    rnd.add(LocalWrite(leader, lw, m, payload))
-                new.append(dst_mach)
-                k += 1
-            if k >= len(remaining):
+                seed(src, next(iter(topo.procs_of(targets[ti]))))
+                ti += 1
+            if ti >= len(targets):
                 break
-        covered.extend(new)
-        remaining = remaining[k:]
+
+        # Inner tiers: remaining knowing procs seed uncovered shared-memory
+        # groups within their own machine.
+        for mach, procs in sorted(by_mach.items()):
+            groups = sorted(
+                {
+                    topo.inner_group_of(p)
+                    for p in topo.procs_of(mach)
+                    if p not in knows
+                }
+            )
+            for g in groups:
+                leader = next(iter(topo.group_procs(1, g)))
+                src = _nearest_free(topo, procs, used_src, leader)
+                if src is None:
+                    break
+                seed(src, leader)
+        knows |= new_knows
     return sched
 
 
@@ -322,17 +621,27 @@ def gather_hier_par(
     ingress: list[tuple] = []
     if pending:
         # Rule 1 write: every remote head publishes its machine buffer so d
-        # co-located procs can stripe it out in parallel (one shared round).
+        # co-located procs can stripe it out in parallel (one shared round
+        # on a two-tier cluster; tier-recursive distribution otherwise).
         if n_stripes > 1:
-            rnd = sched.new_round()
-            for mach in pending:
-                head = heads[mach]
-                readers = tuple(
-                    p for p in list(topo.procs_of(mach))[:n_stripes] if p != head
-                )
-                if readers:
-                    pay = _pay(payloads, know[head]) if payloads else EMPTY
-                    rnd.add(LocalWrite(head, readers, m * counts[head], pay))
+            _distribute(
+                sched, topo,
+                [
+                    (
+                        heads[mach],
+                        [
+                            p
+                            for p in list(topo.procs_of(mach))[:n_stripes]
+                            if p != heads[mach]
+                        ],
+                        m * counts[heads[mach]],
+                        _pay(payloads, know[heads[mach]])
+                        if payloads
+                        else EMPTY,
+                    )
+                    for mach in pending
+                ],
+            )
         # One transfer round per remote machine: its buffer striped across
         # the root machine's ingress links (Rule 3).
         for mach in pending:
@@ -480,19 +789,25 @@ def allgather_hier_par(
                     new_carry[(nxt, k)] = chunks
             carry = new_carry
 
-        # Phase 3: every egress proc publishes everything it accumulated.
-        rnd = sched.new_round()
+        # Phase 3: every egress proc publishes everything it accumulated
+        # (machine-wide: one write round on two tiers, recursive otherwise).
+        items = []
         for mach in range(M):
             procs = list(topo.procs_of(mach))
             for k in range(d):
                 w = procs[k]
-                readers = tuple(p for p in procs if p != w)
-                if readers:
-                    pay = _pay(payloads, know[w]) if payloads else EMPTY
-                    rnd.add(LocalWrite(w, readers, m * counts[w], pay))
-                    if payloads:
-                        for p in readers:
+                items.append(
+                    (
+                        w,
+                        m * counts[w],
+                        _pay(payloads, know[w]) if payloads else EMPTY,
+                    )
+                )
+                if payloads:
+                    for p in procs:
+                        if p != w:
                             know[p] |= know[w]
+        _publish_all(sched, topo, items)
     return sched
 
 
@@ -574,69 +889,32 @@ def reducescatter_hier_par(
 ) -> Schedule:
     """Hierarchy-aware reduce-scatter (Rules 1+3; bandwidth-optimal).
 
-    The first half of ``allreduce_hier_par_bw``:
-
-    Phase 1: intra-machine ring reduce-scatter -- (c-1) local rounds of m/c;
-             proc i of each machine ends holding reduced local shard (i+1)%c.
-    Phase 2: cross-machine ring reduce-scatter run independently per local
-             shard (Rule 3: all c procs drive their machine's egress links
-             at once) -- (M-1) global rounds of m/(c*M) sub-shards.
+    The first half of ``allreduce_hier_par_bw``, tier-recursive: one
+    lockstep ring reduce-scatter stage per tier, innermost outwards.  At
+    tier l every proc belongs to one of the parallel rings over its
+    level-l siblings, working on a 1/group_size(l) slice of the vector --
+    so ALL procs drive their machine's egress links at once when the
+    outermost stage runs (Rule 3 as a limit).  On a two-tier cluster this
+    is exactly the paper's pair: (c-1) local rounds of m/c, then (M-1)
+    global rounds of m/(c*M) sub-shards.
 
     Every proc ends with 1/P of the fully reduced vector; global bytes per
     machine m*(M-1)/M -- half an all-reduce, the bandwidth-optimal exchange
     the bucketed gradient sync is built on.
     """
     sched = Schedule("reducescatter_hier_par", "reduce_scatter", topo, m)
-    c = topo.procs_per_machine
-    M = topo.n_machines
+    c0 = topo.fanout[0]
     P = topo.n_procs
-    shard_m = m / c
     holdings = (
         [
-            {s: {("lrs", topo.machine_of(p), s, p % c)} for s in range(c)}
+            {s: {("lrs", topo.inner_group_of(p), s, p % c0)} for s in range(c0)}
             for p in range(P)
         ]
         if payloads
         else None
     )
-
-    # Phase 1: local ring reduce-scatter (per machine, lockstep).
-    if c > 1:
-        for step in range(c - 1):
-            rnd = sched.new_round()
-            moves = []
-            for mach in range(M):
-                procs = list(topo.procs_of(mach))
-                for i in range(c):
-                    p, q = procs[i], procs[(i + 1) % c]
-                    shard = (i - step) % c
-                    pay = (
-                        frozenset(holdings[p][shard]) if payloads else EMPTY
-                    )
-                    rnd.add(Send(p, q, shard_m, pay))
-                    moves.append((q, shard, pay))
-            if payloads:
-                for q, shard, pay in moves:
-                    holdings[q][shard] |= set(pay)
-
-    # Phase 2: cross-machine ring reduce-scatter per shard (all in parallel).
-    if M > 1:
-        sub_m = shard_m / M
-        for step in range(M - 1):
-            rnd = sched.new_round()
-            for mach in range(M):
-                nxt = (mach + 1) % M
-                for i in range(c):
-                    src = list(topo.procs_of(mach))[i]
-                    dst = list(topo.procs_of(nxt))[i]
-                    rnd.add(
-                        Send(
-                            src,
-                            dst,
-                            sub_m,
-                            _pay(payloads, [("xstripe", "rs", step, mach, i)]),
-                        )
-                    )
+    for level in range(topo.n_tiers):
+        _ring_rs_stage(sched, topo, level, m, payloads, holdings=holdings)
     return sched
 
 
@@ -668,27 +946,24 @@ def allreduce_hier_par(
     _lockstep_local_combine(sched, topo, heads, counts, know, m, payloads, concat=False)
 
     if M == 1:
-        rnd = sched.new_round()
         head = heads[0]
-        readers = tuple(p for p in topo.procs_of(0) if p != head)
-        if readers:
-            pay = _pay(payloads, know[head]) if payloads else EMPTY
-            rnd.add(LocalWrite(head, readers, m, pay))
+        pay = _pay(payloads, know[head]) if payloads else EMPTY
+        _publish_all(sched, topo, [(head, m, pay)])
         return sched
 
-    # Phase 2: stripe distribution by shared-memory write.
+    # Phase 2: stripe distribution by shared-memory write (tier-recursive
+    # on deeper hierarchies -- egress procs may sit in other tier-0 groups).
     if d > 1:
-        rnd = sched.new_round()
+        items = []
         for mach in range(M):
             head = heads[mach]
-            egress = list(topo.procs_of(mach))[:d]
-            readers = tuple(p for p in egress if p != head)
-            if readers:
-                pay = _pay(payloads, know[head]) if payloads else EMPTY
-                rnd.add(LocalWrite(head, readers, m, pay))
-                if payloads:
-                    for p in readers:
-                        know[p] |= know[head]
+            egress = [p for p in list(topo.procs_of(mach))[:d] if p != head]
+            pay = _pay(payloads, know[head]) if payloads else EMPTY
+            items.append((head, egress, m, pay))
+            if payloads:
+                for p in egress:
+                    know[p] |= know[head]
+        _distribute(sched, topo, items)
 
     # Phase 3: striped machine-level ring reduce-scatter + all-gather.
     stripe_m = m / d
@@ -710,19 +985,16 @@ def allreduce_hier_par(
                         )
                     )
 
-    # Phase 4: publish.
-    rnd = sched.new_round()
-    for mach in range(M):
-        procs = list(topo.procs_of(mach))
-        for k in range(d):
-            w = procs[k]
-            readers = tuple(p for p in procs if p != w)
-            if readers:
-                rnd.add(
-                    LocalWrite(
-                        w, readers, stripe_m, _pay(payloads, [("arfinal", k)])
-                    )
-                )
+    # Phase 4: publish (machine-wide fan-out per egress proc).
+    _publish_all(
+        sched, topo,
+        [
+            (list(topo.procs_of(mach))[k], stripe_m,
+             _pay(payloads, [("arfinal", k)]))
+            for mach in range(M)
+            for k in range(d)
+        ],
+    )
     return sched
 
 
@@ -747,72 +1019,24 @@ def allreduce_hier_par_bw(
     Local bytes/proc ~ 2m, global bytes/machine ~ 2m(M-1)/M: both optimal.
     """
     sched = Schedule("allreduce_hier_par_bw", "all_reduce", topo, m)
-    c = topo.procs_per_machine
-    M = topo.n_machines
+    c0 = topo.fanout[0]
     P = topo.n_procs
-    shard_m = m / c
     holdings = (
         [
-            {s: {("lrs", topo.machine_of(p), s, p % c)} for s in range(c)}
+            {s: {("lrs", topo.inner_group_of(p), s, p % c0)} for s in range(c0)}
             for p in range(P)
         ]
         if payloads
         else None
     )
-
-    # Phase 1: local ring reduce-scatter (per machine, lockstep).
-    if c > 1:
-        for step in range(c - 1):
-            rnd = sched.new_round()
-            moves = []
-            for mach in range(M):
-                procs = list(topo.procs_of(mach))
-                for i in range(c):
-                    p, q = procs[i], procs[(i + 1) % c]
-                    shard = (i - step) % c
-                    pay = (
-                        frozenset(holdings[p][shard]) if payloads else EMPTY
-                    )
-                    rnd.add(Send(p, q, shard_m, pay))
-                    moves.append((q, shard, pay))
-            if payloads:
-                for q, shard, pay in moves:
-                    holdings[q][shard] |= set(pay)
-
-    # Phase 2: cross-machine ring RS + AG per shard (all shards in parallel).
-    if M > 1:
-        sub_m = shard_m / M
-        for phase in ("rs", "ag"):
-            for step in range(M - 1):
-                rnd = sched.new_round()
-                for mach in range(M):
-                    nxt = (mach + 1) % M
-                    for i in range(c):
-                        src = list(topo.procs_of(mach))[i]
-                        dst = list(topo.procs_of(nxt))[i]
-                        rnd.add(
-                            Send(
-                                src,
-                                dst,
-                                sub_m,
-                                _pay(payloads, [("xstripe", phase, step, mach, i)]),
-                            )
-                        )
-
-    # Phase 3: local ring all-gather of the reduced shards.
-    if c > 1:
-        for step in range(c - 1):
-            rnd = sched.new_round()
-            for mach in range(M):
-                procs = list(topo.procs_of(mach))
-                for i in range(c):
-                    p, q = procs[i], procs[(i + 1) % c]
-                    shard = (i + 1 - step) % c
-                    rnd.add(
-                        Send(
-                            p, q, shard_m, _pay(payloads, [("fin", mach, shard)])
-                        )
-                    )
+    # Ring reduce-scatter per tier, innermost outwards; then the mirror-image
+    # ring all-gather back in.  Two tiers: (c-1) local rounds of m/c,
+    # (M-1)+(M-1) global rounds of m/(c*M), (c-1) local rounds of m/c --
+    # exactly the paper's bandwidth-optimal pair of phases.
+    for level in range(topo.n_tiers):
+        _ring_rs_stage(sched, topo, level, m, payloads, holdings=holdings)
+    for level in range(topo.n_tiers - 1, -1, -1):
+        _ring_ag_stage(sched, topo, level, m, payloads, token="fin")
     return sched
 
 
@@ -893,19 +1117,16 @@ def alltoall_hier_par(
                         )
                     )
 
-        # Phase 3: publish received stripes (Rule 1 writes).
-        rnd = sched.new_round()
-        for mach in range(M):
-            procs = list(topo.procs_of(mach))
-            for k in range(d):
-                w = procs[k]
-                readers = tuple(p for p in procs if p != w)
-                if readers:
-                    rnd.add(
-                        LocalWrite(
-                            w, readers, c * m, _pay(payloads, [("a2a_pub", mach, k)])
-                        )
-                    )
+        # Phase 3: publish received stripes (Rule 1 writes, machine-wide).
+        _publish_all(
+            sched, topo,
+            [
+                (list(topo.procs_of(mach))[k], c * m,
+                 _pay(payloads, [("a2a_pub", mach, k)]))
+                for mach in range(M)
+                for k in range(d)
+            ],
+        )
     return sched
 
 

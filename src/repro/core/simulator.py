@@ -68,10 +68,13 @@ def validate(sched: Schedule, strict_egress: bool = False) -> None:
             elif isinstance(op, LocalWrite):
                 src_used[op.writer] += 1
                 for r in op.readers:
-                    if not topo.co_located(op.writer, r):
+                    if topo.inner_group_of(op.writer) != topo.inner_group_of(r):
+                        # Rule 1 is a *shared-memory* write: it reaches the
+                        # writer's tier-0 group only (for a two-tier cluster
+                        # that group is the whole machine).
                         raise ScheduleError(
-                            f"round {rix}: LocalWrite crosses machines "
-                            f"({op.writer} -> {r})"
+                            f"round {rix}: LocalWrite crosses shared-memory "
+                            f"groups ({op.writer} -> {r})"
                         )
             else:  # pragma: no cover
                 raise ScheduleError(f"round {rix}: unknown op {op!r}")
@@ -246,18 +249,26 @@ def simulate_pipelined(build, m: float, n_chunks: int,
 # Linear cost decomposition (the calibration interface)
 # ----------------------------------------------------------------------
 
-N_COST_FEATURES = 6  # (alpha_l, beta_l, alpha_g, beta_g, write, assemble)
+# Feature width of the historical two-tier vector
+# (alpha_l, beta_l, alpha_g, beta_g, write, assemble); N-tier topologies
+# carry 2 * n_tiers + 2 features -- see ``n_cost_features``.
+N_COST_FEATURES = 6
 
 
-def cost_features(
-    sched: Schedule, params: tuple | None = None
-) -> tuple[float, float, float, float, float, float]:
+def n_cost_features(topo: ClusterTopology) -> int:
+    """Width of the ``cost_features`` vector for one topology: per-tier
+    (alpha, beta) columns plus (write_cost, assemble_cost)."""
+    return 2 * topo.n_tiers + 2
+
+
+def cost_features(sched: Schedule, params: tuple | None = None) -> tuple:
     """Decompose ``simulate_rounds`` into a parameter-linear feature vector.
 
     Returns coefficients ``f`` such that ``dot(f, params) ==
     simulate_rounds(sched)`` where ``params`` is the topology's
-    ``param_vector()`` -- (local.alpha, local.beta, global.alpha,
-    global.beta, write_cost, assemble_cost).
+    ``param_vector()`` -- (alpha_0, beta_0, ..., alpha_{T-1}, beta_{T-1},
+    write_cost, assemble_cost), one (alpha, beta) column pair per tier,
+    innermost first (for a two-tier topology: local then global).
 
     The round model is piecewise linear in the parameters: each round costs
     its most expensive op (times the NIC serialization factor), and *which*
@@ -269,10 +280,11 @@ def cost_features(
     topo = sched.topo
     if params is None:
         params = topo.param_vector()
-    feats = [0.0] * N_COST_FEATURES
+    width = n_cost_features(topo)
+    feats = [0.0] * width
     for rnd in sched.rounds:
         row = _round_feature_row(topo, rnd, params)
-        for i in range(N_COST_FEATURES):
+        for i in range(width):
             feats[i] += row[i]
     return tuple(feats)
 
@@ -280,35 +292,34 @@ def cost_features(
 def _round_feature_row(topo: ClusterTopology, rnd: Round, params) -> list:
     """One round's contribution to the ``cost_features`` vector, such that
     ``dot(row, params) == _round_time`` at the linearization point."""
+    width = n_cost_features(topo)
     if not rnd.ops:
-        return [0.0] * N_COST_FEATURES
-    al, bl, ag, bg, w, asm = params
+        return [0.0] * width
+    w_ix, asm_ix = width - 2, width - 1
 
     def op_cost(op) -> float:
         if isinstance(op, LocalWrite):
-            return w
-        if topo.co_located(op.src, op.dst):
-            return al + op.nbytes * bl + asm
-        return ag + op.nbytes * bg + asm
+            return params[w_ix]
+        t = topo.tier_index(op.src, op.dst)
+        return params[2 * t] + op.nbytes * params[2 * t + 1] + params[asm_ix]
 
     best = max(rnd.ops, key=op_cost)
     serial, has_global, has_write = _round_shape(topo, rnd)
-    row = [0.0] * N_COST_FEATURES
+    row = [0.0] * width
     if isinstance(best, LocalWrite):
-        row[4] = 1.0
-    elif topo.co_located(best.src, best.dst):
-        row[0], row[1], row[5] = 1.0, best.nbytes, 1.0
+        row[w_ix] = 1.0
     else:
-        row[2], row[3], row[5] = 1.0, best.nbytes, 1.0
+        t = topo.tier_index(best.src, best.dst)
+        row[2 * t], row[2 * t + 1], row[asm_ix] = 1.0, best.nbytes, 1.0
     row = [x * serial for x in row]
     if has_global and has_write:
-        row[4] += 1.0
+        row[w_ix] += 1.0
     return row
 
 
 def pipelined_cost_features(
     build, m: float, n_chunks: int, params: tuple | None = None
-) -> tuple[float, float, float, float, float, float]:
+) -> tuple:
     """``cost_features`` analogue for ``simulate_pipelined``.
 
     Returns f with ``dot(f, params) == simulate_pipelined(...).t_pipelined``
@@ -322,6 +333,7 @@ def pipelined_cost_features(
     topo = sched.topo
     if params is None:
         params = topo.param_vector()
+    width = n_cost_features(topo)
     # Stage rows, grouped exactly like pipeline_stages.
     stage_rows: list[tuple[str, list]] = []
     for rnd in sched.rounds:
@@ -335,16 +347,16 @@ def pipelined_cost_features(
             stage_rows[-1] = (kind, [a + b for a, b in zip(prev, row)])
         else:
             stage_rows.append((kind, row))
-    feats = [0.0] * N_COST_FEATURES
+    feats = [0.0] * width
     bottleneck_row, bottleneck_t = None, -1.0
     for _, row in stage_rows:
         t = sum(f * p for f, p in zip(row, params))
         if t > bottleneck_t:
             bottleneck_row, bottleneck_t = row, t
-        for i in range(N_COST_FEATURES):
+        for i in range(width):
             feats[i] += row[i]
     if bottleneck_row is not None:
-        for i in range(N_COST_FEATURES):
+        for i in range(width):
             feats[i] += (n_chunks - 1) * bottleneck_row[i]
     return tuple(feats)
 
@@ -410,20 +422,24 @@ def simulate_async(sched: Schedule, check: bool = True) -> float:
                 for r in op.readers:
                     learn(r, op.payload, end)
             else:
-                tier = topo.tier(op.src, op.dst)
+                tix = topo.tier_index(op.src, op.dst)
+                tier = topo.tiers[tix]
+                # only the outermost (machine-boundary) tier is guarded by
+                # the shared ``degree`` egress/ingress links (Rule 3)
+                outermost = tix == topo.n_tiers - 1
                 start = max(
                     chunk_ready(op.src, op.payload),
                     src_free[op.src],
                     dst_free[op.dst],
                 )
-                if tier is topo.global_:
+                if outermost:
                     mo = out_links[topo.machine_of(op.src)]
                     mi = in_links[topo.machine_of(op.dst)]
                     ko = min(range(d), key=lambda k: mo[k])
                     ki = min(range(d), key=lambda k: mi[k])
                     start = max(start, mo[ko], mi[ki])
                 end = start + tier.transfer_time(op.nbytes) + topo.assemble_cost
-                if tier is topo.global_:
+                if outermost:
                     mo[ko] = end
                     mi[ki] = end
                 src_free[op.src] = end
@@ -447,13 +463,16 @@ def _replay_knowledge(sched: Schedule) -> dict[int, set]:
         for p in range(P):
             know[p].add(p)
     elif sched.collective in ("all_reduce", "reduce_scatter"):
-        c = sched.topo.procs_per_machine
+        # "lrs" tokens live on the tier-0 (shared-memory) groups: the
+        # innermost ring reduce-scatter of the hierarchical strategies (for
+        # a two-tier cluster the tier-0 group is the whole machine).
+        c0 = sched.topo.fanout[0]
         for p in range(P):
             for s in range(P):
                 know[p].add(("rs", s, p))
             know[p].add(("ar", p))
-            for s in range(c):
-                know[p].add(("lrs", sched.topo.machine_of(p), s, p % c))
+            for s in range(c0):
+                know[p].add(("lrs", sched.topo.inner_group_of(p), s, p % c0))
     elif sched.collective == "all_to_all":
         for p in range(P):
             for q in range(P):
@@ -501,13 +520,33 @@ def check_semantics(sched: Schedule) -> None:
         raise ScheduleError(f"unknown collective {sched.collective}")
 
 
+def _check_local_rs_phase(sched: Schedule, know, what: str) -> None:
+    """Phase-1 completeness of the innermost (tier-0) ring reduce-scatter:
+    within every shared-memory group, proc at ring position i must have
+    gathered every group member's contribution to shard (i+1) % c0."""
+    topo = sched.topo
+    c0 = topo.fanout[0]
+    for g in range(topo.n_procs // c0):
+        procs = list(topo.group_procs(1, g))
+        for i, p in enumerate(procs):
+            shard = (i + 1) % c0
+            lack = [
+                j for j in range(c0) if ("lrs", g, shard, j) not in know[p]
+            ]
+            if lack:
+                raise ScheduleError(
+                    f"{what}: group {g} proc {p} shard {shard} missing "
+                    f"local contribs {lack}"
+                )
+
+
 def _check_reduce_scatter(sched: Schedule, know) -> None:
     """Each proc must fully reduce its designated 1/P shard; hierarchical
     variants must additionally move the bandwidth-optimal m*(M-1)/M global
     bytes per machine (half an all-reduce)."""
     topo = sched.topo
     P = topo.n_procs
-    M, c, m = topo.n_machines, topo.procs_per_machine, sched.nbytes
+    M, m = topo.n_machines, sched.nbytes
     if sched.name == "reducescatter_flat_ring":
         for p in range(P):
             shard = (p + 1) % P
@@ -519,21 +558,8 @@ def _check_reduce_scatter(sched: Schedule, know) -> None:
                 )
     else:
         # Phase-1 local reduce-scatter completeness via real payloads ...
-        for mach in range(M):
-            procs = list(topo.procs_of(mach))
-            for i, p in enumerate(procs):
-                shard = (i + 1) % c
-                lack = [
-                    j
-                    for j in range(c)
-                    if ("lrs", mach, shard, j) not in know[p]
-                ]
-                if lack:
-                    raise ScheduleError(
-                        f"reduce_scatter: machine {mach} proc {p} shard "
-                        f"{shard} missing local contribs {lack}"
-                    )
-        # ... plus the inter-machine volume lower bound for phase 2.
+        _check_local_rs_phase(sched, know, "reduce_scatter")
+        # ... plus the inter-machine volume lower bound for the outer phases.
         if M > 1:
             gbytes = sched.total_global_bytes()
             need = M * m * (M - 1) / M * 0.999
@@ -557,21 +583,8 @@ def _check_allreduce(sched: Schedule, know) -> None:
     elif sched.name == "allreduce_hier_par_bw":
         # Phase-1 local reduce-scatter completeness (real payloads), plus
         # inter-machine volume lower bound for the synthetic phases.
-        M, c, m = topo.n_machines, topo.procs_per_machine, sched.nbytes
-        for mach in range(M):
-            procs = list(topo.procs_of(mach))
-            for i, p in enumerate(procs):
-                shard = (i + 1) % c
-                lack = [
-                    j
-                    for j in range(c)
-                    if ("lrs", mach, shard, j) not in know[p]
-                ]
-                if lack:
-                    raise ScheduleError(
-                        f"all_reduce bw: machine {mach} proc {p} shard {shard} "
-                        f"missing local contribs {lack}"
-                    )
+        M, m = topo.n_machines, sched.nbytes
+        _check_local_rs_phase(sched, know, "all_reduce bw")
         if M > 1:
             gbytes = sched.total_global_bytes()
             need = M * 2 * m * (M - 1) / M * 0.999
@@ -583,7 +596,7 @@ def _check_allreduce(sched: Schedule, know) -> None:
         # hierarchical: check (a) local reduce completeness via real payloads,
         # (b) inter-machine byte volume >= ring-optimal 2*m*(M-1)/M per
         # machine boundary pair, (c) every proc touched by a final publish.
-        M, c, m = topo.n_machines, topo.procs_per_machine, sched.nbytes
+        M, m = topo.n_machines, sched.nbytes
         for mach in range(M):
             head = next(iter(topo.procs_of(mach)))
             lack = [q for q in topo.procs_of(mach) if ("ar", q) not in know[head]]

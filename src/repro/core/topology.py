@@ -6,20 +6,31 @@ links.  We keep the paper's vocabulary (machine / process / degree) and map it
 onto the TPU hierarchy (pod / chip / pod-egress links) via presets at the
 bottom of this file.
 
+The paper's Rule 2 models exactly two link tiers; real hardware has more
+(v5e: ICI hop / host PCIe / DCN), so ``ClusterTopology`` is a general *tier
+hierarchy*: an ordered tuple of ``LinkTier``s from the innermost (fastest,
+tier 0 -- the shared-memory tier Rule 1 writes live on) to the outermost
+(slowest, the shared-NIC tier Rule 3 guards), plus a ``fanout`` tuple giving
+the branching factor at every level.  Process ids are flat; their
+hierarchical coordinates are derived (``coords`` / ``group_of`` /
+``tier_index``).  The two-tier construction of the paper stays a one-liner
+(``ClusterTopology.two_tier`` or the legacy keyword form), and
+``local`` / ``global_`` / ``n_machines`` / ``procs_per_machine`` survive as
+derived properties so every two-tier call site keeps working unchanged.
+
 Everything here is plain Python (no jax) so the planner can run anywhere,
 including inside launcher processes before jax initializes devices.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
 class LinkTier:
-    """One tier of the two-tier network (paper Rule 2).
+    """One tier of the tiered network (generalizing paper Rule 2).
 
     alpha:  per-message startup latency, seconds.
     beta:   per-byte transfer time, seconds/byte (1 / bandwidth).
@@ -37,46 +48,187 @@ class LinkTier:
         return self.alpha + nbytes * self.beta
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, init=False)
 class ClusterTopology:
-    """A homogeneous cluster of multi-core machines.
+    """A homogeneous cluster with a hierarchy of link tiers.
 
-    n_machines:         number of machines (TPU: pods).
-    procs_per_machine:  processes per machine (TPU: chips per pod).
-    degree:             external links usable *simultaneously* by one machine
-                        (paper Rule 3; TPU: host NICs per pod).
-    local / global_:    link tiers (paper Rule 2).
-    write_cost:         constant time for a shared-memory write visible to any
-                        subset of co-located processes (paper Rule 1, "write").
-    assemble_cost:      per-message assembly time charged when a process's
-                        buffer must be *read* (paper Rule 1, "read").
+    tiers:         link tiers, innermost (tier 0, shared memory / ICI) to
+                   outermost (the machine-boundary tier, e.g. DCN).  Rule 2
+                   generalized: every inner tier is at least as fast as the
+                   tier outside it (alpha and beta both).
+    fanout:        branching factors, aligned with ``tiers``: ``fanout[l]``
+                   level-``l`` groups form one level-``l+1`` group, linked by
+                   tier ``l``.  A level-0 group is a single process; the
+                   level-``len(fanout)`` group is the whole cluster.
+    degree:        external links usable *simultaneously* by one machine
+                   (paper Rule 3; TPU: host NICs per pod).  Applies to the
+                   outermost tier.
+    write_cost:    constant time for a shared-memory write visible to any
+                   subset of tier-0 co-located processes (Rule 1, "write").
+    assemble_cost: per-message assembly time charged when a process's buffer
+                   must be *read* (Rule 1, "read").
+
+    The classic two-tier cluster of the paper is ``tiers=(local, global_)``,
+    ``fanout=(procs_per_machine, n_machines)``; the legacy keyword
+    constructor (``n_machines= / procs_per_machine= / local= / global_=``)
+    and the ``two_tier`` classmethod both build exactly that.
     """
 
-    n_machines: int
-    procs_per_machine: int
+    tiers: tuple
+    fanout: tuple
     degree: int
-    local: LinkTier
-    global_: LinkTier
     write_cost: float
     assemble_cost: float
 
-    def __post_init__(self) -> None:
-        if self.n_machines < 1:
-            raise ValueError("n_machines must be >= 1")
-        if self.procs_per_machine < 1:
-            raise ValueError("procs_per_machine must be >= 1")
-        if not (1 <= self.degree):
+    def __init__(
+        self,
+        n_machines: int | None = None,
+        procs_per_machine: int | None = None,
+        degree: int | None = None,
+        local: LinkTier | None = None,
+        global_: LinkTier | None = None,
+        write_cost: float | None = None,
+        assemble_cost: float = 0.0,
+        *,
+        tiers: tuple | None = None,
+        fanout: tuple | None = None,
+    ) -> None:
+        # degree and write_cost stay REQUIRED (as in the pre-tier-list
+        # dataclass): a defaulted write_cost of 0 would silently model
+        # Rule-1 shared-memory writes as free and skew strategy rankings.
+        if degree is None:
+            raise ValueError("degree is required")
+        if write_cost is None:
+            raise ValueError("write_cost is required")
+        if (tiers is None) != (fanout is None):
+            raise ValueError("tiers and fanout must be given together")
+        if tiers is not None:
+            if any(x is not None for x in (n_machines, procs_per_machine,
+                                           local, global_)):
+                raise ValueError(
+                    "pass either the tier-list form (tiers=, fanout=) or the "
+                    "legacy two-tier keywords, not both"
+                )
+            tiers = tuple(tiers)
+            fanout = tuple(int(f) for f in fanout)
+        else:
+            if local is None or global_ is None or n_machines is None \
+                    or procs_per_machine is None:
+                raise ValueError(
+                    "two-tier construction needs n_machines, "
+                    "procs_per_machine, local and global_"
+                )
+            tiers = (local, global_)
+            fanout = (int(procs_per_machine), int(n_machines))
+        object.__setattr__(self, "tiers", tiers)
+        object.__setattr__(self, "fanout", fanout)
+        object.__setattr__(self, "degree", int(degree))
+        object.__setattr__(self, "write_cost", float(write_cost))
+        object.__setattr__(self, "assemble_cost", float(assemble_cost))
+        self._check()
+
+    def _check(self) -> None:
+        if len(self.tiers) != len(self.fanout):
+            raise ValueError(
+                f"tiers ({len(self.tiers)}) and fanout ({len(self.fanout)}) "
+                "must have the same length"
+            )
+        if len(self.tiers) < 2:
+            raise ValueError("a cluster has at least two tiers")
+        if any(f < 1 for f in self.fanout):
+            raise ValueError(f"fanout entries must be >= 1, got {self.fanout}")
+        if self.degree < 1:
             raise ValueError("degree must be >= 1")
-        if self.local.alpha > self.global_.alpha or self.local.beta > self.global_.beta:
-            # Rule 2: local edges are short, global edges are long.
-            raise ValueError("local tier must be at least as fast as global tier")
+        for inner, outer in zip(self.tiers, self.tiers[1:]):
+            if inner.alpha > outer.alpha or inner.beta > outer.beta:
+                # Rule 2 generalized: inner edges are short, outer edges long.
+                raise ValueError(
+                    f"tier {inner.name!r} must be at least as fast as the "
+                    f"tier {outer.name!r} outside it"
+                )
+
+    @classmethod
+    def two_tier(
+        cls,
+        n_machines: int,
+        procs_per_machine: int,
+        degree: int,
+        local: LinkTier,
+        global_: LinkTier,
+        write_cost: float,
+        assemble_cost: float = 0.0,
+    ) -> "ClusterTopology":
+        """The paper's two-tier cluster, spelled out (one-liner form)."""
+        return cls(
+            tiers=(local, global_),
+            fanout=(procs_per_machine, n_machines),
+            degree=degree,
+            write_cost=write_cost,
+            assemble_cost=assemble_cost,
+        )
 
     # ------------------------------------------------------------------
-    # process <-> machine arithmetic
+    # hierarchical coordinates
     # ------------------------------------------------------------------
     @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    @property
     def n_procs(self) -> int:
-        return self.n_machines * self.procs_per_machine
+        return math.prod(self.fanout)
+
+    def group_size(self, level: int) -> int:
+        """Processes per level-``level`` group (level 0 = one process)."""
+        return math.prod(self.fanout[:level])
+
+    def group_of(self, proc: int, level: int) -> int:
+        """Index of the level-``level`` group containing ``proc``."""
+        return proc // self.group_size(level)
+
+    def group_procs(self, level: int, group: int) -> range:
+        base = group * self.group_size(level)
+        return range(base, base + self.group_size(level))
+
+    def coords(self, proc: int) -> tuple:
+        """Per-level coordinates, innermost first: coords[l] in fanout[l]."""
+        out = []
+        for f in self.fanout:
+            out.append(proc % f)
+            proc //= f
+        return tuple(out)
+
+    def tier_index(self, p: int, q: int) -> int:
+        """The tier over which distinct procs p and q communicate: the level
+        of their outermost differing coordinate."""
+        for level in range(self.n_tiers - 1, -1, -1):
+            if self.group_of(p, level + 1) != self.group_of(q, level + 1):
+                raise ValueError(f"procs {p} and {q} share no group")
+            if self.group_of(p, level) != self.group_of(q, level):
+                return level
+        raise ValueError(f"tier_index({p}, {q}): procs coincide")
+
+    def tier(self, p: int, q: int) -> LinkTier:
+        return self.tiers[self.tier_index(p, q)]
+
+    # ------------------------------------------------------------------
+    # two-tier view (machine = outermost group) -- back-compat surface
+    # ------------------------------------------------------------------
+    @property
+    def local(self) -> LinkTier:
+        return self.tiers[0]
+
+    @property
+    def global_(self) -> LinkTier:
+        return self.tiers[-1]
+
+    @property
+    def n_machines(self) -> int:
+        return self.fanout[-1]
+
+    @property
+    def procs_per_machine(self) -> int:
+        return math.prod(self.fanout[:-1])
 
     def machine_of(self, proc: int) -> int:
         return proc // self.procs_per_machine
@@ -88,8 +240,14 @@ class ClusterTopology:
     def co_located(self, p: int, q: int) -> bool:
         return self.machine_of(p) == self.machine_of(q)
 
-    def tier(self, p: int, q: int) -> LinkTier:
-        return self.local if self.co_located(p, q) else self.global_
+    def inner_group_of(self, proc: int) -> int:
+        """Index of proc's tier-0 (shared-memory) group."""
+        return proc // self.fanout[0]
+
+    def inner_peers(self, proc: int) -> range:
+        """Procs sharing ``proc``'s tier-0 (shared-memory) group."""
+        base = self.inner_group_of(proc) * self.fanout[0]
+        return range(base, base + self.fanout[0])
 
     # ------------------------------------------------------------------
     # round-based view (telephone model + the paper's three rules)
@@ -112,25 +270,137 @@ class ClusterTopology:
         return self.local.transfer_time(nbytes) + self.assemble_cost
 
     def with_(self, **kw) -> "ClusterTopology":
-        return dataclasses.replace(self, **kw)
+        """Functional update; accepts the tier-list fields AND the legacy
+        two-tier names (n_machines / procs_per_machine / local / global_),
+        which are mapped onto the tier structure."""
+        tiers = list(kw.pop("tiers", self.tiers))
+        fanout = list(kw.pop("fanout", self.fanout))
+        if "local" in kw:
+            tiers[0] = kw.pop("local")
+        if "global_" in kw:
+            tiers[-1] = kw.pop("global_")
+        if "n_machines" in kw:
+            fanout[-1] = int(kw.pop("n_machines"))
+        if "procs_per_machine" in kw:
+            c = int(kw.pop("procs_per_machine"))
+            if len(fanout) == 2:
+                fanout[0] = c
+            elif math.prod(fanout[:-1]) != c:
+                raise ValueError(
+                    f"procs_per_machine={c} is ambiguous on a "
+                    f"{len(fanout)}-tier topology (inner fanout "
+                    f"{tuple(fanout[:-1])}); pass fanout= instead"
+                )
+        degree = kw.pop("degree", self.degree)
+        write_cost = kw.pop("write_cost", self.write_cost)
+        assemble_cost = kw.pop("assemble_cost", self.assemble_cost)
+        if kw:
+            raise TypeError(f"unknown ClusterTopology fields {sorted(kw)}")
+        return ClusterTopology(
+            tiers=tuple(tiers),
+            fanout=tuple(fanout),
+            degree=degree,
+            write_cost=write_cost,
+            assemble_cost=assemble_cost,
+        )
+
+    def with_shape(self, fanout, degree: int | None = None) -> "ClusterTopology":
+        """Same tier parameters on a different shape.
+
+        ``fanout`` may be *shorter* than this topology's (a truncated
+        calibration stage): the innermost ``len(fanout)`` tiers are kept.
+        """
+        fanout = tuple(int(f) for f in fanout)
+        if len(fanout) > self.n_tiers:
+            raise ValueError(
+                f"shape {fanout} has more levels than the {self.n_tiers} "
+                "link tiers"
+            )
+        return ClusterTopology(
+            tiers=self.tiers[: len(fanout)],
+            fanout=fanout,
+            degree=self.degree if degree is None else degree,
+            write_cost=self.write_cost,
+            assemble_cost=self.assemble_cost,
+        )
+
+    def stage(self, level: int) -> "ClusterTopology":
+        """The calibration sub-topology exercising tiers 0..level-1 only:
+        one level-``level`` group, outermost extent 1.  ``stage(1)`` is the
+        single-machine local-tier stage of the two-tier workflow."""
+        if not 1 <= level < self.n_tiers:
+            raise ValueError(
+                f"stage level must be in [1, {self.n_tiers - 1}], got {level}"
+            )
+        return self.with_shape(self.fanout[:level] + (1,))
 
     # ------------------------------------------------------------------
     # calibration interface
     # ------------------------------------------------------------------
-    def param_vector(self) -> tuple[float, float, float, float, float, float]:
+    def param_vector(self) -> tuple:
         """The model's free parameters as the canonical fit vector.
 
         Order matches ``simulator.cost_features`` / ``comm.calibrate``:
-        (local.alpha, local.beta, global.alpha, global.beta, write_cost,
-        assemble_cost).
+        (alpha_0, beta_0, ..., alpha_{T-1}, beta_{T-1}, write_cost,
+        assemble_cost) -- 2 * n_tiers + 2 entries, tier 0 innermost.  For a
+        two-tier topology this is the historical (local.alpha, local.beta,
+        global.alpha, global.beta, write_cost, assemble_cost).
         """
-        return (
-            self.local.alpha,
-            self.local.beta,
-            self.global_.alpha,
-            self.global_.beta,
-            self.write_cost,
-            self.assemble_cost,
+        out = []
+        for t in self.tiers:
+            out.extend((t.alpha, t.beta))
+        out.extend((self.write_cost, self.assemble_cost))
+        return tuple(out)
+
+    @classmethod
+    def fitted_tiers(
+        cls,
+        fanout,
+        degree: int,
+        *,
+        alphas,
+        betas,
+        write_cost: float,
+        assemble_cost: float = 0.0,
+        names=None,
+    ) -> "ClusterTopology":
+        """Topology from empirically fitted per-tier parameters.
+
+        Measured fits can come back degenerate (negative intercepts from
+        noise, or an inner tier that probed slower than an outer one on
+        hardware where tiers share a NIC), so this constructor projects onto
+        the model's feasible region instead of raising: every parameter is
+        floored at a small positive epsilon and each tier is clamped to be
+        at least as fast as the tier outside it (Rule 2, applied outermost
+        inwards).
+        """
+        fanout = tuple(int(f) for f in fanout)
+        T = len(fanout)
+        alphas = [max(a, _FIT_ALPHA_FLOOR) for a in alphas]
+        betas = [max(b, _FIT_BETA_FLOOR) for b in betas]
+        if len(alphas) != T or len(betas) != T:
+            raise ValueError(
+                f"need {T} alphas and betas for fanout {fanout}, got "
+                f"{len(alphas)}/{len(betas)}"
+            )
+        for i in range(T - 2, -1, -1):
+            alphas[i] = min(alphas[i], alphas[i + 1])
+            betas[i] = min(betas[i], betas[i + 1])
+        if names is None:
+            names = (
+                ("local_fit", "global_fit")
+                if T == 2
+                else tuple(f"tier{i}_fit" for i in range(T))
+            )
+        return cls(
+            tiers=tuple(
+                LinkTier(n, alpha=a, beta=b)
+                for n, a, b in zip(names, alphas, betas)
+            ),
+            fanout=fanout,
+            degree=degree,
+            write_cost=max(write_cost, _FIT_ALPHA_FLOOR),
+            assemble_cost=max(assemble_cost, 0.0),
         )
 
     @classmethod
@@ -149,27 +419,15 @@ class ClusterTopology:
         local_name: str = "local_fit",
         global_name: str = "global_fit",
     ) -> "ClusterTopology":
-        """Topology from empirically fitted parameters (``comm.calibrate``).
-
-        Measured fits can come back degenerate (a negative intercept from
-        noise, or a "local" tier that probed slower than the global one on
-        hardware where both tiers share a NIC), so this constructor projects
-        onto the model's feasible region instead of raising: every parameter
-        is floored at a small positive epsilon and the local tier is clamped
-        to be at least as fast as the global tier (Rule 2).
-        """
-        a_g = max(alpha_global, _FIT_ALPHA_FLOOR)
-        b_g = max(beta_global, _FIT_BETA_FLOOR)
-        a_l = min(max(alpha_local, _FIT_ALPHA_FLOOR), a_g)
-        b_l = min(max(beta_local, _FIT_BETA_FLOOR), b_g)
-        return cls(
-            n_machines=n_machines,
-            procs_per_machine=procs_per_machine,
-            degree=degree,
-            local=LinkTier(local_name, alpha=a_l, beta=b_l),
-            global_=LinkTier(global_name, alpha=a_g, beta=b_g),
-            write_cost=max(write_cost, _FIT_ALPHA_FLOOR),
-            assemble_cost=max(assemble_cost, 0.0),
+        """Two-tier ``fitted_tiers`` under the historical parameter names."""
+        return cls.fitted_tiers(
+            (procs_per_machine, n_machines),
+            degree,
+            alphas=(alpha_local, alpha_global),
+            betas=(beta_local, beta_global),
+            write_cost=write_cost,
+            assemble_cost=assemble_cost,
+            names=(local_name, global_name),
         )
 
 
@@ -192,12 +450,37 @@ def paper_smp_cluster(
 
     GigE: ~50us latency, ~125 MB/s.  Shared memory: ~1us, ~2 GB/s.
     """
-    return ClusterTopology(
+    return ClusterTopology.two_tier(
         n_machines=n_machines,
         procs_per_machine=cores,
         degree=nics,
         local=LinkTier("shm", alpha=1e-6, beta=1.0 / 2.0e9),
         global_=LinkTier("gige", alpha=50e-6, beta=1.0 / 125.0e6),
+        write_cost=1e-6,
+        assemble_cost=2e-6,
+    )
+
+
+def paper_smp_3tier(
+    n_machines: int = 8,
+    boards: int = 2,
+    cores: int = 2,
+    nics: int = 1,
+) -> ClusterTopology:
+    """Three-tier SMP-cluster variant: shared memory within a board, a NUMA
+    interconnect between a machine's boards, GigE between machines.
+
+    The shape ``collective_bench`` models its three-tier probe sweep with
+    (the fake-device mesh realizes cores x boards as the core axis).
+    """
+    return ClusterTopology(
+        tiers=(
+            LinkTier("shm", alpha=1e-6, beta=1.0 / 2.0e9),
+            LinkTier("numa", alpha=3e-6, beta=1.0 / 1.2e9),
+            LinkTier("gige", alpha=50e-6, beta=1.0 / 125.0e6),
+        ),
+        fanout=(cores, boards, n_machines),
+        degree=nics,
         write_cost=1e-6,
         assemble_cost=2e-6,
     )
@@ -209,17 +492,19 @@ V5E_PEAK_FLOPS = 197e12
 V5E_HBM_BW = 819e9
 V5E_ICI_BW = 50e9          # per link
 V5E_DCN_BW_PER_HOST = 25e9  # per-host NIC aggregate (4 chips/host on v5e)
+V5E_PCIE_BW = 32e9          # chip <-> host PCIe gen4 x16 per direction
 V5E_HOSTS_PER_POD = 64
+V5E_CHIPS_PER_HOST = 4
 V5E_CHIPS_PER_POD = 256
 
 
 def tpu_v5e_cluster(n_pods: int = 2) -> ClusterTopology:
-    """Multi-pod TPU v5e, the production target of this framework.
+    """Multi-pod TPU v5e collapsed to the paper's two tiers.
 
     machine = pod; proc = chip; degree = host NICs per pod (parallel egress).
     local tier = ICI (per-hop), global tier = DCN (per host NIC).
     """
-    return ClusterTopology(
+    return ClusterTopology.two_tier(
         n_machines=n_pods,
         procs_per_machine=V5E_CHIPS_PER_POD,
         degree=V5E_HOSTS_PER_POD,
@@ -228,3 +513,48 @@ def tpu_v5e_cluster(n_pods: int = 2) -> ClusterTopology:
         write_cost=1e-6,
         assemble_cost=1e-6,
     )
+
+
+def tpu_v5e_3tier(n_pods: int = 2) -> ClusterTopology:
+    """Multi-pod TPU v5e with the full three-level link hierarchy.
+
+    tier 0 = ICI between the 4 chips sharing a host (fast, per-hop),
+    tier 1 = host PCIe crossing between hosts within a pod,
+    tier 2 = DCN between pods (per host NIC, ``degree`` parallel).
+
+    This is the hierarchy the ROADMAP's model-fidelity items need: rankings
+    flip per network level, and the two-tier collapse can only express two
+    of the three levels.
+    """
+    return ClusterTopology(
+        tiers=(
+            LinkTier("ici", alpha=1e-6, beta=1.0 / V5E_ICI_BW),
+            LinkTier("pcie", alpha=3e-6, beta=1.0 / V5E_PCIE_BW),
+            LinkTier("dcn", alpha=10e-6, beta=1.0 / V5E_DCN_BW_PER_HOST),
+        ),
+        fanout=(V5E_CHIPS_PER_HOST, V5E_HOSTS_PER_POD, n_pods),
+        degree=V5E_HOSTS_PER_POD,
+        write_cost=1e-6,
+        assemble_cost=1e-6,
+    )
+
+
+# Named presets for ``--topology`` wiring (launcher / pod-sync planner);
+# every factory takes the outermost extent (machine = pod count).
+TOPOLOGY_PRESETS = {
+    "v5e": tpu_v5e_cluster,
+    "v5e_3tier": tpu_v5e_3tier,
+    "smp": lambda n: paper_smp_cluster(n_machines=n),
+}
+
+
+def topology_preset(name: str, n_machines: int) -> ClusterTopology:
+    """Build a named preset with ``n_machines`` outermost groups (pods)."""
+    try:
+        factory = TOPOLOGY_PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology preset {name!r} "
+            f"(known: {sorted(TOPOLOGY_PRESETS)})"
+        ) from None
+    return factory(n_machines)

@@ -23,6 +23,7 @@ from pathlib import Path  # noqa: E402
 import jax            # noqa: E402
 
 from repro.configs import ALIASES, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.core.topology import TOPOLOGY_PRESETS  # noqa: E402
 from repro.launch import hlo_stats, specs  # noqa: E402
 from repro.launch.mesh import POD_CHIPS, make_production_mesh  # noqa: E402
 
@@ -30,7 +31,8 @@ from repro.launch.mesh import POD_CHIPS, make_production_mesh  # noqa: E402
 def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
              force: bool = False, pod_mode: str | None = None,
              pod_sync: str = "flat", accum=None, remat=None,
-             policy: str = "default", tag: str = "") -> dict:
+             policy: str = "default", topology: str = "v5e",
+             tag: str = "") -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     ok, why = shape_applicable(cfg, shape)
@@ -61,6 +63,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
                 kw["remat"] = remat
             if policy != "default":
                 kw["policy"] = policy
+            if topology != "v5e":
+                kw["topology"] = topology
         cell = specs.build_cell(cfg, shape, mesh, **kw)
         rec["meta"] = cell.meta
         # jax.set_mesh only exists on newer jax; Mesh is itself a context
@@ -137,7 +141,11 @@ def main() -> None:
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--pod-mode", default=None, choices=[None, "gspmd", "manual"])
-    ap.add_argument("--pod-sync", default="flat", choices=["flat", "q8"])
+    ap.add_argument("--pod-sync", default="flat",
+                    choices=["flat", "q8", "rs", "rs_q8", "auto"])
+    ap.add_argument("--topology", default="v5e",
+                    choices=sorted(TOPOLOGY_PRESETS),
+                    help="topology preset for the pod-sync planner")
     ap.add_argument("--policy", default="default", choices=["default", "dp256"])
     ap.add_argument("--accum", type=int, default=None)
     ap.add_argument("--remat", default=None)
@@ -163,7 +171,8 @@ def main() -> None:
         rec = run_cell(arch, shape, mk, outdir, force=args.force,
                        pod_mode=args.pod_mode, pod_sync=args.pod_sync,
                        accum=args.accum, remat=args.remat,
-                       policy=args.policy, tag=args.tag)
+                       policy=args.policy, topology=args.topology,
+                       tag=args.tag)
         if rec.get("skipped"):
             n_skip += 1
             status = "SKIP"

@@ -109,7 +109,7 @@ def _pod_axes(mesh) -> str | None:
 
 def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
                pod_sync="flat", accum=None, remat=None,
-               policy="default", calibration="") -> Cell:
+               policy="default", calibration="", topology="v5e") -> Cell:
     """Build one train cell.
 
     ``pod_sync`` may be any of ``comm.POD_SYNC_FORMATS`` ('flat', 'q8',
@@ -118,8 +118,10 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
     model's gradient bytes; opts into the lossy q8 paths when compression
     wins).  ``calibration`` optionally names a ``comm.calibrate`` JSON so
     that the decision uses parameters fitted on this hardware instead of
-    presets.  The resolved format and bucket size are recorded in
-    ``meta['pod_sync']`` / ``meta['bucket_bytes']``.
+    presets; ``topology`` picks the preset hierarchy the planner models
+    ('v5e' two-tier, 'v5e_3tier' = ICI / host-PCIe / DCN).  The resolved
+    format and bucket size are recorded in ``meta['pod_sync']`` /
+    ``meta['bucket_bytes']``.
     """
     cfg = effective_cfg(cfg, shape)
     pol = make_policy_for(cfg, mesh, variant=policy)
@@ -133,6 +135,7 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
         pod_mode=pod_mode,
         pod_sync=pod_sync,
         calibration=calibration,
+        topology=topology,
         use_kernel=False,          # CPU dry-run lowers the jnp paths
         accum_dtype=over.get("accum_dtype", "float32"),
         model_in_batch=pol.fold_model,
@@ -164,7 +167,8 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
     in_sh = (n(pspecs), n(ospecs), n(bspecs))
     meta = dict(kind="train", accum=tcfg.accum_steps, remat=tcfg.remat,
                 pod_mode=pod_mode, pod_sync=pod_sync,
-                bucket_bytes=tcfg.bucket_bytes, policy=policy)
+                bucket_bytes=tcfg.bucket_bytes, policy=policy,
+                topology=topology)
     return Cell(
         name=f"{cfg.name}:{shape.name}",
         fn=step,

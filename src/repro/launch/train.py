@@ -16,6 +16,7 @@ import time
 import jax
 
 from repro.configs import get_config
+from repro.core.topology import TOPOLOGY_PRESETS
 from repro.data.pipeline import DataConfig, make_pipeline
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
@@ -50,6 +51,11 @@ def main() -> None:
     ap.add_argument("--calibration", default="",
                     help="comm.calibrate JSON fitted on this hardware; "
                          "consumed by --pod-sync auto")
+    ap.add_argument("--topology", default="v5e",
+                    choices=sorted(TOPOLOGY_PRESETS),
+                    help="topology preset the pod-sync planner models the "
+                         "cluster with ('v5e' = two-tier collapse, "
+                         "'v5e_3tier' = ICI / host-PCIe / DCN hierarchy)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true",
@@ -97,6 +103,7 @@ def main() -> None:
         bucket_bytes=args.bucket_bytes,
         pod_mode="manual" if "pod" in mesh.axis_names else "none",
         use_kernel=False, calibration=args.calibration,
+        topology=args.topology,
     )
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
     decision = train_steps.plan_pod_sync(
@@ -107,7 +114,7 @@ def main() -> None:
     )
     if n_pods > 1:
         print(f"[train] {decision.describe()} "
-              f"(requested {args.pod_sync!r}, "
+              f"(requested {args.pod_sync!r}, topology={args.topology}, "
               f"calibration={args.calibration or '$REPRO_CALIBRATION/preset'})")
 
     ocfg = adamw.AdamWConfig(

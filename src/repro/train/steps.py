@@ -70,6 +70,10 @@ class TrainConfig:
     # empirically fitted topology instead of the preset v5e constants
     # ("" = also honor $REPRO_CALIBRATION, else presets)
     calibration: str = ""
+    # named topology preset the pod-sync planner models the cluster with
+    # (repro.core.topology.TOPOLOGY_PRESETS): "v5e" = two-tier collapse,
+    # "v5e_3tier" = the full ICI / host-PCIe / DCN hierarchy
+    topology: str = "v5e"
 
     model_in_batch: bool = False   # fold_model policy: batch over model too
 
@@ -214,6 +218,7 @@ def plan_pod_sync(
     return comm.plan_pod_sync(
         n_pods, grad_bytes, lossy_ok=True,
         calibration=tcfg.calibration or None,
+        topology=tcfg.topology,
         bucket_bytes=tcfg.bucket_bytes or None,
     )
 

@@ -48,11 +48,11 @@ import jax, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro import comm
-from repro.core.topology import paper_smp_cluster
+from repro.core.topology import paper_smp_3tier, paper_smp_cluster
 
 COLLECTIVE = {collective!r}
 mesh = jax.make_mesh((2, 4), ("mach", "core"))
-topo = paper_smp_cluster(n_machines=2, cores=4, nics=2)
+topo = {topo_expr}
 ctx = comm.CommContext(topo)
 rng = np.random.RandomState(0)
 
@@ -124,11 +124,24 @@ print("ctx.plan round-trip ok:", pc.describe())
 """
 
 
+# The same 8 devices planned as the paper's two-tier cluster AND as a
+# three-tier (shm / numa / gige) hierarchy: the N-tier topology API must
+# plan AND execute every registered strategy on both.
+TOPO_EXPRS = {
+    "2tier": "paper_smp_cluster(n_machines=2, cores=4, nics=2)",
+    "3tier": "paper_smp_3tier(n_machines=2, boards=2, cores=2, nics=2)",
+}
+
+
+@pytest.mark.parametrize("tiers", sorted(TOPO_EXPRS))
 @pytest.mark.parametrize("collective", COLLECTIVE_REFS)
-def test_registered_executables_match_references(collective):
+def test_registered_executables_match_references(collective, tiers):
     """Every registered executable (collective, strategy) pair runs and
-    matches its reference on the 8-device (2 mach x 4 core) mesh."""
-    print(run_py(HARNESS.format(collective=collective)))
+    matches its reference on the 8-device (2 mach x 4 core) mesh, planned
+    through both the two-tier and the three-tier topology."""
+    print(run_py(HARNESS.format(
+        collective=collective, topo_expr=TOPO_EXPRS[tiers]
+    )))
 
 
 def test_legacy_manual_all_reduce_view():

@@ -1,0 +1,540 @@
+"""N-tier topology API: tier hierarchy, back-compat surface, per-tier cost
+features, stage-per-tier calibration, and the JSON v1 -> v2 upgrade path.
+
+The api_redesign invariants:
+
+  * ``ClusterTopology(tiers=, fanout=)`` generalizes the fixed local/global
+    pair; the legacy two-tier constructor, ``two_tier``, and the derived
+    ``local`` / ``global_`` / ``n_machines`` / ``procs_per_machine``
+    properties are exact views of it;
+  * ``param_vector()`` / ``fitted_tiers()`` round-trip for arbitrary tier
+    counts (property test);
+  * ``cost_features`` stays an exact linear decomposition
+    (``features @ params == simulate_rounds``) on 3-tier topologies;
+  * a 3-tier topology plans, simulates, and calibrates: the synthetic fit
+    recovers injected per-tier alpha/beta within 10% relative error;
+  * persisted version-1 (two-tier) calibration JSONs load unchanged through
+    the upgrade layer.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.comm.calibrate import (
+    CalibrationResult,
+    Measurement,
+    fit_calibration,
+    fit_topology,
+    load_calibration,
+    save_calibration,
+)
+from repro.core import schedules as S
+from repro.core.simulator import (
+    check_semantics,
+    cost_features,
+    n_cost_features,
+    pipelined_cost_features,
+    simulate_async,
+    simulate_pipelined,
+    simulate_rounds,
+    validate,
+)
+from repro.core.topology import (
+    TOPOLOGY_PRESETS,
+    ClusterTopology,
+    LinkTier,
+    paper_smp_3tier,
+    paper_smp_cluster,
+    topology_preset,
+    tpu_v5e_3tier,
+    tpu_v5e_cluster,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # tier-1 env has no hypothesis; CI installs it
+    from _hypothesis_compat import given, settings, strategies as st
+
+
+THREE_TIER = ClusterTopology(
+    tiers=(
+        LinkTier("shm", alpha=2e-6, beta=1.0 / 1.5e9),
+        LinkTier("pcie", alpha=8e-6, beta=1.0 / 8.0e8),
+        LinkTier("eth", alpha=40e-6, beta=1.0 / 2.0e8),
+    ),
+    fanout=(2, 2, 4),
+    degree=2,
+    write_cost=1.5e-6,
+    assemble_cost=0.0,
+)
+
+T3_SMALL = paper_smp_3tier(n_machines=3, boards=2, cores=2, nics=2)
+
+
+# ----------------------------------------------------------------------
+# The tier-list API and its two-tier back-compat surface
+# ----------------------------------------------------------------------
+
+def test_two_tier_constructions_agree():
+    legacy = ClusterTopology(
+        n_machines=4, procs_per_machine=8, degree=2,
+        local=LinkTier("shm", 1e-6, 1e-9),
+        global_=LinkTier("eth", 5e-5, 8e-9),
+        write_cost=1e-6, assemble_cost=2e-6,
+    )
+    one_liner = ClusterTopology.two_tier(
+        4, 8, 2, LinkTier("shm", 1e-6, 1e-9), LinkTier("eth", 5e-5, 8e-9),
+        1e-6, 2e-6,
+    )
+    tier_list = ClusterTopology(
+        tiers=(LinkTier("shm", 1e-6, 1e-9), LinkTier("eth", 5e-5, 8e-9)),
+        fanout=(8, 4), degree=2, write_cost=1e-6, assemble_cost=2e-6,
+    )
+    assert legacy == one_liner == tier_list
+    assert legacy.n_tiers == 2
+    assert legacy.local.name == "shm" and legacy.global_.name == "eth"
+    assert legacy.n_machines == 4 and legacy.procs_per_machine == 8
+    assert legacy.n_procs == 32
+    assert hash(legacy) == hash(tier_list)
+
+
+def test_derived_two_tier_view_of_three_tier():
+    t = THREE_TIER
+    assert t.n_tiers == 3
+    assert t.n_procs == 16
+    # machine = outermost group; procs_per_machine = everything inside
+    assert t.n_machines == 4 and t.procs_per_machine == 4
+    assert t.local is t.tiers[0] and t.global_ is t.tiers[-1]
+    assert t.machine_of(5) == 1
+    assert t.co_located(4, 7) and not t.co_located(3, 4)
+
+
+def test_hierarchical_coordinates_and_tier_index():
+    t = THREE_TIER  # fanout (2, 2, 4)
+    assert t.coords(0) == (0, 0, 0)
+    assert t.coords(1) == (1, 0, 0)
+    assert t.coords(2) == (0, 1, 0)
+    assert t.coords(7) == (1, 1, 1)
+    assert t.tier_index(0, 1) == 0      # same board
+    assert t.tier_index(0, 2) == 1      # same machine, different board
+    assert t.tier_index(0, 4) == 2      # different machine
+    assert t.tier(0, 4).name == "eth"
+    assert t.inner_group_of(3) == 1
+    assert list(t.inner_peers(5)) == [4, 5]
+    assert list(t.group_procs(2, 1)) == [4, 5, 6, 7]
+    with pytest.raises(ValueError):
+        t.tier_index(3, 3)
+
+
+def test_with_accepts_legacy_and_tier_fields():
+    t = THREE_TIER
+    assert t.with_(n_machines=2).fanout == (2, 2, 2)
+    assert t.with_(degree=1).degree == 1
+    fast = LinkTier("fast_eth", 1e-5, 2e-9)
+    assert t.with_(global_=fast).tiers[-1] is fast
+    # procs_per_machine is only meaningful on two-tier topologies
+    with pytest.raises(ValueError):
+        t.with_(procs_per_machine=8)
+    two = paper_smp_cluster(4, 4, 2)
+    assert two.with_(procs_per_machine=8).fanout == (8, 4)
+    with pytest.raises(TypeError):
+        two.with_(bogus_field=1)
+
+
+def test_with_shape_and_stage():
+    t = THREE_TIER
+    assert t.with_shape((4, 8, 2)).fanout == (4, 8, 2)
+    truncated = t.with_shape((2, 2))
+    assert truncated.n_tiers == 2
+    assert truncated.tiers == t.tiers[:2]
+    assert t.stage(2).fanout == (2, 2, 1)
+    assert t.stage(1).fanout == (2, 1)
+    # two-tier stage(1) is the classic single-machine local stage
+    two = paper_smp_cluster(4, 4, 2)
+    assert two.stage(1) == two.with_(n_machines=1)
+    with pytest.raises(ValueError):
+        t.stage(3)
+    with pytest.raises(ValueError):
+        t.with_shape((2, 2, 4, 4))
+
+
+def test_tier_monotonicity_enforced():
+    slow_inner = LinkTier("slow", 1e-3, 1e-6)
+    fast_outer = LinkTier("fast", 1e-6, 1e-9)
+    with pytest.raises(ValueError):
+        ClusterTopology(
+            tiers=(slow_inner, fast_outer), fanout=(2, 2), degree=1,
+            write_cost=1e-6,
+        )
+    with pytest.raises(ValueError):
+        ClusterTopology(
+            tiers=(fast_outer, fast_outer, slow_inner, fast_outer),
+            fanout=(2, 2, 2, 2), degree=1, write_cost=1e-6,
+        )
+    with pytest.raises(ValueError):
+        ClusterTopology(
+            tiers=(fast_outer,), fanout=(4,), degree=1, write_cost=1e-6
+        )
+    with pytest.raises(ValueError):
+        ClusterTopology(
+            tiers=(fast_outer, fast_outer), fanout=(2, 2, 2), degree=1,
+            write_cost=1e-6,
+        )
+    # degree and write_cost stay required, as in the pre-tier-list API
+    with pytest.raises(ValueError, match="write_cost is required"):
+        ClusterTopology(
+            tiers=(fast_outer, fast_outer), fanout=(2, 2), degree=1
+        )
+    with pytest.raises(ValueError, match="degree is required"):
+        ClusterTopology(
+            tiers=(fast_outer, fast_outer), fanout=(2, 2), write_cost=1e-6
+        )
+
+
+def test_presets():
+    v2 = tpu_v5e_cluster(2)
+    v3 = tpu_v5e_3tier(2)
+    assert v2.n_procs == v3.n_procs == 512
+    assert v3.n_tiers == 3 and v3.fanout == (4, 64, 2)
+    assert [t.name for t in v3.tiers] == ["ici", "pcie", "dcn"]
+    assert set(TOPOLOGY_PRESETS) >= {"v5e", "v5e_3tier", "smp"}
+    assert topology_preset("v5e_3tier", 4).n_machines == 4
+    with pytest.raises(ValueError):
+        topology_preset("nope", 2)
+
+
+# ----------------------------------------------------------------------
+# param_vector / fitted round-trips (property test, arbitrary tier count)
+# ----------------------------------------------------------------------
+
+@given(
+    n_tiers=st.integers(2, 5),
+    seed=st.integers(0, 7),
+)
+@settings(max_examples=20, deadline=None)
+def test_param_vector_fitted_tiers_round_trip(n_tiers, seed):
+    """fitted_tiers(param_vector()) is the identity for any feasible
+    parameter vector at any tier count; infeasible vectors project onto
+    the feasible region (monotone tiers, positive floors)."""
+    rng = np.random.RandomState(seed * 31 + n_tiers)
+    fanout = tuple(int(f) for f in rng.randint(1, 5, size=n_tiers))
+    alphas = np.sort(rng.uniform(1e-7, 1e-4, size=n_tiers))
+    betas = np.sort(rng.uniform(1e-11, 1e-8, size=n_tiers))
+    topo = ClusterTopology.fitted_tiers(
+        fanout, degree=2, alphas=list(alphas), betas=list(betas),
+        write_cost=1e-6, assemble_cost=3e-7,
+    )
+    vec = topo.param_vector()
+    assert len(vec) == 2 * n_tiers + 2
+    assert vec == pytest.approx(
+        tuple(np.ravel(np.column_stack([alphas, betas]))) + (1e-6, 3e-7)
+    )
+    # round-trip through fitted_tiers is exact for a feasible vector
+    again = ClusterTopology.fitted_tiers(
+        fanout, degree=2,
+        alphas=[vec[2 * i] for i in range(n_tiers)],
+        betas=[vec[2 * i + 1] for i in range(n_tiers)],
+        write_cost=vec[-2], assemble_cost=vec[-1],
+        names=tuple(t.name for t in topo.tiers),
+    )
+    assert again == topo
+    # infeasible input projects: reversed alphas come back monotone
+    proj = ClusterTopology.fitted_tiers(
+        fanout, degree=2, alphas=list(alphas[::-1]), betas=list(betas),
+        write_cost=-1.0,
+    )
+    pv = proj.param_vector()
+    proj_alphas = [pv[2 * i] for i in range(n_tiers)]
+    assert proj_alphas == sorted(proj_alphas)
+    assert pv[-2] > 0
+
+
+@given(n_tiers=st.integers(2, 4), seed=st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_cost_features_width_tracks_tier_count(n_tiers, seed):
+    rng = np.random.RandomState(seed * 17 + n_tiers)
+    fanout = tuple(int(f) for f in rng.randint(2, 4, size=n_tiers))
+    topo = ClusterTopology.fitted_tiers(
+        fanout, degree=2,
+        alphas=list(np.sort(rng.uniform(1e-6, 1e-4, size=n_tiers))),
+        betas=list(np.sort(rng.uniform(1e-10, 1e-8, size=n_tiers))),
+        write_cost=1e-6,
+    )
+    assert n_cost_features(topo) == 2 * n_tiers + 2
+    sched = S.allreduce_hier_par_bw(topo, 4096.0, payloads=False)
+    feats = cost_features(sched)
+    assert len(feats) == 2 * n_tiers + 2
+    t_lin = float(np.dot(feats, topo.param_vector()))
+    assert t_lin == pytest.approx(simulate_rounds(sched, check=False),
+                                  rel=1e-12)
+
+
+# ----------------------------------------------------------------------
+# 3-tier planning + simulation
+# ----------------------------------------------------------------------
+
+def test_every_registered_strategy_plans_on_three_tier():
+    """Acceptance: a 3-tier ClusterTopology plans and simulates every
+    registry strategy (the registry's import-time smoke re-checked on a
+    larger instance, with semantics for the lossless ones)."""
+    for topo in (T3_SMALL, THREE_TIER):
+        for spec in comm.specs():
+            if not spec.supports(topo):
+                continue
+            sched = spec.build_schedule(topo, 2048.0, payloads=True)
+            validate(sched)
+            if not spec.lossy:
+                check_semantics(sched)
+            assert simulate_rounds(sched, check=False) > 0
+            assert simulate_async(sched, check=False) > 0
+
+
+def test_cost_features_exact_on_three_tier():
+    """The satellite acceptance: features @ params == simulate_rounds on
+    3-tier topologies, for every registered strategy and both payload
+    modes."""
+    for topo in (T3_SMALL, THREE_TIER):
+        for spec in comm.specs():
+            if not spec.supports(topo):
+                continue
+            for m in (1024.0, 65536.0):
+                sched = spec.build_schedule(topo, m, payloads=False)
+                t_lin = float(
+                    np.dot(cost_features(sched), topo.param_vector())
+                )
+                t_sim = simulate_rounds(sched, check=False)
+                assert t_lin == pytest.approx(t_sim, rel=1e-12), (
+                    spec.collective, spec.strategy, m,
+                )
+
+
+def test_pipelined_cost_features_exact_on_three_tier():
+    topo = T3_SMALL
+    for coll, strat in [
+        ("all_reduce", "hier_par_bw"),
+        ("reduce_scatter", "hier_par"),
+        ("all_gather", "hier_par"),
+    ]:
+        spec = comm.get_spec(coll, strat)
+        build = lambda m: spec.build_schedule(topo, m, payloads=False)
+        for n in (1, 3, 8):
+            f = pipelined_cost_features(build, 2e5, n)
+            assert len(f) == n_cost_features(topo)
+            t_lin = float(np.dot(f, topo.param_vector()))
+            want = simulate_pipelined(build, 2e5, n, check=False).t_pipelined
+            assert t_lin == pytest.approx(want, rel=1e-12), (coll, strat, n)
+
+
+def test_three_tier_rankings_can_flip_per_level():
+    """The motivation (Barchet-Estefanel & Mounie): with a third tier the
+    model exposes crossovers a two-tier collapse cannot express -- the
+    tier-recursive schedules pay the mid tier explicitly."""
+    t3 = tpu_v5e_3tier(2)
+    t2 = tpu_v5e_cluster(2)
+    for m in (1e4, 1e8):
+        ranking3 = [p.strategy for p in comm.enumerate_plans(
+            t3, "all_reduce", m, executable_only=True)]
+        ranking2 = [p.strategy for p in comm.enumerate_plans(
+            t2, "all_reduce", m, executable_only=True)]
+        assert set(ranking3) == set(ranking2)
+    # mid-tier hops make the 3-tier model strictly more expensive than the
+    # 2-tier collapse for the same hierarchical schedule (ICI-only is the
+    # old model's fiction)
+    bw3 = comm.plan_for_spec(t3, comm.get_spec("all_reduce", "hier_par_bw"), 1e8)
+    bw2 = comm.plan_for_spec(t2, comm.get_spec("all_reduce", "hier_par_bw"), 1e8)
+    assert bw3.t_rounds > bw2.t_rounds
+
+
+def test_schedule_local_writes_stay_in_shared_memory_groups():
+    """Rule 1 generalized: LocalWrites never cross a tier-0 group on any
+    hierarchy depth (validate enforces it; generators must comply)."""
+    topo = T3_SMALL
+    for spec in comm.specs():
+        if not spec.supports(topo):
+            continue
+        sched = spec.build_schedule(topo, 1024.0, payloads=False)
+        for op in sched.all_ops():
+            if isinstance(op, S.LocalWrite):
+                for r in op.readers:
+                    assert topo.inner_group_of(op.writer) == \
+                        topo.inner_group_of(r)
+
+
+# ----------------------------------------------------------------------
+# 3-tier calibration: synthetic round trip + JSON versioning
+# ----------------------------------------------------------------------
+
+SIZES = [256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0, 1048576.0]
+
+
+def synthetic_measurements_3tier(noise=0.02, seed=0):
+    """Timings generated by the round model itself on a hidden 3-tier
+    topology, from the full shape AND every truncated tier stage (the
+    stage-per-tier sweep ``probe_collectives`` runs)."""
+    rng = np.random.RandomState(seed)
+    out = []
+    stages = [THREE_TIER, THREE_TIER.stage(2), THREE_TIER.stage(1)]
+    for topo in stages:
+        shape = (topo.n_machines, topo.procs_per_machine, topo.degree)
+        for coll, strat in comm.executable_pairs():
+            spec = comm.get_spec(coll, strat)
+            if spec.lossy or not spec.supports(topo):
+                continue
+            roots = (
+                sorted({0, topo.n_procs - 1})
+                if spec.caps.needs_root and topo.n_procs > 1
+                else [0]
+            )
+            for root in roots:
+                for m in SIZES:
+                    t = simulate_rounds(
+                        spec.build_schedule(topo, m, root=root,
+                                            payloads=False),
+                        check=False,
+                    )
+                    t *= 1 + noise * rng.randn()
+                    out.append(
+                        Measurement(coll, strat, m, t, root=root,
+                                    shape=shape, fanout=topo.fanout)
+                    )
+    return out
+
+
+def test_three_tier_fit_recovers_injected_parameters_within_10pct():
+    """The acceptance-criteria round trip: known 3-tier topology -> noisy
+    timings -> stage-per-tier fit -> per-tier alpha/beta within 10%."""
+    ms = synthetic_measurements_3tier(noise=0.02, seed=0)
+    fit = fit_topology(ms, degree=THREE_TIER.degree,
+                       fanout=THREE_TIER.fanout)
+    got = fit.topology.param_vector()
+    want = THREE_TIER.param_vector()
+    labels = [
+        "alpha_shm", "beta_shm", "alpha_pcie", "beta_pcie",
+        "alpha_eth", "beta_eth", "write_cost",
+    ]
+    for name, a, b in zip(labels, want, got):
+        assert abs(b - a) / a < 0.10, (name, a, b)
+    assert fit.rel_rmse < 0.10
+    assert fit.n_measurements == len(ms)
+
+
+def test_three_tier_calibration_json_round_trip(tmp_path):
+    ms = synthetic_measurements_3tier(noise=0.01, seed=1)
+    calib = fit_calibration(ms, THREE_TIER, meta={"source": "synthetic3"})
+    p = tmp_path / "calibration3.json"
+    save_calibration(calib, p)
+    raw = json.loads(p.read_text())
+    assert raw["version"] == 2
+    assert len(raw["topology"]["tiers"]) == 3
+    assert raw["topology"]["fanout"] == [2, 2, 4]
+    back = load_calibration(p)
+    assert back.topology == calib.topology
+    assert back.measurements == calib.measurements
+    assert back.measurements[0].fanout is not None
+    # context plumbing: validate against evidence incl. stage probes
+    ctx = comm.CommContext.from_calibration(str(p))
+    rows = ctx.validate_against_measurements(calib.measurements)
+    assert np.mean([abs(r["rel_error"]) for r in rows]) < 0.10
+    # transplant onto the production 3-tier shape
+    big = comm.CommContext.from_calibration(str(p), fanout=(4, 64, 2))
+    assert big.topo.fanout == (4, 64, 2)
+    assert big.topo.tiers[1].alpha == ctx.topo.tiers[1].alpha
+
+
+def test_v1_calibration_files_upgrade_transparently(tmp_path):
+    """Satellite: the loader upgrades persisted version-1 (fixed
+    local/global pair) files -- old calibrations keep working unchanged."""
+    v1 = dict(
+        version=1,
+        topology=dict(
+            n_machines=4, procs_per_machine=4, degree=2,
+            local=dict(name="local_fit", alpha=2e-6, beta=6.7e-10),
+            global_=dict(name="global_fit", alpha=4e-5, beta=5e-9),
+            write_cost=1.5e-6, assemble_cost=0.0,
+        ),
+        fit=dict(rel_rmse=0.03, n_iterations=4),
+        meta=dict(source="pr2-era"),
+        measurements=[
+            dict(collective="all_reduce", strategy="hier_par", nbytes=1024.0,
+                 t_measured=1e-4, t_modelled=1.1e-4, root=0,
+                 shape=[4, 4, 2]),
+        ],
+    )
+    p = tmp_path / "old.json"
+    p.write_text(json.dumps(v1))
+    calib = load_calibration(p)
+    assert calib.topology.n_tiers == 2
+    assert calib.topology.fanout == (4, 4)
+    assert calib.topology.local.alpha == pytest.approx(2e-6)
+    assert calib.topology.global_.beta == pytest.approx(5e-9)
+    assert calib.meta["source"] == "pr2-era"
+    assert calib.measurements[0].shape == (4, 4, 2)
+    assert calib.measurements[0].fanout is None
+    # and it plans through the context like any fresh calibration
+    ctx = comm.CommContext.from_calibration(calib, n_machines=8)
+    assert ctx.topo.n_machines == 8
+    assert ctx.plan("all_reduce", 1e6).executable
+    # unknown future versions still refuse loudly
+    p2 = tmp_path / "future.json"
+    p2.write_text(json.dumps(dict(v1, version=99)))
+    with pytest.raises(ValueError, match="unsupported calibration version"):
+        load_calibration(p2)
+
+
+def test_rooted_probes_cached_and_costed_per_root():
+    """Satellite (rooted calibration): per-root plans differ when root
+    placement changes egress serialization, and the affine cache keys on
+    the root."""
+    topo = paper_smp_cluster(n_machines=3, cores=4, nics=2)
+    spec = comm.get_spec("broadcast", "hier_par")
+    p0 = comm.plan_for_spec(topo, spec, 4096.0, root=0)
+    p_far = comm.plan_for_spec(topo, spec, 4096.0, root=topo.n_procs - 1)
+    assert p0.root == 0 and p_far.root == topo.n_procs - 1
+    # same cost model, different roots: both plan, times positive
+    assert p0.t_rounds > 0 and p_far.t_rounds > 0
+    # gather's asymmetric ingress makes root placement visible in rounds
+    ga = comm.get_spec("gather", "hier_par")
+    g0 = ga.build_schedule(topo, 4096.0, root=0, payloads=False)
+    g_far = ga.build_schedule(topo, 4096.0, root=topo.n_procs - 1,
+                              payloads=False)
+    assert g0.n_rounds == g_far.n_rounds  # symmetric shape, shifted root
+
+
+def test_pod_sync_plans_on_three_tier_preset():
+    """plan_pod_sync accepts the 3-tier preset by name and returns a
+    runnable decision (the --topology wiring)."""
+    d2 = comm.plan_pod_sync(2, 4e9, topology="v5e")
+    d3 = comm.plan_pod_sync(2, 4e9, topology="v5e_3tier")
+    for d in (d2, d3):
+        assert d.fmt in comm.POD_SYNC_FORMATS
+        assert d.t_modelled <= d.t_monolithic
+    topo3 = comm.pod_sync_topology(2, topology="v5e_3tier")
+    assert topo3.n_tiers == 3 and topo3.n_machines == 2
+    assert comm.select_pod_sync(2, 1e8, topology="v5e_3tier") in \
+        comm.POD_SYNC_FORMATS
+
+
+def test_pod_sync_topology_tier_mismatch_falls_back(tmp_path):
+    """A two-tier calibration consumed under the 3-tier preset plans on
+    the calibrated hierarchy (with a warning) instead of crashing."""
+    two = ClusterTopology.fitted(
+        2, 4, 2, alpha_local=1e-6, beta_local=1e-9,
+        alpha_global=2e-5, beta_global=4e-9, write_cost=1e-6,
+    )
+    calib = CalibrationResult(
+        topology=two, measurements=(), rel_rmse=0.0, n_iterations=1,
+    )
+    p = tmp_path / "two.json"
+    save_calibration(calib, p)
+    with pytest.warns(RuntimeWarning, match="fitted 2 tiers"):
+        topo = comm.pod_sync_topology(4, calibration=str(p),
+                                      topology="v5e_3tier")
+    assert topo.n_tiers == 2 and topo.n_machines == 4
+    # matching tier counts transplant exactly
+    topo2 = comm.pod_sync_topology(4, calibration=str(p), topology="v5e")
+    assert topo2.n_tiers == 2
+    assert topo2.fanout == (256, 4)
+    assert topo2.local.alpha == two.local.alpha
