@@ -125,6 +125,128 @@ def _bench_bucketed_pod_sync(calib, repeats: int, grad_bytes: float):
     return rows
 
 
+def _bench_overlap_step(repeats: int, accum: int = 4):
+    """Serial vs overlapped train-step wall time -> the BENCH_step artifact.
+
+    Runs a reduced 2-layer model's manual-mode train step on a
+    (2 pod x N data) fake-device mesh twice -- once serial (backward ->
+    sync -> update) and once with the compute-overlapped step at the
+    planner's chosen depth (forced to at least 2 so the overlapped code
+    path is always exercised and measured).  The serial step's measured
+    wall clock doubles as the planner's ``compute_time`` shadow (an upper
+    bound: it includes the sync; on CPU fake devices the whole number is
+    dispatch-noise-dominated anyway -- the artifact's value is tracking the
+    serial/overlapped RATIO and the decision trajectory over time).
+    """
+    import dataclasses
+    import math
+    import time
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.config import reduced_for_smoke
+    from repro.optim import adamw
+    from repro.sharding import rules
+    from repro.train import steps as train_steps
+
+    cfg = reduced_for_smoke(get_config("llama3_2_1b")).with_(
+        compute_dtype="float32", n_layers=2
+    )
+    n = len(jax.devices())
+    pods = 2
+    if n < 2 or n % 2:
+        print(f"[bench] step bench skipped: needs an even device count "
+              f"for a 2-pod mesh, have {n}")
+        return None
+    mesh = jax.make_mesh((pods, n // pods, 1), ("pod", "data", "model"))
+    pol = rules.ShardingPolicy()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params)
+    # accum microbatches of one example per (pod, data) slot, whatever the
+    # probe-mesh shape is
+    B = pods * (n // pods) * accum
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (B, 32), 0, cfg.vocab_size
+    )
+    batch = {"tokens": tokens, "labels": tokens}
+
+    def measure(tcfg):
+        step, bspecs = train_steps.make_train_step(
+            cfg, tcfg, adamw.AdamWConfig(lr=1e-3), mesh, pol
+        )
+        ns = lambda s: jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), s,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        with mesh:
+            jb = jax.device_put(batch, ns(bspecs))
+            f = jax.jit(step)
+            jax.block_until_ready(f(params, opt, jb))  # compile + warmup
+            best = math.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(params, opt, jb))
+                best = min(best, time.perf_counter() - t0)
+        return best
+
+    base = train_steps.TrainConfig(
+        pod_mode="manual", pod_sync="rs", accum_steps=accum,
+        use_kernel=False,
+    )
+    t_serial = measure(base)
+    print(f"[bench] train step serial: {t_serial * 1e3:.1f}ms")
+
+    # plan overlap with the measured serial step as the compute shadow
+    planned = dataclasses.replace(
+        base, overlap="auto", compute_time=t_serial
+    )
+    decision = train_steps.plan_pod_sync(
+        cfg, planned, pods, chips_per_pod=mesh.devices.size // pods
+    )
+    depth = max(decision.overlap, 2)   # always exercise the overlapped path
+    over = dataclasses.replace(planned, overlap=depth)
+    forced = train_steps.plan_pod_sync(
+        cfg, over, pods, chips_per_pod=mesh.devices.size // pods
+    )
+    t_over = measure(over)
+    print(f"[bench] train step overlapped (depth {depth}): "
+          f"{t_over * 1e3:.1f}ms; auto decision: {decision.describe()}")
+
+    rows = [
+        dict(mode="serial", overlap=0, t_measured_us=t_serial * 1e6,
+             t_model_us=decision.t_step_serial * 1e6),
+        dict(mode="overlapped", overlap=depth, t_measured_us=t_over * 1e6,
+             t_model_us=forced.t_step * 1e6),
+    ]
+    measured = {"serial": t_serial, "overlapped": t_over}
+    chosen = "overlapped" if decision.overlap > 0 else "serial"
+    t_best = min(measured.values())
+    regret = (measured[chosen] - t_best) / t_best
+    return dict(
+        bench="train_step_overlap",
+        arch=cfg.name,
+        accum_steps=accum,
+        mesh=dict(pod=pods, data=n // pods, model=1),
+        rows=rows,
+        decision=dict(
+            fmt=decision.fmt,
+            bucket_bytes=decision.bucket_bytes,
+            overlap=decision.overlap,
+            compute_time_us=decision.compute_time * 1e6,
+            t_step_us=decision.t_step * 1e6,
+            t_step_serial_us=decision.t_step_serial * 1e6,
+            modelled_speedup=(
+                decision.t_step_serial / decision.t_step
+                if decision.t_step else 1.0
+            ),
+        ),
+        regret=regret,
+    )
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--quick", action="store_true",
@@ -146,6 +268,11 @@ def main(argv=None) -> None:
     ap.add_argument("--no-three-tier", action="store_true",
                     help="skip the three-tier (shm / numa / gige) probe "
                          "sweep over the same mesh")
+    ap.add_argument("--step-out", default="BENCH_step.json",
+                    help="serial-vs-overlapped train-step artifact path")
+    ap.add_argument("--no-step-bench", action="store_true",
+                    help="skip the serial-vs-overlapped train-step "
+                         "measurement (BENCH_step.json)")
     args = ap.parse_args(argv)
 
     _ensure_devices(args.mach * args.core)
@@ -300,6 +427,16 @@ def main(argv=None) -> None:
     )
     with open(args.out, "w") as f:
         json.dump(artifact, f, indent=2)
+    if not args.no_step_bench:
+        # Serial vs overlapped train-step trajectory (was empty until the
+        # compute/comm-overlap PR): its own root-level artifact so step-time
+        # history is diffable independently of the probe sweep.
+        step_artifact = _bench_overlap_step(repeats=max(2, repeats // 2))
+        if step_artifact is not None:
+            with open(args.step_out, "w") as f:
+                json.dump(step_artifact, f, indent=2)
+            print(f"[bench] step overlap trajectory -> {args.step_out} "
+                  f"(regret {step_artifact['regret']:.3f})")
     if args.save_calibration:
         comm.save_calibration(calib, args.save_calibration)
         print(f"[bench] calibration -> {args.save_calibration}")

@@ -27,7 +27,9 @@ from . import impls as _impls  # noqa: F401  (registers all strategies)
 from .bucketing import (  # noqa: F401
     BucketedChoice,
     BucketLayout,
+    OverlapChoice,
     choose_n_chunks,
+    choose_overlap,
     pack_buckets,
     plan_buckets,
     unpack_buckets,
@@ -59,9 +61,11 @@ from .grad_sync import (  # noqa: F401
     LOSSY_POD_SYNC_FORMATS,
     POD_SYNC_FORMATS,
     PodSyncDecision,
+    bucket_combiner,
     plan_pod_sync,
     pod_combine,
     pod_combine_flat,
+    pod_combine_microbatched,
     pod_combine_q8,
     pod_sync_builder,
     pod_sync_grads,

@@ -95,6 +95,7 @@ def plan_buckets(
     *,
     specs=None,
     batch_ndim: int = 0,
+    reverse: bool = False,
 ) -> BucketLayout:
     """Plan fixed-byte buckets for ``tree``.
 
@@ -102,6 +103,12 @@ def plan_buckets(
                  leaves with different specs never share a bucket.
     batch_ndim:  leading dims excluded from bucketing (1 for the vmap-mode
                  [n_pods, ...] gradient stacks); must agree across leaves.
+    reverse:     lay leaves out in REVERSE ``jax.tree.leaves`` order.  The
+                 parameter tree is layer-ordered and backward produces the
+                 last layers' gradients first, so reverse-layer buckets
+                 become ready earliest-last-layer-first -- the layout the
+                 compute-overlapped sync wants (``simulate_overlapped``).
+                 ``unpack_buckets`` restores the original tree either way.
     """
     import jax
 
@@ -124,9 +131,12 @@ def plan_buckets(
             f"specs tree has {len(spec_leaves)} leaves, grads {len(leaves)}"
         )
     batch_shape = tuple(leaves[0].shape[:batch_ndim])
+    indexed = list(enumerate(zip(leaves, spec_leaves)))
+    if reverse:
+        indexed = indexed[::-1]
     groups: dict[tuple, list] = {}
     order: list[tuple] = []
-    for i, (leaf, spec) in enumerate(zip(leaves, spec_leaves)):
+    for i, (leaf, spec) in indexed:
         if tuple(leaf.shape[:batch_ndim]) != batch_shape:
             raise ValueError(
                 f"leaf {i} batch shape {leaf.shape[:batch_ndim]} != "
@@ -263,29 +273,45 @@ def pipelined_time_affine(stages, m: float, n_chunks: int) -> float:
     return sum(ts) + (n_chunks - 1) * max(ts, default=0.0)
 
 
+def chunk_counts(
+    nbytes: float,
+    min_bucket_bytes: int = MIN_BUCKET_BYTES,
+    max_chunks: int = MAX_CHUNKS,
+) -> list:
+    """The candidate chunk counts every sweep shares: 1, 2, 4, ... while
+    the chunk stays >= ``min_bucket_bytes`` and the count <= ``max_chunks``
+    (the latency-amortization floor and the runaway cap)."""
+    ns, n = [1], 2
+    while n <= max_chunks and nbytes / n >= min_bucket_bytes:
+        ns.append(n)
+        n *= 2
+    return ns
+
+
 def choose_n_chunks(
     build,
     nbytes: float,
     *,
     min_bucket_bytes: int = MIN_BUCKET_BYTES,
     max_chunks: int = MAX_CHUNKS,
+    stages=None,
 ) -> BucketedChoice:
     """Sweep chunk counts under the pipelined cost view; return the best.
 
     ``build``: message size -> Schedule (e.g. a registry spec's
-    ``build_schedule`` partial).  The sweep covers n_chunks = 1, 2, 4, ...
-    while the chunk stays >= ``min_bucket_bytes`` (latency amortization
-    floor) -- the alpha/beta of ``build``'s topology decide the winner.
+    ``build_schedule`` partial).  The sweep covers ``chunk_counts`` -- the
+    alpha/beta of ``build``'s topology decide the winner.  ``stages``
+    optionally supplies precomputed ``stage_affine`` curves (planners
+    pricing several views of one family reuse them).
     """
-    stages = stage_affine(build)
+    if stages is None:
+        stages = stage_affine(build)
     t_mono = pipelined_time_affine(stages, nbytes, 1)
     best_n, best_t = 1, t_mono
-    n = 2
-    while n <= max_chunks and nbytes / n >= min_bucket_bytes:
+    for n in chunk_counts(nbytes, min_bucket_bytes, max_chunks)[1:]:
         t = pipelined_time_affine(stages, nbytes, n)
         if t < best_t:
             best_n, best_t = n, t
-        n *= 2
     return BucketedChoice(
         n_chunks=best_n,
         bucket_bytes=math.ceil(nbytes / best_n),
@@ -303,3 +329,94 @@ def simulate_choice(build, nbytes: float, n_chunks: int) -> PipelinedCost:
     from repro.core.simulator import simulate_pipelined
 
     return simulate_pipelined(build, nbytes, n_chunks, check=False)
+
+
+# ----------------------------------------------------------------------
+# Compute-overlapped bucket-size selection
+# ----------------------------------------------------------------------
+
+def overlapped_time_affine(
+    stages, m: float, n_chunks: int, compute_time: float
+) -> float:
+    """``simulate_overlapped`` total from per-stage affine coefficients.
+
+    Exact O(S) twin of the simulator's closed form: buckets released
+    uniformly over the ``compute_time`` backward shadow, comm pipelined
+    behind the releases; only the comm escaping the shadow is charged.
+    ``compute_time = 0`` reduces to ``pipelined_time_affine`` exactly.
+    """
+    chunk_m = m / n_chunks
+    ts = [A + B * chunk_m for _, A, B in stages]
+    t_chunk = sum(ts)
+    b = max(ts, default=0.0)
+    return t_chunk + max(
+        compute_time, compute_time / n_chunks + (n_chunks - 1) * b
+    )
+
+
+@dataclass(frozen=True)
+class OverlapChoice:
+    """Outcome of an overlap-aware chunk-count sweep for one sync family."""
+
+    n_chunks: int
+    bucket_bytes: float
+    compute_time: float
+    t_overlapped: float       # compute + exposed comm at the chosen chunking
+    t_serial: float           # compute + best post-backward pipelined sync
+    stages: tuple
+
+    @property
+    def t_exposed(self) -> float:
+        return self.t_overlapped - self.compute_time
+
+    @property
+    def speedup(self) -> float:
+        return self.t_serial / self.t_overlapped if self.t_overlapped else 1.0
+
+
+def choose_overlap(
+    build,
+    nbytes: float,
+    compute_time: float,
+    *,
+    min_bucket_bytes: int = MIN_BUCKET_BYTES,
+    max_chunks: int = MAX_CHUNKS,
+    n_chunks: int | None = None,
+    stages=None,
+) -> OverlapChoice:
+    """Sweep chunk counts under the compute-overlapped view; return the best.
+
+    Like ``choose_n_chunks`` but pricing ``overlapped_time_affine``: deeper
+    chunking releases comm earlier into the backward shadow but pays more
+    per-message alphas; the fitted stage curves decide.  ``n_chunks`` pins
+    the chunk count instead of sweeping.  ``t_serial`` reports the best
+    UNoverlapped plan (compute, then the ``choose_n_chunks`` pipelined sync)
+    so callers can compare overlap on vs off at their respective optima.
+    """
+    if stages is None:
+        stages = stage_affine(build)
+    serial = choose_n_chunks(
+        build, nbytes,
+        min_bucket_bytes=min_bucket_bytes, max_chunks=max_chunks,
+        stages=stages,
+    )
+    t_serial = compute_time + serial.t_pipelined
+    if n_chunks is not None:
+        best_n = max(1, int(n_chunks))
+        best_t = overlapped_time_affine(stages, nbytes, best_n, compute_time)
+    else:
+        best_n, best_t = 1, overlapped_time_affine(
+            stages, nbytes, 1, compute_time
+        )
+        for n in chunk_counts(nbytes, min_bucket_bytes, max_chunks)[1:]:
+            t = overlapped_time_affine(stages, nbytes, n, compute_time)
+            if t < best_t:
+                best_n, best_t = n, t
+    return OverlapChoice(
+        n_chunks=best_n,
+        bucket_bytes=math.ceil(nbytes / best_n),
+        compute_time=compute_time,
+        t_overlapped=best_t,
+        t_serial=t_serial,
+        stages=tuple((k, A + B * nbytes / best_n) for k, A, B in stages),
+    )

@@ -286,6 +286,17 @@ _BUCKET_COMBINERS = {
 }
 
 
+def bucket_combiner(fmt: str):
+    """The ``[n_pods, L] -> [L]`` combiner of one wire format (the bucketed
+    hot path; what the overlapped trainer applies per bucket)."""
+    if fmt not in _BUCKET_COMBINERS:
+        raise ValueError(
+            f"unknown pod_sync format {fmt!r}; expected one of "
+            f"{POD_SYNC_FORMATS}"
+        )
+    return _BUCKET_COMBINERS[fmt]
+
+
 def pod_combine(gpod, n_pods: int, gspecs=None, *, fmt: str = "flat",
                 bucket_bytes: int = 0):
     """vmap-mode pod-tier combine: wire format + optional bucketing.
@@ -326,6 +337,45 @@ def pod_combine(gpod, n_pods: int, gspecs=None, *, fmt: str = "flat",
         return flat.reshape(g.shape[1:]).astype(g.dtype)
 
     return jax.tree.map(per_leaf, gpod)
+
+
+def pod_combine_microbatched(
+    gpod_seq, n_pods: int, gspecs=None, *, fmt: str = "flat",
+    bucket_bytes: int = 0, reverse: bool = True,
+):
+    """Per-microbatch partial-mean pod combine (the overlapped trainer's
+    accumulation semantics, as a standalone reference).
+
+    gpod_seq: grad tree, every leaf ``[accum_steps, n_pods, ...]``.  Each
+    microbatch's per-pod gradients are bucketed (reverse-layer order by
+    default, so buckets match backward's production order) and pod-combined
+    independently; the combined partial means accumulate and the result is
+    their average:
+
+        (1/K) * sum_k pod_combine(g_k)
+
+    For the linear wire formats ('flat'/'rs') this equals the serial
+    ``pod_combine(mean_k(g_k))`` exactly per element; the q8 formats
+    re-quantize per microbatch and stay within codec tolerance.  The
+    trainer's overlapped step interleaves exactly this combine with the
+    next microbatch's backward.
+    """
+    combiner = bucket_combiner(fmt)
+    layout = bucketing.plan_buckets(
+        gpod_seq, bucket_bytes or (1 << 62), specs=gspecs, batch_ndim=2,
+        reverse=reverse,
+    )
+    buckets = tuple(bucketing.pack_buckets(layout, gpod_seq))
+    accum = buckets[0].shape[0]
+
+    def body(acc, bs):
+        return tuple(a + combiner(b, n_pods) for a, b in zip(acc, bs)), None
+
+    init = tuple(jnp.zeros(b.shape[2:], b.dtype) for b in buckets)
+    acc, _ = lax.scan(body, init, buckets)
+    return bucketing.unpack_buckets(
+        layout, [a / accum for a in acc], batch_shape=()
+    )
 
 
 # ----------------------------------------------------------------------
@@ -446,7 +496,8 @@ def pod_sync_builder(topo, fmt: str):
 
 @dataclass(frozen=True)
 class PodSyncDecision:
-    """What the cost model chose for the pod seam: format + bucket size."""
+    """What the cost model chose for the pod seam: format + bucket size +
+    whether the sync overlaps backward/accumulation compute."""
 
     fmt: str
     bucket_bytes: int          # 0 = monolithic
@@ -454,16 +505,33 @@ class PodSyncDecision:
     t_modelled: float          # pipelined modelled seconds for the gradient
     t_monolithic: float        # same format, single bucket
     lossy: bool
+    # compute/comm overlap (0 = serial sync after the full backward;
+    # > 0 = per-microbatch partial-mean sync interleaved with backward,
+    # this many reverse-layer-order buckets per sync)
+    overlap: int = 0
+    compute_time: float = 0.0  # modelled backward+accumulation window, s
+    accum_steps: int = 1
+    t_step: float = 0.0        # modelled step: compute + exposed comm
+    t_step_serial: float = 0.0  # best serial plan's modelled step
 
     @property
     def bucketed(self) -> bool:
         return self.n_chunks > 1 or self.bucket_bytes > 0
 
     @property
+    def overlapped(self) -> bool:
+        return self.overlap > 0
+
+    @property
     def speedup(self) -> float:
         return (
             self.t_monolithic / self.t_modelled if self.t_modelled else 1.0
         )
+
+    @property
+    def t_exposed(self) -> float:
+        """Comm seconds the model leaves on the step's critical path."""
+        return max(self.t_step - self.compute_time, 0.0)
 
     def describe(self) -> str:
         if not self.bucketed:
@@ -472,11 +540,45 @@ class PodSyncDecision:
             b = f"{self.n_chunks} x {self.bucket_bytes / 1e6:.2f}MB buckets"
         else:
             b = f"{self.bucket_bytes / 1e6:.2f}MB buckets"
-        return (
+        msg = (
             f"pod_sync={self.fmt} [{b}] t={self.t_modelled * 1e3:.2f}ms "
             f"(monolithic {self.t_monolithic * 1e3:.2f}ms)"
             + (" lossy" if self.lossy else "")
         )
+        if self.overlapped:
+            msg += (
+                f" overlap={self.overlap} step={self.t_step * 1e3:.2f}ms "
+                f"(serial {self.t_step_serial * 1e3:.2f}ms, "
+                f"exposed {self.t_exposed * 1e3:.2f}ms)"
+            )
+        return msg
+
+
+def _overlap_exposure(
+    stages, grad_bytes: float, n: int, compute_time: float, accum_steps: int
+) -> float:
+    """Modelled comm seconds escaping the backward shadow for the overlapped
+    trainer: ``accum_steps`` partial-mean syncs of the full gradient, sync k
+    hidden under microbatch k+1's backward, the last sync overlapping its
+    own (final) backward through reverse-layer bucket release.
+
+    (This is the accumulation-aware view; ``bucketing.choose_overlap``
+    prices the SINGLE-sync analogue for standalone callers.  Both build on
+    ``overlapped_time_affine`` -- change the exposure model there, not
+    here.)
+
+    Max of two exact bounds, each affine in the stage curves:
+
+    * bucket-release bound: the final sync's comm that escapes its
+      ``compute_time / accum_steps`` window (``overlapped_time_affine``);
+    * work conservation: the network must move ``accum_steps`` syncs but
+      only ``accum_steps - 1`` backward windows can shadow them.
+    """
+    w = compute_time / accum_steps
+    t_pipe = bucketing.pipelined_time_affine(stages, grad_bytes, n)
+    last = bucketing.overlapped_time_affine(stages, grad_bytes, n, w) - w
+    conserve = accum_steps * t_pipe - (accum_steps - 1) * w
+    return max(last, conserve)
 
 
 def plan_pod_sync(
@@ -491,8 +593,12 @@ def plan_pod_sync(
     topo=None,
     min_bucket_bytes: int = bucketing.MIN_BUCKET_BYTES,
     max_chunks: int = bucketing.MAX_CHUNKS,
+    compute_time: float = 0.0,
+    accum_steps: int = 1,
+    overlap: str | int = "off",
+    formats=None,
 ) -> PodSyncDecision:
-    """Price every (wire format, bucket count) candidate; return the best.
+    """Price every (wire format, bucket count, overlap depth) candidate.
 
     Formats are costed on the (optionally calibrated) pod topology via
     ``pod_sync_builder``; each format's bucket count is swept under the
@@ -504,54 +610,121 @@ def plan_pod_sync(
     formats are then ranked AT that chunking, so a forced size cannot ride
     on another size's format choice); ``topo`` overrides the topology
     entirely (benchmarks pass the probe-mesh shape).
+
+    ``overlap`` prices compute/comm overlap against the measured step
+    compute time: 'off' keeps the serial backward -> sync -> update step;
+    'auto' additionally prices the overlapped trainer (one partial-mean
+    sync per microbatch riding the next microbatch's backward; see
+    ``_overlap_exposure``) and picks whichever modelled STEP time wins, so
+    its choice is never modelled slower than the serial plan; an int forces
+    that overlap depth (buckets per sync).  Overlap needs ``accum_steps >
+    1`` -- the trainer has no second backward to hide under otherwise --
+    and ``compute_time`` (seconds of per-step forward+backward) to size the
+    shadow.
     """
     if n_pods <= 1:
         return PodSyncDecision("flat", 0, 1, 0.0, 0.0, False)
     if topo is None:
         topo = pod_sync_topology(n_pods, calibration, topology=topology)
-    formats = [
-        f for f in POD_SYNC_FORMATS
-        if lossy_ok or f not in LOSSY_POD_SYNC_FORMATS
-    ]
+    if formats is None:
+        formats = [
+            f for f in POD_SYNC_FORMATS
+            if lossy_ok or f not in LOSSY_POD_SYNC_FORMATS
+        ]
     forced_chunks = (
         max(1, math.ceil(grad_bytes / bucket_bytes)) if bucket_bytes else None
     )
+    # int <= 0 means "no overlap", same as 'off'
+    overlap_on = accum_steps > 1 and (
+        overlap == "auto" or (isinstance(overlap, int) and overlap > 0)
+    )
+    forced_overlap = (
+        overlap if isinstance(overlap, int) and overlap > 0 else None
+    )
+    if isinstance(overlap, int) and overlap > 0 and accum_steps <= 1:
+        warnings.warn(
+            f"overlap={overlap} ignored: compute/comm overlap needs "
+            "accum_steps > 1 (no second backward to hide the sync under)",
+            RuntimeWarning,
+            stacklevel=2,
+        )
     best: PodSyncDecision | None = None
     for fmt in formats:
         build = pod_sync_builder(topo, fmt)
+        stages = bucketing.stage_affine(build)
+        lossy = fmt in LOSSY_POD_SYNC_FORMATS
+        t_mono = bucketing.pipelined_time_affine(stages, grad_bytes, 1)
         if forced_chunks is not None:
-            stages = bucketing.stage_affine(build)
-            cand = PodSyncDecision(
-                fmt=fmt,
-                bucket_bytes=int(bucket_bytes),
-                n_chunks=forced_chunks,
-                t_modelled=bucketing.pipelined_time_affine(
-                    stages, grad_bytes, forced_chunks
-                ),
-                t_monolithic=bucketing.pipelined_time_affine(
-                    stages, grad_bytes, 1
-                ),
-                lossy=fmt in LOSSY_POD_SYNC_FORMATS,
+            serial_n = forced_chunks
+            t_serial_sync = bucketing.pipelined_time_affine(
+                stages, grad_bytes, serial_n
             )
         else:
             choice = bucketing.choose_n_chunks(
-                build,
-                grad_bytes,
+                build, grad_bytes,
                 min_bucket_bytes=min_bucket_bytes,
                 max_chunks=max_chunks if bucketed else 1,
+                stages=stages,
             )
-            cand = PodSyncDecision(
-                fmt=fmt,
-                bucket_bytes=(
-                    int(choice.bucket_bytes) if choice.n_chunks > 1 else 0
-                ),
-                n_chunks=choice.n_chunks,
-                t_modelled=choice.t_pipelined,
-                t_monolithic=choice.t_monolithic,
-                lossy=fmt in LOSSY_POD_SYNC_FORMATS,
+            serial_n, t_serial_sync = choice.n_chunks, choice.t_pipelined
+        t_step_serial = compute_time + t_serial_sync
+        cands = []
+        if forced_overlap is None or not overlap_on:
+            cands.append(
+                PodSyncDecision(
+                    fmt=fmt,
+                    bucket_bytes=(
+                        int(bucket_bytes)
+                        if forced_chunks is not None
+                        else int(math.ceil(grad_bytes / serial_n))
+                        if serial_n > 1
+                        else 0
+                    ),
+                    n_chunks=serial_n,
+                    t_modelled=t_serial_sync,
+                    t_monolithic=t_mono,
+                    lossy=lossy,
+                    compute_time=compute_time,
+                    accum_steps=accum_steps,
+                    t_step=t_step_serial,
+                    t_step_serial=t_step_serial,
+                )
             )
-        if best is None or cand.t_modelled < best.t_modelled:
-            best = cand
+        if overlap_on:
+            if forced_overlap is not None:
+                ns = [max(1, forced_overlap)]
+            elif forced_chunks is not None:
+                ns = [forced_chunks]
+            else:
+                ns = bucketing.chunk_counts(
+                    grad_bytes, min_bucket_bytes, max_chunks
+                )
+            for n in ns:
+                exposed = _overlap_exposure(
+                    stages, grad_bytes, n, compute_time, accum_steps
+                )
+                cands.append(
+                    PodSyncDecision(
+                        fmt=fmt,
+                        bucket_bytes=int(math.ceil(grad_bytes / n)),
+                        n_chunks=n,
+                        t_modelled=bucketing.pipelined_time_affine(
+                            stages, grad_bytes, n
+                        ),
+                        t_monolithic=t_mono,
+                        lossy=lossy,
+                        overlap=n,
+                        compute_time=compute_time,
+                        accum_steps=accum_steps,
+                        t_step=compute_time + exposed,
+                        t_step_serial=t_step_serial,
+                    )
+                )
+        for cand in cands:
+            # strict <: ties prefer the earlier candidate (serial before
+            # overlapped within a format, formats in POD_SYNC_FORMATS order)
+            if best is None or cand.t_step < best.t_step:
+                best = cand
     return best
 
 
@@ -581,9 +754,11 @@ __all__ = [
     "POD_SYNC_FORMATS",
     "LOSSY_POD_SYNC_FORMATS",
     "PodSyncDecision",
+    "bucket_combiner",
     "plan_pod_sync",
     "pod_combine",
     "pod_combine_flat",
+    "pod_combine_microbatched",
     "pod_combine_q8",
     "pod_sync_builder",
     "pod_sync_grads",

@@ -54,17 +54,22 @@ def validate(sched: Schedule, strict_egress: bool = False) -> None:
     for rix, rnd in enumerate(sched.rounds):
         src_used: dict[int, int] = defaultdict(int)
         dst_used: dict[int, int] = defaultdict(int)
-        mach_out: dict[int, int] = defaultdict(int)
-        mach_in: dict[int, int] = defaultdict(int)
+        # Rule 3, per tier: (level, group, direction) -> concurrent link use.
+        # Only tiers with a finite ``degrees[level]`` are guarded; with the
+        # default degrees vector that is exactly the outermost (machine)
+        # boundary of the classic model.
+        tier_out: dict[tuple[int, int], int] = defaultdict(int)
+        tier_in: dict[tuple[int, int], int] = defaultdict(int)
         for op in rnd.ops:
             if isinstance(op, Send):
                 if op.src == op.dst:
                     raise ScheduleError(f"round {rix}: self-send at {op.src}")
                 src_used[op.src] += 1
                 dst_used[op.dst] += 1
-                if not topo.co_located(op.src, op.dst):
-                    mach_out[topo.machine_of(op.src)] += 1
-                    mach_in[topo.machine_of(op.dst)] += 1
+                t = topo.tier_index(op.src, op.dst)
+                if topo.tier_degree(t):
+                    tier_out[(t, topo.group_of(op.src, t))] += 1
+                    tier_in[(t, topo.group_of(op.dst, t))] += 1
             elif isinstance(op, LocalWrite):
                 src_used[op.writer] += 1
                 for r in op.readers:
@@ -85,17 +90,17 @@ def validate(sched: Schedule, strict_egress: bool = False) -> None:
             if n > 1:
                 raise ScheduleError(f"round {rix}: proc {p} receives {n} ops")
         if strict_egress:
-            for mach, n in mach_out.items():
-                if n > topo.degree:
+            for (t, g), n in tier_out.items():
+                if n > topo.tier_degree(t):
                     raise ScheduleError(
-                        f"round {rix}: machine {mach} uses {n} egress links "
-                        f"(degree {topo.degree})"
+                        f"round {rix}: tier-{t} group {g} uses {n} egress "
+                        f"links (degree {topo.tier_degree(t)})"
                     )
-            for mach, n in mach_in.items():
-                if n > topo.degree:
+            for (t, g), n in tier_in.items():
+                if n > topo.tier_degree(t):
                     raise ScheduleError(
-                        f"round {rix}: machine {mach} uses {n} ingress links "
-                        f"(degree {topo.degree})"
+                        f"round {rix}: tier-{t} group {g} uses {n} ingress "
+                        f"links (degree {topo.tier_degree(t)})"
                     )
 
 
@@ -111,21 +116,30 @@ def _op_cost(topo: ClusterTopology, op) -> float:
 
 
 def _round_shape(topo: ClusterTopology, rnd: Round) -> tuple[int, bool, bool]:
-    """(NIC serialization factor, has_global, has_write) for one round."""
-    mach_out: dict[int, int] = defaultdict(int)
-    mach_in: dict[int, int] = defaultdict(int)
+    """(link serialization factor, has_global, has_write) for one round.
+
+    The serialization factor generalizes the paper's shared-NIC rule per
+    tier: a level-``l`` group's tier-``l`` transfers share its
+    ``degrees[l]`` links (0 = unlimited).  With the default degrees vector
+    only the outermost (machine) boundary is guarded -- the classic Rule 3.
+    """
+    tier_out: dict[tuple[int, int], int] = defaultdict(int)
+    tier_in: dict[tuple[int, int], int] = defaultdict(int)
     has_global = False
     has_write = False
     for op in rnd.ops:
-        if isinstance(op, Send) and not topo.co_located(op.src, op.dst):
-            has_global = True
-            mach_out[topo.machine_of(op.src)] += 1
-            mach_in[topo.machine_of(op.dst)] += 1
+        if isinstance(op, Send):
+            t = topo.tier_index(op.src, op.dst)
+            if t == topo.n_tiers - 1:
+                has_global = True
+            if topo.tier_degree(t):
+                tier_out[(t, topo.group_of(op.src, t))] += 1
+                tier_in[(t, topo.group_of(op.dst, t))] += 1
         elif isinstance(op, LocalWrite):
             has_write = True
     serial = 1
-    for n in list(mach_out.values()) + list(mach_in.values()):
-        serial = max(serial, math.ceil(n / topo.degree))
+    for (t, _), n in list(tier_out.items()) + list(tier_in.items()):
+        serial = max(serial, math.ceil(n / topo.tier_degree(t)))
     return serial, has_global, has_write
 
 
@@ -246,6 +260,96 @@ def simulate_pipelined(build, m: float, n_chunks: int,
 
 
 # ----------------------------------------------------------------------
+# Compute-overlapped (backward-shadow) cost view
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OverlappedCost:
+    """Modelled time for a bucketed sync overlapped with backward compute.
+
+    The gradient's ``n_chunks`` buckets are laid out in reverse layer order,
+    so backward releases bucket k at ``(k + 1) * compute_time / n_chunks``
+    (the last layers' gradients come first); each released bucket runs the
+    pipelined comm stages.  Only the comm that escapes the compute shadow is
+    charged on top of ``compute_time``.
+
+    compute_time:  the backward/accumulation window shadowing the sync.
+    t_chunk:       one bucket through every comm stage.
+    t_comm:        the pipelined comm-only time (``simulate_pipelined``'s
+                   bound for the same chunking; what a post-backward sync
+                   would take).
+    t_serial:      ``compute_time + t_comm`` -- backward, then sync.
+    t_overlapped:  completion with the sync riding the backward shadow.
+    t_exposed:     ``t_overlapped - compute_time``: comm left on the
+                   critical path.
+    """
+
+    n_chunks: int
+    chunk_bytes: float
+    compute_time: float
+    t_chunk: float
+    t_comm: float
+    t_serial: float
+    t_overlapped: float
+    stages: tuple
+
+    @property
+    def t_exposed(self) -> float:
+        return self.t_overlapped - self.compute_time
+
+    @property
+    def speedup_vs_serial(self) -> float:
+        return self.t_serial / self.t_overlapped if self.t_overlapped else 1.0
+
+
+def simulate_overlapped(build, m: float, n_chunks: int, compute_time: float,
+                        check: bool = True) -> OverlappedCost:
+    """Price a bucketed sync whose buckets are released by backward compute.
+
+    Extends ``simulate_pipelined`` with a compute-overlap term: the m-byte
+    gradient is cut into ``n_chunks`` buckets (reverse layer order), bucket
+    k becoming available at ``r_k = (k + 1) * compute_time / n_chunks``
+    while earlier buckets' comm is already in flight.  With per-chunk stage
+    times t_s (bottleneck b = max_s t_s) this is a flow shop of identical
+    jobs with release dates, whose exact completion is
+
+        T = sum_s t_s + max(compute_time,
+                            compute_time / n_chunks + (n_chunks - 1) * b)
+
+    (the max runs over which bucket's release anchors the critical path:
+    the last bucket when compute dominates, the first when comm does).
+    ``compute_time = 0`` degenerates to ``simulate_pipelined`` exactly, and
+    for ``compute_time > 0, n_chunks > 1`` the bound is strictly below the
+    serial ``compute_time + t_pipelined``: overlapping must pay off.
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    if compute_time < 0:
+        raise ValueError(f"compute_time must be >= 0, got {compute_time}")
+    chunk_m = m / n_chunks
+    sched = build(chunk_m)
+    if check:
+        validate(sched)
+    stages = pipeline_stages(sched)
+    t_chunk = sum(t for _, t in stages)
+    bottleneck = max((t for _, t in stages), default=0.0)
+    t_comm = t_chunk + (n_chunks - 1) * bottleneck
+    t_over = t_chunk + max(
+        compute_time, compute_time / n_chunks + (n_chunks - 1) * bottleneck
+    )
+    return OverlappedCost(
+        n_chunks=n_chunks,
+        chunk_bytes=chunk_m,
+        compute_time=compute_time,
+        t_chunk=t_chunk,
+        t_comm=t_comm,
+        t_serial=compute_time + t_comm,
+        t_overlapped=t_over,
+        stages=tuple(stages),
+    )
+
+
+# ----------------------------------------------------------------------
 # Linear cost decomposition (the calibration interface)
 # ----------------------------------------------------------------------
 
@@ -330,11 +434,21 @@ def pipelined_cost_features(
     Gauss-Newton re-linearization applies to pipelined schedules unchanged.
     """
     sched = build(m / n_chunks)
-    topo = sched.topo
     if params is None:
-        params = topo.param_vector()
+        params = sched.topo.param_vector()
+    feats, _, bottleneck_row, _ = _stage_row_summary(sched, params)
+    if bottleneck_row is not None:
+        for i in range(len(feats)):
+            feats[i] += (n_chunks - 1) * bottleneck_row[i]
+    return tuple(feats)
+
+
+def _stage_row_summary(sched: Schedule, params):
+    """(sum-of-stage-rows, t_chunk, bottleneck_row, bottleneck_t) for one
+    chunk schedule, with stages grouped exactly like ``pipeline_stages`` and
+    each row a ``cost_features``-style vector at the linearization point."""
+    topo = sched.topo
     width = n_cost_features(topo)
-    # Stage rows, grouped exactly like pipeline_stages.
     stage_rows: list[tuple[str, list]] = []
     for rnd in sched.rounds:
         if not rnd.ops:
@@ -348,17 +462,46 @@ def pipelined_cost_features(
         else:
             stage_rows.append((kind, row))
     feats = [0.0] * width
+    t_chunk = 0.0
     bottleneck_row, bottleneck_t = None, -1.0
     for _, row in stage_rows:
         t = sum(f * p for f, p in zip(row, params))
+        t_chunk += t
         if t > bottleneck_t:
             bottleneck_row, bottleneck_t = row, t
         for i in range(width):
             feats[i] += row[i]
-    if bottleneck_row is not None:
-        for i in range(width):
-            feats[i] += (n_chunks - 1) * bottleneck_row[i]
-    return tuple(feats)
+    return feats, t_chunk, bottleneck_row, bottleneck_t
+
+
+def overlapped_cost_features(
+    build, m: float, n_chunks: int, compute_time: float,
+    params: tuple | None = None,
+) -> tuple:
+    """``cost_features`` analogue for ``simulate_overlapped``.
+
+    Returns ``(f, c0)`` with ``dot(f, params) + c0 ==
+    simulate_overlapped(...).t_overlapped`` at the linearization point:
+    ``compute_time`` is a *measured* constant, not a fitted parameter, so it
+    lands in the affine offset ``c0`` while the comm term stays exactly
+    parameter-linear -- which branch of the overlap max dominates is chosen
+    at the linearization point, mirroring the round model's argmax.
+    Calibration's Gauss-Newton re-linearization therefore applies to
+    overlapped schedules unchanged.
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    sched = build(m / n_chunks)
+    if params is None:
+        params = sched.topo.param_vector()
+    feats, _, bottleneck_row, bottleneck_t = _stage_row_summary(sched, params)
+    width = len(feats)
+    b = max(bottleneck_t, 0.0)
+    if compute_time >= compute_time / n_chunks + (n_chunks - 1) * b:
+        return tuple(feats), compute_time
+    for i in range(width):
+        feats[i] += (n_chunks - 1) * bottleneck_row[i]
+    return tuple(feats), compute_time / n_chunks
 
 
 def affine_time(build, m1: float = 1024.0,
@@ -391,12 +534,13 @@ def simulate_async(sched: Schedule, check: bool = True) -> float:
         validate(sched)
     topo = sched.topo
     P = topo.n_procs
-    d = topo.degree
     src_free = [0.0] * P
     dst_free = [0.0] * P
-    # per machine: d egress and d ingress links, each a next-free time
-    out_links = [[0.0] * d for _ in range(topo.n_machines)]
-    in_links = [[0.0] * d for _ in range(topo.n_machines)]
+    # Rule-3 link pools, per (tier, group, direction): ``degrees[l]`` links,
+    # each a next-free time.  Tiers with degree 0 (unlimited) have no pool;
+    # by default that leaves exactly the classic per-machine NIC pools.
+    out_links: dict[tuple[int, int], list] = {}
+    in_links: dict[tuple[int, int], list] = {}
     known: dict[tuple[int, object], float] = {}
 
     def chunk_ready(proc: int, payload) -> float:
@@ -424,22 +568,27 @@ def simulate_async(sched: Schedule, check: bool = True) -> float:
             else:
                 tix = topo.tier_index(op.src, op.dst)
                 tier = topo.tiers[tix]
-                # only the outermost (machine-boundary) tier is guarded by
-                # the shared ``degree`` egress/ingress links (Rule 3)
-                outermost = tix == topo.n_tiers - 1
+                # tiers with a finite per-group link count are guarded by
+                # their shared egress/ingress pools (Rule 3, per tier; by
+                # default only the outermost machine boundary is finite)
+                d = topo.tier_degree(tix)
                 start = max(
                     chunk_ready(op.src, op.payload),
                     src_free[op.src],
                     dst_free[op.dst],
                 )
-                if outermost:
-                    mo = out_links[topo.machine_of(op.src)]
-                    mi = in_links[topo.machine_of(op.dst)]
+                if d:
+                    mo = out_links.setdefault(
+                        (tix, topo.group_of(op.src, tix)), [0.0] * d
+                    )
+                    mi = in_links.setdefault(
+                        (tix, topo.group_of(op.dst, tix)), [0.0] * d
+                    )
                     ko = min(range(d), key=lambda k: mo[k])
                     ki = min(range(d), key=lambda k: mi[k])
                     start = max(start, mo[ko], mi[ki])
                 end = start + tier.transfer_time(op.nbytes) + topo.assemble_cost
-                if outermost:
+                if d:
                     mo[ko] = end
                     mi[ki] = end
                 src_free[op.src] = end
@@ -520,6 +669,45 @@ def check_semantics(sched: Schedule) -> None:
         raise ScheduleError(f"unknown collective {sched.collective}")
 
 
+def _tier_send_bytes(sched: Schedule) -> list:
+    """Total Send bytes crossing each tier boundary, indexed by tier level."""
+    by = [0.0] * sched.topo.n_tiers
+    for op in sched.all_ops():
+        if isinstance(op, Send):
+            by[sched.topo.tier_index(op.src, op.dst)] += op.nbytes
+    return by
+
+
+def _check_tier_volumes(
+    sched: Schedule, what: str, factor: float, outer_factor: float
+) -> None:
+    """Per-tier bandwidth lower bounds for reduction collectives.
+
+    At tier ``l`` every level-(l+1) group must move at least
+    ``factor * m * (fanout[l] - 1)`` bytes across its level-``l`` subgroup
+    boundaries (each subgroup can compress its members' contributions into
+    one partially-reduced m-byte vector, but combining f subgroups still
+    needs f - 1 vector crossings; reduce-scatter-style exchanges meet the
+    same total).  ``outer_factor`` applies at the outermost tier (2 for a
+    full all-reduce: the reduced result must also fan back in).  Tier 0 is
+    covered separately by the payload-level ``_check_local_rs_phase``.
+    """
+    topo = sched.topo
+    m = sched.nbytes
+    by = _tier_send_bytes(sched)
+    for level in range(1, topo.n_tiers):
+        f = topo.fanout[level]
+        if f <= 1:
+            continue
+        groups = topo.n_procs // topo.group_size(level + 1)
+        fac = outer_factor if level == topo.n_tiers - 1 else factor
+        need = groups * fac * m * (f - 1) * 0.999
+        if by[level] < need:
+            raise ScheduleError(
+                f"{what}: tier-{level} bytes {by[level]} < required {need}"
+            )
+
+
 def _check_local_rs_phase(sched: Schedule, know, what: str) -> None:
     """Phase-1 completeness of the innermost (tier-0) ring reduce-scatter:
     within every shared-memory group, proc at ring position i must have
@@ -559,14 +747,9 @@ def _check_reduce_scatter(sched: Schedule, know) -> None:
     else:
         # Phase-1 local reduce-scatter completeness via real payloads ...
         _check_local_rs_phase(sched, know, "reduce_scatter")
-        # ... plus the inter-machine volume lower bound for the outer phases.
-        if M > 1:
-            gbytes = sched.total_global_bytes()
-            need = M * m * (M - 1) / M * 0.999
-            if gbytes < need:
-                raise ScheduleError(
-                    f"reduce_scatter: global bytes {gbytes} < required {need}"
-                )
+        # ... plus the per-tier volume lower bounds for the outer phases
+        # (every boundary, not just the machine seam).
+        _check_tier_volumes(sched, "reduce_scatter", 1.0, 1.0)
 
 
 def _check_allreduce(sched: Schedule, know) -> None:
@@ -582,21 +765,17 @@ def _check_allreduce(sched: Schedule, know) -> None:
                     )
     elif sched.name == "allreduce_hier_par_bw":
         # Phase-1 local reduce-scatter completeness (real payloads), plus
-        # inter-machine volume lower bound for the synthetic phases.
-        M, m = topo.n_machines, sched.nbytes
+        # per-tier volume lower bounds for the synthetic phases -- the
+        # tier-recursive RS+AG must move 2m(f-1) per group at EVERY tier.
         _check_local_rs_phase(sched, know, "all_reduce bw")
-        if M > 1:
-            gbytes = sched.total_global_bytes()
-            need = M * 2 * m * (M - 1) / M * 0.999
-            if gbytes < need:
-                raise ScheduleError(
-                    f"all_reduce bw: global bytes {gbytes} < required {need}"
-                )
+        _check_tier_volumes(sched, "all_reduce bw", 2.0, 2.0)
     else:
         # hierarchical: check (a) local reduce completeness via real payloads,
-        # (b) inter-machine byte volume >= ring-optimal 2*m*(M-1)/M per
-        # machine boundary pair, (c) every proc touched by a final publish.
-        M, m = topo.n_machines, sched.nbytes
+        # (b) per-tier byte volume bounds -- ring-optimal 2*m*(M-1)/M per
+        # machine at the outermost boundary, one m-byte vector crossing per
+        # subgroup merge at the mid tiers -- (c) every proc touched by a
+        # final publish.
+        M = topo.n_machines
         for mach in range(M):
             head = next(iter(topo.procs_of(mach)))
             lack = [q for q in topo.procs_of(mach) if ("ar", q) not in know[head]]
@@ -604,13 +783,7 @@ def _check_allreduce(sched: Schedule, know) -> None:
                 raise ScheduleError(
                     f"all_reduce: machine {mach} local reduce missing {lack}"
                 )
-        if M > 1:
-            gbytes = sched.total_global_bytes()
-            need = M * 2 * m * (M - 1) / M * 0.999  # all machines, RS+AG
-            if gbytes < need:
-                raise ScheduleError(
-                    f"all_reduce: global bytes {gbytes} < required {need}"
-                )
+        _check_tier_volumes(sched, "all_reduce", 1.0, 2.0)
 
 
 def _check_alltoall(sched: Schedule) -> None:

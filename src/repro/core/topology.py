@@ -63,6 +63,13 @@ class ClusterTopology:
     degree:        external links usable *simultaneously* by one machine
                    (paper Rule 3; TPU: host NICs per pod).  Applies to the
                    outermost tier.
+    degrees:       per-tier Rule-3 link counts, aligned with ``tiers``:
+                   ``degrees[l]`` is the number of tier-``l`` links a
+                   level-``l`` group can drive simultaneously (0 = unlimited,
+                   the classic assumption for the inner shared-memory / ICI
+                   tiers).  Defaults to unlimited everywhere except the
+                   outermost tier, which carries ``degree`` -- so two-tier
+                   behaviour is exactly the paper's Rule 3.
     write_cost:    constant time for a shared-memory write visible to any
                    subset of tier-0 co-located processes (Rule 1, "write").
     assemble_cost: per-message assembly time charged when a process's buffer
@@ -79,6 +86,7 @@ class ClusterTopology:
     degree: int
     write_cost: float
     assemble_cost: float
+    degrees: tuple
 
     def __init__(
         self,
@@ -92,10 +100,13 @@ class ClusterTopology:
         *,
         tiers: tuple | None = None,
         fanout: tuple | None = None,
+        degrees: tuple | None = None,
     ) -> None:
         # degree and write_cost stay REQUIRED (as in the pre-tier-list
         # dataclass): a defaulted write_cost of 0 would silently model
         # Rule-1 shared-memory writes as free and skew strategy rankings.
+        if degree is None and degrees is not None:
+            degree = int(degrees[-1])
         if degree is None:
             raise ValueError("degree is required")
         if write_cost is None:
@@ -120,11 +131,16 @@ class ClusterTopology:
                 )
             tiers = (local, global_)
             fanout = (int(procs_per_machine), int(n_machines))
+        if degrees is None:
+            degrees = (0,) * (len(tiers) - 1) + (int(degree),)
+        else:
+            degrees = tuple(int(d) for d in degrees)
         object.__setattr__(self, "tiers", tiers)
         object.__setattr__(self, "fanout", fanout)
         object.__setattr__(self, "degree", int(degree))
         object.__setattr__(self, "write_cost", float(write_cost))
         object.__setattr__(self, "assemble_cost", float(assemble_cost))
+        object.__setattr__(self, "degrees", degrees)
         self._check()
 
     def _check(self) -> None:
@@ -139,6 +155,21 @@ class ClusterTopology:
             raise ValueError(f"fanout entries must be >= 1, got {self.fanout}")
         if self.degree < 1:
             raise ValueError("degree must be >= 1")
+        if len(self.degrees) != len(self.tiers):
+            raise ValueError(
+                f"degrees ({len(self.degrees)}) and tiers "
+                f"({len(self.tiers)}) must have the same length"
+            )
+        if any(d < 0 for d in self.degrees):
+            raise ValueError(
+                f"degrees entries must be >= 0 (0 = unlimited), got "
+                f"{self.degrees}"
+            )
+        if self.degrees[-1] != self.degree:
+            raise ValueError(
+                f"degrees[-1] ({self.degrees[-1]}) must equal the outermost "
+                f"degree ({self.degree})"
+            )
         for inner, outer in zip(self.tiers, self.tiers[1:]):
             if inner.alpha > outer.alpha or inner.beta > outer.beta:
                 # Rule 2 generalized: inner edges are short, outer edges long.
@@ -211,6 +242,11 @@ class ClusterTopology:
     def tier(self, p: int, q: int) -> LinkTier:
         return self.tiers[self.tier_index(p, q)]
 
+    def tier_degree(self, level: int) -> int:
+        """Rule-3 parallel links a level-``level`` group drives on tier
+        ``level`` (0 = unlimited; the outermost entry is ``degree``)."""
+        return self.degrees[level]
+
     # ------------------------------------------------------------------
     # two-tier view (machine = outermost group) -- back-compat surface
     # ------------------------------------------------------------------
@@ -275,6 +311,7 @@ class ClusterTopology:
         which are mapped onto the tier structure."""
         tiers = list(kw.pop("tiers", self.tiers))
         fanout = list(kw.pop("fanout", self.fanout))
+        degrees = kw.pop("degrees", None)
         if "local" in kw:
             tiers[0] = kw.pop("local")
         if "global_" in kw:
@@ -291,9 +328,14 @@ class ClusterTopology:
                     f"{len(fanout)}-tier topology (inner fanout "
                     f"{tuple(fanout[:-1])}); pass fanout= instead"
                 )
-        degree = kw.pop("degree", self.degree)
+        degree = kw.pop(
+            "degree", int(degrees[-1]) if degrees is not None else self.degree
+        )
         write_cost = kw.pop("write_cost", self.write_cost)
         assemble_cost = kw.pop("assemble_cost", self.assemble_cost)
+        if degrees is None and len(tiers) == self.n_tiers:
+            # keep any per-tier inner degrees; the outermost tracks degree
+            degrees = self.degrees[:-1] + (int(degree),)
         if kw:
             raise TypeError(f"unknown ClusterTopology fields {sorted(kw)}")
         return ClusterTopology(
@@ -302,6 +344,7 @@ class ClusterTopology:
             degree=degree,
             write_cost=write_cost,
             assemble_cost=assemble_cost,
+            degrees=tuple(degrees) if degrees is not None else None,
         )
 
     def with_shape(self, fanout, degree: int | None = None) -> "ClusterTopology":
@@ -316,12 +359,14 @@ class ClusterTopology:
                 f"shape {fanout} has more levels than the {self.n_tiers} "
                 "link tiers"
             )
+        degree = self.degree if degree is None else int(degree)
         return ClusterTopology(
             tiers=self.tiers[: len(fanout)],
             fanout=fanout,
-            degree=self.degree if degree is None else degree,
+            degree=degree,
             write_cost=self.write_cost,
             assemble_cost=self.assemble_cost,
+            degrees=self.degrees[: len(fanout) - 1] + (degree,),
         )
 
     def stage(self, level: int) -> "ClusterTopology":

@@ -32,6 +32,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
              force: bool = False, pod_mode: str | None = None,
              pod_sync: str = "flat", accum=None, remat=None,
              policy: str = "default", topology: str = "v5e",
+             overlap="off", compute_time: float = 0.0,
              tag: str = "") -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
@@ -65,6 +66,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: Path,
                 kw["policy"] = policy
             if topology != "v5e":
                 kw["topology"] = topology
+            if overlap != "off":
+                kw["overlap"] = overlap
+                kw["compute_time"] = compute_time
         cell = specs.build_cell(cfg, shape, mesh, **kw)
         rec["meta"] = cell.meta
         # jax.set_mesh only exists on newer jax; Mesh is itself a context
@@ -149,6 +153,12 @@ def main() -> None:
     ap.add_argument("--policy", default="default", choices=["default", "dp256"])
     ap.add_argument("--accum", type=int, default=None)
     ap.add_argument("--remat", default=None)
+    ap.add_argument("--overlap", default="off",
+                    help="compute/comm overlap for manual-mode train cells "
+                         "('off' | 'auto' | int overlap depth)")
+    ap.add_argument("--compute-time", type=float, default=0.0,
+                    help="measured step compute seconds for the overlap "
+                         "planner (0 = roofline estimate)")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
 
@@ -172,6 +182,8 @@ def main() -> None:
                        pod_mode=args.pod_mode, pod_sync=args.pod_sync,
                        accum=args.accum, remat=args.remat,
                        policy=args.policy, topology=args.topology,
+                       overlap=args.overlap,
+                       compute_time=args.compute_time,
                        tag=args.tag)
         if rec.get("skipped"):
             n_skip += 1

@@ -109,7 +109,8 @@ def _pod_axes(mesh) -> str | None:
 
 def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
                pod_sync="flat", accum=None, remat=None,
-               policy="default", calibration="", topology="v5e") -> Cell:
+               policy="default", calibration="", topology="v5e",
+               overlap="off", compute_time=0.0) -> Cell:
     """Build one train cell.
 
     ``pod_sync`` may be any of ``comm.POD_SYNC_FORMATS`` ('flat', 'q8',
@@ -119,9 +120,13 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
     wins).  ``calibration`` optionally names a ``comm.calibrate`` JSON so
     that the decision uses parameters fitted on this hardware instead of
     presets; ``topology`` picks the preset hierarchy the planner models
-    ('v5e' two-tier, 'v5e_3tier' = ICI / host-PCIe / DCN).  The resolved
-    format and bucket size are recorded in ``meta['pod_sync']`` /
-    ``meta['bucket_bytes']``.
+    ('v5e' two-tier, 'v5e_3tier' = ICI / host-PCIe / DCN).  ``overlap``
+    ('off' | 'auto' | int) opts the cell into compute/comm overlap: the
+    overlap-aware cost model weighs interleaving per-microbatch syncs with
+    backward, sized by ``compute_time`` seconds of step compute (0 =
+    roofline estimate from the cell's token count).  The resolved format,
+    bucket size and overlap depth are recorded in ``meta['pod_sync']`` /
+    ``meta['bucket_bytes']`` / ``meta['overlap']``.
     """
     cfg = effective_cfg(cfg, shape)
     pol = make_policy_for(cfg, mesh, variant=policy)
@@ -129,6 +134,13 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
     if pod_mode is None:
         pod_mode = "manual" if pod_axis else "none"
     over = TRAIN_OVERRIDES.get(cfg.name, {})
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    overlap = train_steps.parse_overlap(overlap)
+    if overlap != "off" and compute_time <= 0:
+        compute_time = train_steps.estimate_compute_time(
+            cfg, shape.global_batch * shape.seq_len / max(n_pods, 1),
+            chips_per_pod=mesh.devices.size // max(n_pods, 1),
+        )
     tcfg = train_steps.TrainConfig(
         accum_steps=accum if accum is not None else over.get("accum_steps", 1),
         remat=remat if remat is not None else over.get("remat", "nothing"),
@@ -136,19 +148,22 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
         pod_sync=pod_sync,
         calibration=calibration,
         topology=topology,
+        overlap=overlap,
+        compute_time=compute_time,
         use_kernel=False,          # CPU dry-run lowers the jnp paths
         accum_dtype=over.get("accum_dtype", "float32"),
         model_in_batch=pol.fold_model,
     )
     # Resolve 'auto' once, here: the step is built from the concrete format
-    # + bucket size and meta records exactly what the compiled step runs.
-    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    # + bucket size + overlap depth and meta records exactly what the
+    # compiled step runs.
     decision = train_steps.plan_pod_sync(
         cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
     )
     pod_sync = decision.fmt
     tcfg = dataclasses.replace(
-        tcfg, pod_sync=pod_sync, bucket_bytes=decision.bucket_bytes
+        tcfg, pod_sync=pod_sync, bucket_bytes=decision.bucket_bytes,
+        overlap=decision.overlap,
     )
     ocfg = adamw.AdamWConfig(moment_dtype=over.get("moments", "float32"))
     step, bspecs = train_steps.make_train_step(cfg, tcfg, ocfg, mesh, pol)
@@ -168,7 +183,8 @@ def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, pod_mode=None,
     meta = dict(kind="train", accum=tcfg.accum_steps, remat=tcfg.remat,
                 pod_mode=pod_mode, pod_sync=pod_sync,
                 bucket_bytes=tcfg.bucket_bytes, policy=policy,
-                topology=topology)
+                topology=topology, overlap=decision.overlap,
+                compute_time=compute_time)
     return Cell(
         name=f"{cfg.name}:{shape.name}",
         fn=step,

@@ -51,6 +51,17 @@ def main() -> None:
     ap.add_argument("--calibration", default="",
                     help="comm.calibrate JSON fitted on this hardware; "
                          "consumed by --pod-sync auto")
+    ap.add_argument("--overlap", default="off",
+                    help="compute/comm overlap for the pod-tier sync "
+                         "('off' | 'auto' | an int overlap depth): 'auto' "
+                         "lets the overlap-aware cost model interleave "
+                         "per-microbatch gradient syncs with backward "
+                         "(needs --accum > 1)")
+    ap.add_argument("--compute-time", type=float, default=0.0,
+                    help="measured seconds of one step's forward+backward "
+                         "compute, sizing the overlap planner's backward "
+                         "shadow (0 = roofline estimate from the model "
+                         "FLOPs and batch shape)")
     ap.add_argument("--topology", default="v5e",
                     choices=sorted(TOPOLOGY_PRESETS),
                     help="topology preset the pod-sync planner models the "
@@ -98,23 +109,33 @@ def main() -> None:
             mesh = jax.make_mesh((n, 1), ("data", "model"))
 
     pol = rules.ShardingPolicy(shard_vocab=cfg.vocab_size % mesh.devices.shape[-1] == 0)
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    overlap = train_steps.parse_overlap(args.overlap)
+    compute_time = args.compute_time
+    if overlap != "off" and compute_time <= 0:
+        compute_time = train_steps.estimate_compute_time(
+            cfg, args.global_batch * args.seq / max(n_pods, 1),
+            chips_per_pod=mesh.devices.size // max(n_pods, 1),
+        )
     tcfg = train_steps.TrainConfig(
         accum_steps=args.accum, remat=args.remat, pod_sync=args.pod_sync,
         bucket_bytes=args.bucket_bytes,
         pod_mode="manual" if "pod" in mesh.axis_names else "none",
         use_kernel=False, calibration=args.calibration,
         topology=args.topology,
+        overlap=overlap, compute_time=compute_time,
     )
-    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
     decision = train_steps.plan_pod_sync(
         cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
     )
     tcfg = dataclasses.replace(
-        tcfg, pod_sync=decision.fmt, bucket_bytes=decision.bucket_bytes
+        tcfg, pod_sync=decision.fmt, bucket_bytes=decision.bucket_bytes,
+        overlap=decision.overlap,
     )
     if n_pods > 1:
         print(f"[train] {decision.describe()} "
-              f"(requested {args.pod_sync!r}, topology={args.topology}, "
+              f"(requested {args.pod_sync!r}, overlap={args.overlap!r}, "
+              f"topology={args.topology}, "
               f"calibration={args.calibration or '$REPRO_CALIBRATION/preset'})")
 
     ocfg = adamw.AdamWConfig(

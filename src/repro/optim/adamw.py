@@ -60,15 +60,27 @@ def global_norm(tree) -> jax.Array:
     )
 
 
-def clip_by_global_norm(grads, max_norm: float):
-    norm = global_norm(grads)
+def clip_by_global_norm(grads, max_norm: float, norm=None):
+    """Scale ``grads`` so their global norm is at most ``max_norm``.
+
+    ``norm`` optionally supplies a precomputed global norm (e.g.
+    accumulated per-bucket); the scale formula is shared either way.
+    """
+    if norm is None:
+        norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
     return jax.tree.map(lambda g: g * scale, grads), norm
 
 
-def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig):
-    """-> (new_params, new_state, metrics)."""
-    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig,
+                  *, grad_norm=None):
+    """-> (new_params, new_state, metrics).
+
+    ``grad_norm`` optionally supplies a precomputed global gradient norm
+    (e.g. accumulated per-bucket by ``apply_updates_bucketed``); the clip
+    scale is then derived from it instead of re-reducing the whole tree.
+    """
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip, norm=grad_norm)
     step = state.step + 1
     lr = schedule(cfg, step)
     b1, b2 = cfg.beta1, cfg.beta2
@@ -104,3 +116,28 @@ def apply_updates(params, grads, state: AdamWState, cfg: AdamWConfig):
         "grad_norm": gnorm,
         "lr": lr,
     }
+
+
+def apply_updates_bucketed(params, bucket_grads, layout, state: AdamWState,
+                           cfg: AdamWConfig):
+    """``apply_updates`` from synced gradient *buckets* (no full-tree
+    barrier): -> (new_params, new_state, metrics).
+
+    ``bucket_grads`` is the list of combined 1-D buckets the overlapped
+    pod sync produces (``repro.comm.bucketing`` layout).  The global-norm
+    clip -- the one genuinely cross-bucket dependency -- is accumulated as
+    per-bucket partial sums of squares, each computable the moment its
+    bucket's sync completes; every downstream per-leaf Adam update then
+    depends only on that scalar and the buckets overlapping the leaf, so
+    the compiler's scheduler can start bucket k's update math while bucket
+    k+1's sync is still in flight instead of waiting for a repacked tree.
+    """
+    from repro.comm import bucketing
+
+    sq = sum(
+        jnp.sum(jnp.square(b.astype(jnp.float32))) for b in bucket_grads
+    )
+    grads = bucketing.unpack_buckets(layout, bucket_grads, batch_shape=())
+    return apply_updates(
+        params, grads, state, cfg, grad_norm=jnp.sqrt(sq)
+    )

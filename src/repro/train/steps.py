@@ -74,6 +74,18 @@ class TrainConfig:
     # (repro.core.topology.TOPOLOGY_PRESETS): "v5e" = two-tier collapse,
     # "v5e_3tier" = the full ICI / host-PCIe / DCN hierarchy
     topology: str = "v5e"
+    # compute/comm overlap for the pod-tier sync (manual mode, accum_steps
+    # > 1): "off" = serial backward -> sync -> update; "auto" = let the
+    # overlap-aware cost model decide (per-microbatch partial-mean syncs
+    # riding the next microbatch's backward, reverse-layer buckets, and a
+    # per-bucket optimizer update); an int forces that overlap depth
+    # (buckets per sync)
+    overlap: str | int = "off"
+    # measured (or estimated -- see estimate_compute_time) seconds of one
+    # step's forward+backward compute; sizes the backward shadow the
+    # overlap planner hides comm under.  0 with overlap="auto" makes the
+    # model see no shadow and keep the serial plan.
+    compute_time: float = 0.0
 
     model_in_batch: bool = False   # fold_model policy: batch over model too
 
@@ -180,26 +192,90 @@ pod_combine_flat = comm.pod_combine_flat
 pod_combine_q8 = comm.pod_combine_q8
 
 
+def parse_overlap(value: "str | int") -> "str | int":
+    """Normalize a TrainConfig / CLI overlap knob: 'off' | 'auto' | int."""
+    if isinstance(value, int):
+        return value
+    if value in ("off", "auto"):
+        return value
+    try:
+        return int(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"overlap must be 'off', 'auto' or an int, got {value!r}"
+        ) from None
+
+
+def estimate_compute_time(
+    cfg: ModelConfig,
+    tokens_per_pod: float,
+    chips_per_pod: int | None = None,
+    mfu: float = 0.4,
+) -> float:
+    """Roofline estimate of one step's forward+backward seconds per pod.
+
+    6 * params * tokens FLOPs (fwd + bwd) over the pod's aggregate peak at
+    an assumed ``mfu``.  A stand-in for a measured step time: pass the real
+    number through ``TrainConfig.compute_time`` when you have one (e.g.
+    from a serial warm-up step) -- the overlap planner only uses it to size
+    the backward shadow, so ballpark accuracy moves the bucket count by at
+    most a power of two.
+    """
+    from repro.core.topology import V5E_PEAK_FLOPS
+
+    if chips_per_pod is None:
+        chips_per_pod = V5E_CHIPS_PER_POD
+    return (
+        6.0 * cfg.param_count() * tokens_per_pod
+        / (V5E_PEAK_FLOPS * chips_per_pod * mfu)
+    )
+
+
 def plan_pod_sync(
     cfg: ModelConfig,
     tcfg: "TrainConfig",
     n_pods: int,
     chips_per_pod: int | None = None,
 ) -> "comm.PodSyncDecision":
-    """Resolve the pod-tier sync decision (wire format + bucket size).
+    """Resolve the pod-tier sync decision (format + bucket size + overlap).
 
     Plans a DCN-tier gradient sync of this model's per-chip FSDP gradient
     shard (f32 bytes / chips in one pod -- pass ``chips_per_pod`` from the
     actual mesh; defaults to the production v5e pod size).  ``pod_sync=
     'auto'`` lets the pipelined cost model pick the wire format AND the
     bucket count (opting into the lossy q8 paths when compression wins);
-    an explicit format (and ``bucket_bytes``) short-circuits the planner.
+    an explicit format (and ``bucket_bytes``) pins those choices.  With
+    ``tcfg.overlap`` enabled the planner additionally weighs the
+    compute-overlapped step (per-microbatch partial-mean syncs hidden
+    under backward; ``tcfg.compute_time`` sizes the shadow) against the
+    serial one -- also for a pinned wire format.
     """
+    overlap = parse_overlap(tcfg.overlap)
+    manual = n_pods > 1 and tcfg.pod_mode == "manual"
+    if chips_per_pod is None:
+        chips_per_pod = V5E_CHIPS_PER_POD
+    grad_bytes = cfg.param_count() * 4.0 / chips_per_pod
+    overlap_wanted = manual and tcfg.accum_steps > 1 and (
+        overlap == "auto" or (isinstance(overlap, int) and overlap > 0)
+    )
     if tcfg.pod_sync != "auto":
         if tcfg.pod_sync not in comm.POD_SYNC_FORMATS:
             raise ValueError(
                 f"unknown pod_sync {tcfg.pod_sync!r}; expected one of "
                 f"{comm.POD_SYNC_FORMATS + ('auto',)}"
+            )
+        if overlap_wanted:
+            # pinned wire format, but overlap (and its bucket count) still
+            # priced by the cost model
+            return comm.plan_pod_sync(
+                n_pods, grad_bytes,
+                calibration=tcfg.calibration or None,
+                topology=tcfg.topology,
+                bucket_bytes=tcfg.bucket_bytes or None,
+                compute_time=tcfg.compute_time,
+                accum_steps=tcfg.accum_steps,
+                overlap=overlap,
+                formats=[tcfg.pod_sync],
             )
         return comm.PodSyncDecision(
             fmt=tcfg.pod_sync,
@@ -208,11 +284,8 @@ def plan_pod_sync(
             t_modelled=0.0, t_monolithic=0.0,
             lossy=tcfg.pod_sync in comm.LOSSY_POD_SYNC_FORMATS,
         )
-    if n_pods <= 1 or tcfg.pod_mode != "manual":
+    if not manual:
         return comm.PodSyncDecision("flat", 0, 1, 0.0, 0.0, False)
-    if chips_per_pod is None:
-        chips_per_pod = V5E_CHIPS_PER_POD
-    grad_bytes = cfg.param_count() * 4.0 / chips_per_pod
     # An explicit bucket_bytes pins the chunking: the planner then ranks
     # the wire formats AT that bucket size instead of sweeping it.
     return comm.plan_pod_sync(
@@ -220,6 +293,9 @@ def plan_pod_sync(
         calibration=tcfg.calibration or None,
         topology=tcfg.topology,
         bucket_bytes=tcfg.bucket_bytes or None,
+        compute_time=tcfg.compute_time,
+        accum_steps=tcfg.accum_steps,
+        overlap=overlap if overlap_wanted else "off",
     )
 
 
@@ -231,6 +307,107 @@ def resolve_pod_sync(
 ) -> str:
     """Back-compat wrapper: the chosen wire format only (see plan_pod_sync)."""
     return plan_pod_sync(cfg, tcfg, n_pods, chips_per_pod).fmt
+
+
+def _overlapped_manual_step(
+    loss_fn, params, opt_state, bp, axes, tcfg: TrainConfig, ocfg,
+    n_pods: int, gspecs, fmt: str, bucket_bytes: int,
+):
+    """Manual-mode step with compute/comm overlap (``sync.overlap > 0``).
+
+    Microbatch k's bucketed pod combine is issued while microbatch k+1's
+    backward runs: the lax.scan carries the PREVIOUS microbatch's per-pod
+    grads, so within one iteration the combine (of g_{k-1}) and the
+    backward (of microbatch k) are dataflow-independent and the compiler's
+    latency-hiding scheduler can run them concurrently.  The last
+    microbatch is peeled out of the scan so its backward overlaps the
+    second-to-last sync AND its own sync's reverse-layer buckets can chase
+    the backward's per-layer gradient production.  Partial means accumulate
+    per bucket in ``accum_dtype``; the optimizer update is applied from the
+    buckets (``adamw.apply_updates_bucketed``) -- no full-tree barrier, the
+    only cross-bucket dependency is the clip scalar.
+    """
+    K = tcfg.accum_steps
+    adt = jnp.dtype(tcfg.accum_dtype)
+    combiner = comm.bucket_combiner(fmt)
+
+    def msplit(v, pod_axis):
+        b_ax = pod_axis + 1
+        v = v.reshape(
+            *v.shape[:b_ax], K, v.shape[b_ax] // K, *v.shape[b_ax + 1:]
+        )
+        return jnp.moveaxis(v, b_ax, 0)
+
+    mbp = {
+        k: msplit(v, 1 if k == "positions" else 0) for k, v in bp.items()
+    }
+
+    def one_micro(b):
+        def pp(bb):
+            (loss, (ce, aux)), g = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, bb)
+            return loss, ce, aux, g
+
+        l, c, a, g = jax.vmap(pp, in_axes=(axes,))(b)
+        return l, c, a, _constrain_tree(g, gspecs)
+
+    l0, c0, a0, g0 = one_micro(jax.tree.map(lambda v: v[0], mbp))
+    # reverse-layer-order buckets: backward produces the LAST layers'
+    # grads first, so bucket 0 is ready earliest (simulate_overlapped's
+    # release order)
+    layout = comm.plan_buckets(
+        g0, bucket_bytes or (1 << 62), specs=gspecs, batch_ndim=1,
+        reverse=True,
+    )
+
+    def combine(g):
+        return tuple(
+            combiner(b, n_pods).astype(adt)
+            for b in comm.pack_buckets(layout, g)
+        )
+
+    zero = []
+    for g in layout.groups:
+        for b in range(g.n_buckets):
+            n = (
+                g.bucket_elems
+                if b < g.n_buckets - 1
+                else g.total_elems - (g.n_buckets - 1) * g.bucket_elems
+            )
+            zero.append(jnp.zeros((n,), adt))
+    zero = tuple(zero)
+    carry = (zero, g0, l0, c0, a0)
+    if K > 2:
+        rest = jax.tree.map(lambda v: v[1:K - 1], mbp)
+
+        def body(c_, b):
+            acc, gprev, ls, cs, as_ = c_
+            done = combine(gprev)          # sync of microbatch k-1 ...
+            l, c, a, g = one_micro(b)      # ... overlaps backward of k
+            acc = tuple(x + y for x, y in zip(acc, done))
+            return (acc, g, ls + l, cs + c, as_ + a), None
+
+        carry, _ = lax.scan(body, carry, rest)
+    # final microbatch, peeled: its backward overlaps the previous sync,
+    # and its own sync's buckets release as backward produces them
+    acc, gprev, ls, cs, as_ = carry
+    done = combine(gprev)
+    l, c, a, glast = one_micro(jax.tree.map(lambda v: v[K - 1], mbp))
+    acc = tuple(x + y for x, y in zip(acc, done))
+    acc = tuple(x + y for x, y in zip(acc, combine(glast)))
+    inv = 1.0 / K
+    gbuckets = [x * inv for x in acc]
+    new_params, new_opt, metrics = adamw.apply_updates_bucketed(
+        params, gbuckets, layout, opt_state, ocfg
+    )
+    metrics = dict(
+        metrics,
+        loss=jnp.mean(ls + l) * inv,
+        ce=jnp.mean(cs + c) * inv,
+        aux=jnp.mean(as_ + a) * inv,
+    )
+    return new_params, new_opt, metrics
 
 
 def make_train_step(
@@ -250,13 +427,15 @@ def make_train_step(
         cfg, tcfg, n_pods, chips_per_pod=mesh.devices.size // max(n_pods, 1)
     )
     pod_sync, bucket_bytes = sync.fmt, sync.bucket_bytes
+    overlapped = (
+        sync.overlap > 0
+        and tcfg.pod_mode == "manual"
+        and n_pods > 1
+        and tcfg.accum_steps > 1
+    )
 
     def step_body(params, opt_state, batch):
         if tcfg.pod_mode == "manual" and n_pods > 1:
-            def per_pod(b):
-                return _accum_grads(loss_fn, params, b, tcfg.accum_steps,
-                                    tcfg.accum_dtype)
-
             bp = {
                 k: (
                     v.reshape(v.shape[0], n_pods, v.shape[1] // n_pods, *v.shape[2:])
@@ -266,13 +445,23 @@ def make_train_step(
                 for k, v in batch.items()
             }
             axes = {k: (1 if k == "positions" else 0) for k in bp}
-            losses, ces, auxs, gpod = jax.vmap(per_pod, in_axes=(axes,))(bp)
             # pin per-pod grads to P('pod', <param spec>)
             pspecs = rules.param_specs(cfg, params, pol)
             gspecs = jax.tree.map(
                 lambda sp: P("pod", *sp), pspecs,
                 is_leaf=lambda x: isinstance(x, P),
             )
+            if overlapped:
+                return _overlapped_manual_step(
+                    loss_fn, params, opt_state, bp, axes, tcfg, ocfg,
+                    n_pods, gspecs, pod_sync, bucket_bytes,
+                )
+
+            def per_pod(b):
+                return _accum_grads(loss_fn, params, b, tcfg.accum_steps,
+                                    tcfg.accum_dtype)
+
+            losses, ces, auxs, gpod = jax.vmap(per_pod, in_axes=(axes,))(bp)
             gpod = _constrain_tree(gpod, gspecs)
             grads = comm.pod_combine(
                 gpod, n_pods, gspecs, fmt=pod_sync,

@@ -13,6 +13,8 @@ from repro import comm
 from repro.comm.bucketing import (
     MIN_BUCKET_BYTES,
     choose_n_chunks,
+    choose_overlap,
+    overlapped_time_affine,
     pipelined_time_affine,
     simulate_choice,
     stage_affine,
@@ -161,6 +163,101 @@ def test_context_plan_bucketed():
     assert pinned.t_pipelined <= pinned.t_monolithic
     rs = ctx.plan_bucketed("reduce_scatter", 4e9)
     assert rs.t_pipelined <= rs.t_monolithic
+
+
+def test_reverse_layer_layout_round_trips_and_reorders():
+    """Satellite: the reverse-layer bucket layout round-trips exactly
+    through pack/unpack, and bucket 0 holds the LAST leaf's data (the
+    first gradients backward produces)."""
+    import jax
+
+    rng = np.random.RandomState(4)
+    tree = _tree(rng)
+    fwd = comm.plan_buckets(tree, 1024)
+    rev = comm.plan_buckets(tree, 1024, reverse=True)
+    leaves = jax.tree.leaves(tree)
+    # same leaf set, mirrored concatenation order
+    assert [s.leaf_index for g in rev.groups for s in g.slots] == list(
+        reversed([s.leaf_index for g in fwd.groups for s in g.slots])
+    )
+    buckets = comm.pack_buckets(rev, tree)
+    assert len(buckets) == rev.n_buckets
+    last = np.asarray(leaves[-1]).reshape(-1)
+    np.testing.assert_array_equal(
+        np.asarray(buckets[0])[: last.size], last
+    )
+    back = comm.unpack_buckets(rev, buckets)
+    for a, b in zip(leaves, jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # batch dims compose with the reverse layout
+    tree4 = _tree(rng, batch=(4,))
+    rev4 = comm.plan_buckets(tree4, 2048, batch_ndim=1, reverse=True)
+    back4 = comm.unpack_buckets(rev4, comm.pack_buckets(rev4, tree4))
+    for a, b in zip(jax.tree.leaves(tree4), jax.tree.leaves(back4)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_overlapped_affine_matches_exact_simulator():
+    from repro.core.simulator import simulate_overlapped
+
+    topo = paper_smp_cluster(n_machines=4, cores=4, nics=2)
+    spec = comm.get_spec("all_reduce", "hier_par_bw")
+    build = lambda m: spec.build_schedule(topo, m, payloads=False)
+    stages = stage_affine(build)
+    for n in (1, 2, 8, 32):
+        for c in (0.0, 1e-4, 1e-2):
+            exact = simulate_overlapped(build, 1e8, n, c).t_overlapped
+            aff = overlapped_time_affine(stages, 1e8, n, c)
+            assert aff == pytest.approx(exact, rel=1e-9), (n, c)
+
+
+def test_choose_overlap_hides_comm_under_compute():
+    """With a generous compute shadow the overlap sweep picks deep
+    chunking and exposes (almost) only the chunk latency; with no shadow
+    it degenerates to the pipelined choice."""
+    topo = tpu_v5e_cluster(n_pods=2)
+    spec = comm.get_spec("all_reduce", "hier_par_bw")
+    build = lambda m: spec.build_schedule(topo, m, payloads=False)
+    serial = choose_n_chunks(build, 4e9)
+    big = choose_overlap(build, 4e9, compute_time=1.0)
+    assert big.n_chunks > 1
+    assert big.t_overlapped < big.t_serial
+    assert big.t_exposed < serial.t_pipelined
+    none = choose_overlap(build, 4e9, compute_time=0.0)
+    assert none.t_overlapped == pytest.approx(serial.t_pipelined, rel=1e-9)
+    pinned = choose_overlap(build, 4e9, compute_time=1.0, n_chunks=4)
+    assert pinned.n_chunks == 4
+
+
+def test_microbatched_combine_matches_serial_bitwise():
+    """Satellite: overlapped accumulation (one partial-mean combine per
+    microbatch) produces bit-identical grads vs the serial path for the
+    exact formats, and codec-tolerance grads for q8 -- on dyadic data whose
+    sums are exactly representable, so any mismatch is structural."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(5)
+    tree = {
+        "a": (rng.randint(-128, 128, (4, 2, 300, 7)) / 64.0).astype(
+            np.float32
+        ),
+        "b": (rng.randint(-128, 128, (4, 2, 1000)) / 64.0).astype(
+            np.float32
+        ),
+    }
+    serial_in = {k: jnp.asarray(v.mean(axis=0)) for k, v in tree.items()}
+    want = comm.pod_combine(serial_in, 2, fmt="flat")
+    for fmt, exact in [("flat", True), ("rs", True), ("q8", False)]:
+        got = comm.pod_combine_microbatched(
+            {k: jnp.asarray(v) for k, v in tree.items()}, 2, fmt=fmt,
+            bucket_bytes=2048,
+        )
+        for k in tree:
+            a, b = np.asarray(got[k]), np.asarray(want[k])
+            if exact:
+                np.testing.assert_array_equal(a, b, err_msg=(fmt, k))
+            else:
+                assert np.abs(a - b).max() / np.abs(b).max() < 5e-2, (fmt, k)
 
 
 def test_pod_sync_builder_byte_accounting():

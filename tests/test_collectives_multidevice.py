@@ -322,6 +322,98 @@ def test_bucketed_rs_pod_sync_matches_monolithic():
     """))
 
 
+def test_overlapped_accumulation_matches_serial():
+    """Perf-opt acceptance: the compute-overlapped path (per-microbatch
+    partial-mean syncs, reverse-layer buckets, per-bucket optimizer) is a
+    pure reordering.  (a) On dyadic data the microbatched combine is
+    BIT-IDENTICAL to the serial combine for the exact formats and within
+    codec tolerance for q8; (b) a full manual-mode train step with
+    overlap forced produces the same parameters as the serial step."""
+    print(run_py("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import comm
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.models.config import reduced_for_smoke
+        from repro.optim import adamw
+        from repro.sharding import rules
+        from repro.train import steps as T
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+        # (a) grad-level: overlapped accumulation == serial, bitwise
+        rng = np.random.RandomState(0)
+        tree = {
+            "wa": (rng.randint(-128, 128, (4, 2, 100, 17)) / 64.0
+                   ).astype(np.float32),
+            "wb": (rng.randint(-128, 128, (4, 2, 333)) / 64.0
+                   ).astype(np.float32),
+        }
+        serial_in = {k: jnp.asarray(v.mean(axis=0)) for k, v in tree.items()}
+        with mesh:
+            want = jax.jit(
+                lambda t: comm.pod_combine(t, 2, fmt="flat")
+            )(serial_in)
+            for fmt, exact in [("flat", True), ("rs", True),
+                               ("q8", False), ("rs_q8", False)]:
+                got = jax.jit(
+                    lambda t, fmt=fmt: comm.pod_combine_microbatched(
+                        t, 2, fmt=fmt, bucket_bytes=1024)
+                )({k: jnp.asarray(v) for k, v in tree.items()})
+                for k in tree:
+                    a, b = np.asarray(got[k]), np.asarray(want[k])
+                    if exact:
+                        assert np.array_equal(a, b), (fmt, k)
+                    else:
+                        err = np.abs(a - b).max() / np.abs(b).max()
+                        assert err < 5e-2, (fmt, k, err)
+                print("microbatched combine", fmt,
+                      "bit-identical" if exact else "within q8 tol")
+
+        # (b) step-level: overlapped train step == serial train step
+        cfg = reduced_for_smoke(get_config("llama3_2_1b")).with_(
+            compute_dtype="float32", n_layers=2)
+        pol = rules.ShardingPolicy()
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw.init_state(params)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        base = T.TrainConfig(pod_mode="manual", pod_sync="rs",
+                             accum_steps=4, use_kernel=False)
+        outs = {}
+        for name, tcfg in [
+            ("serial", base),
+            ("overlapped", dataclasses.replace(
+                base, overlap=2, compute_time=0.1)),
+        ]:
+            step, bspecs = T.make_train_step(
+                cfg, tcfg, adamw.AdamWConfig(lr=1e-2), mesh, pol)
+            with mesh:
+                n = lambda s: jax.tree.map(
+                    lambda sp: NamedSharding(mesh, sp), s,
+                    is_leaf=lambda x: isinstance(x, P))
+                jb = jax.device_put(batch, n(bspecs))
+                p2, o2, m = jax.jit(step)(params, opt, jb)
+            outs[name] = (jax.tree.map(np.asarray, p2), float(m["loss"]))
+        (ps, ls), (po, lo) = outs["serial"], outs["overlapped"]
+        assert abs(ls - lo) < 1e-4, (ls, lo)
+        for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(po)):
+            np.testing.assert_allclose(a, b, atol=1e-4)
+        print("overlapped step == serial step ok", ls, lo)
+
+        # the planner actually selects overlap when the shadow is big
+        dec = T.plan_pod_sync(
+            cfg, dataclasses.replace(base, pod_sync="auto", overlap="auto",
+                                     compute_time=5.0), 2, chips_per_pod=1)
+        assert dec.overlap > 0, dec
+        assert dec.t_step <= dec.t_step_serial + 1e-15
+        print("auto overlap decision:", dec.describe())
+    """))
+
+
 def test_q8_sharding_constraint_applies_on_mesh():
     """Satellite regression for the silently-swallowed constraint: under a
     real ('pod','data','model') mesh the q8 combiner's sharding constraints

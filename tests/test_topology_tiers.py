@@ -144,6 +144,32 @@ def test_with_accepts_legacy_and_tier_fields():
         two.with_(bogus_field=1)
 
 
+def test_per_tier_degrees_surface():
+    """PR-5 Rule-3 generalization: ``degrees`` defaults to unlimited inner
+    tiers + ``degree`` outermost, validates its shape, and survives the
+    functional-update surface."""
+    t = THREE_TIER
+    assert t.degrees == (0, 0, t.degree)
+    assert t.tier_degree(0) == 0 and t.tier_degree(2) == t.degree
+    lim = t.with_(degrees=(0, 2, t.degree))
+    assert lim.tier_degree(1) == 2
+    # degree updates track the outermost entry (and vice versa)
+    assert lim.with_(degree=1).degrees == (0, 2, 1)
+    assert t.with_(degrees=(0, 0, 3)).degree == 3
+    # truncation keeps the inner entries and re-crowns the outermost
+    assert lim.with_shape((2, 2)).degrees == (0, lim.degree)
+    with pytest.raises(ValueError, match="degrees"):
+        ClusterTopology(
+            tiers=t.tiers, fanout=t.fanout, degree=t.degree,
+            write_cost=1e-6, degrees=(0, t.degree),
+        )
+    with pytest.raises(ValueError, match="outermost"):
+        ClusterTopology(
+            tiers=t.tiers, fanout=t.fanout, degree=2,
+            write_cost=1e-6, degrees=(0, 0, 3),
+        )
+
+
 def test_with_shape_and_stage():
     t = THREE_TIER
     assert t.with_shape((4, 8, 2)).fanout == (4, 8, 2)

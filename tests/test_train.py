@@ -88,3 +88,132 @@ def test_weight_decay_pulls_towards_zero():
     ocfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=1e9)
     p2, _, _ = adamw.apply_updates(params, grads, st, ocfg)
     assert float(jnp.max(p2["w"])) < 10.0
+
+
+# ----------------------------------------------------------------------
+# Compute/comm overlap: config plumbing, planner, per-bucket optimizer
+# ----------------------------------------------------------------------
+
+def test_parse_overlap_and_estimate():
+    assert train_steps.parse_overlap("off") == "off"
+    assert train_steps.parse_overlap("auto") == "auto"
+    assert train_steps.parse_overlap("8") == 8
+    assert train_steps.parse_overlap(4) == 4
+    with pytest.raises(ValueError, match="overlap"):
+        train_steps.parse_overlap("maybe")
+    cfg = reduced_for_smoke(get_config("llama3_2_1b"))
+    t = train_steps.estimate_compute_time(cfg, tokens_per_pod=8 * 256)
+    assert t > 0
+    # linear in tokens
+    assert train_steps.estimate_compute_time(
+        cfg, tokens_per_pod=2 * 8 * 256
+    ) == pytest.approx(2 * t)
+
+
+def test_plan_pod_sync_overlap_auto_never_worse_than_serial():
+    """Acceptance: with overlap='auto' the planner's modelled STEP time is
+    <= the serial plan's, on calibrated 2- and 3-tier topologies."""
+    from repro import comm
+    from repro.core.topology import ClusterTopology
+
+    fitted2 = ClusterTopology.fitted_tiers(
+        (8, 4), degree=4, alphas=(1.1e-6, 9.7e-6),
+        betas=(2.1e-11, 4.3e-11), write_cost=1.2e-6, assemble_cost=0.9e-6,
+    )
+    fitted3 = ClusterTopology.fitted_tiers(
+        (2, 4, 4), degree=4, alphas=(1.1e-6, 3.2e-6, 9.7e-6),
+        betas=(2.1e-11, 3.3e-11, 4.3e-11), write_cost=1.2e-6,
+        assemble_cost=0.9e-6,
+    )
+    for topo in (fitted2, fitted3):
+        for c in (0.0, 0.005, 0.5):
+            serial = comm.plan_pod_sync(
+                4, 4e9, topo=topo, compute_time=c, accum_steps=8,
+                overlap="off",
+            )
+            auto = comm.plan_pod_sync(
+                4, 4e9, topo=topo, compute_time=c, accum_steps=8,
+                overlap="auto",
+            )
+            assert auto.t_step <= serial.t_step + 1e-15, (
+                topo.n_tiers, c, auto, serial)
+        # a big enough compute shadow makes the overlapped step win
+        # strictly, with positive depth and a sub-serial exposed tail
+        big = comm.plan_pod_sync(
+            4, 4e9, topo=topo, compute_time=2.0, accum_steps=8,
+            overlap="auto",
+        )
+        assert big.overlap > 0 and big.t_step < big.t_step_serial
+        assert big.t_exposed < big.t_step_serial - big.compute_time
+    # forced depth sticks; accum_steps=1 cannot overlap
+    forced = comm.plan_pod_sync(
+        4, 4e9, topo=fitted2, compute_time=0.5, accum_steps=8, overlap=16
+    )
+    assert forced.overlap == 16 and forced.n_chunks == 16
+    with pytest.warns(RuntimeWarning, match="accum_steps"):
+        flat = comm.plan_pod_sync(
+            4, 4e9, topo=fitted2, compute_time=0.5, accum_steps=1,
+            overlap=16,
+        )
+    assert flat.overlap == 0
+
+
+def test_apply_updates_bucketed_matches_tree_path():
+    """Per-bucket optimizer application == the full-tree path (same grads,
+    same clip) within fp tolerance; exact on dyadic data."""
+    from repro.comm import bucketing
+
+    rng = np.random.RandomState(6)
+    params = {
+        "a": jnp.asarray(rng.randn(300, 7).astype(np.float32)),
+        "b": jnp.asarray(rng.randn(1000).astype(np.float32)),
+    }
+    grads = {
+        "a": jnp.asarray(
+            (rng.randint(-64, 64, (300, 7)) / 32.0).astype(np.float32)
+        ),
+        "b": jnp.asarray(
+            (rng.randint(-64, 64, (1000,)) / 32.0).astype(np.float32)
+        ),
+    }
+    st = adamw.init_state(params)
+    ocfg = adamw.AdamWConfig(lr=1e-2, grad_clip=1e9)  # no clip: exact path
+    p_tree, s_tree, m_tree = adamw.apply_updates(params, grads, st, ocfg)
+    layout = bucketing.plan_buckets(grads, 1024, reverse=True)
+    buckets = bucketing.pack_buckets(layout, grads)
+    p_b, s_b, m_b = adamw.apply_updates_bucketed(
+        params, buckets, layout, st, ocfg
+    )
+    for a, b in zip(jax.tree.leaves(p_tree), jax.tree.leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(
+        float(m_tree["grad_norm"]), float(m_b["grad_norm"]), rtol=1e-6
+    )
+    # with clipping active the scale comes from the bucket-partial norm
+    ocfg2 = adamw.AdamWConfig(lr=1e-2, grad_clip=0.5)
+    p_t2, _, _ = adamw.apply_updates(params, grads, st, ocfg2)
+    p_b2, _, _ = adamw.apply_updates_bucketed(
+        params, buckets, layout, st, ocfg2
+    )
+    for a, b in zip(jax.tree.leaves(p_t2), jax.tree.leaves(p_b2)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6
+        )
+
+
+def test_overlap_config_requires_pod_mesh_to_activate():
+    """On a single-pod mesh overlap stays off regardless of the knob (no
+    DCN seam to hide), and the serial step still runs."""
+    cfg, step, params, opt = _setup(accum_steps=2, overlap="auto",
+                                    compute_time=1.0)
+    tokens = jax.random.randint(KEY, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    p, o, m = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    decision = train_steps.plan_pod_sync(
+        cfg,
+        train_steps.TrainConfig(accum_steps=2, overlap="auto",
+                                compute_time=1.0),
+        n_pods=1,
+    )
+    assert decision.overlap == 0
