@@ -14,6 +14,13 @@ strategy that is measurably, repeatedly worse", not microsecond jitter.
 
     python benchmarks/check_regret.py BENCH_comm.json \\
         --summary-out BENCH_regret.json
+
+``--serve-artifact BENCH_serve.json`` additionally gates the simulated
+serving trajectory (``serve_bench --smoke``): the smoke scenario must
+complete every request and its p99 latency must stay within
+``--max-p99-ratio`` of the artifact's unloaded single-request baseline.
+The simulator is seeded and wall-clock-free, so a breach is a genuine
+cost-model or serving-loop regression, not noise.
 """
 
 from __future__ import annotations
@@ -70,6 +77,43 @@ def evaluate(artifact: dict, max_mean_regret: float,
     return out, failures
 
 
+def evaluate_serve(artifact: dict, max_p99_ratio: float) -> tuple[dict, list[str]]:
+    """Gate the BENCH_serve.json smoke scenario: full completion + bounded
+    p99 tail over the unloaded single-request baseline."""
+    baseline = artifact.get("baseline_latency_s")
+    p99 = artifact.get("smoke_p99_s")
+    ratio = artifact.get("smoke_p99_over_baseline")
+    smoke_rows = [
+        r for r in artifact.get("scenarios", [])
+        if r.get("scenario") == "smoke"
+    ]
+    out = dict(
+        baseline_latency_s=baseline,
+        smoke_p99_s=p99,
+        smoke_p99_over_baseline=ratio,
+        max_p99_ratio=max_p99_ratio,
+        n_smoke_points=len(smoke_rows),
+    )
+    failures = []
+    if not smoke_rows:
+        failures.append("no smoke scenario rows in serve artifact")
+    for r in smoke_rows:
+        if r.get("n_completed") != r.get("n_requests"):
+            failures.append(
+                f"smoke x{r.get('rate_scale')}: only {r.get('n_completed')}"
+                f"/{r.get('n_requests')} requests completed"
+            )
+    if ratio is None:
+        failures.append("serve artifact has no smoke_p99_over_baseline "
+                        "(run serve_bench with rate scale 1.0)")
+    elif ratio > max_p99_ratio:
+        failures.append(
+            f"smoke p99 {p99 * 1e3:.1f}ms is {ratio:.2f}x the unloaded "
+            f"baseline {baseline * 1e3:.1f}ms (limit {max_p99_ratio:.2f}x)"
+        )
+    return out, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("artifact", help="BENCH_comm.json from collective_bench")
@@ -81,6 +125,12 @@ def main(argv=None) -> int:
                          "this factor")
     ap.add_argument("--summary-out", default="",
                     help="also persist the regret summary JSON here")
+    ap.add_argument("--serve-artifact", default="",
+                    help="BENCH_serve.json from serve_bench: also gate the "
+                         "smoke scenario's p99 latency")
+    ap.add_argument("--max-p99-ratio", type=float, default=4.0,
+                    help="fail when the smoke scenario's p99 latency "
+                         "exceeds this multiple of the unloaded baseline")
     args = ap.parse_args(argv)
 
     with open(args.artifact) as f:
@@ -88,6 +138,19 @@ def main(argv=None) -> int:
     out, failures = evaluate(
         artifact, args.max_mean_regret, args.max_single_regret
     )
+    if args.serve_artifact:
+        with open(args.serve_artifact) as f:
+            serve_artifact = json.load(f)
+        serve_out, serve_failures = evaluate_serve(
+            serve_artifact, args.max_p99_ratio
+        )
+        out["serve"] = serve_out
+        failures.extend(serve_failures)
+        print(
+            f"[regret] serve smoke p99/baseline="
+            f"{serve_out['smoke_p99_over_baseline']} "
+            f"(limit {args.max_p99_ratio:g})"
+        )
     if args.summary_out:
         with open(args.summary_out, "w") as f:
             json.dump(out, f, indent=2)

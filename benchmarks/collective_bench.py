@@ -225,11 +225,22 @@ def _bench_overlap_step(repeats: int, accum: int = 4):
     chosen = "overlapped" if decision.overlap > 0 else "serial"
     t_best = min(measured.values())
     regret = (measured[chosen] - t_best) / t_best
+    # one-point dispatch-cost fit: attribute the overlapped step's
+    # measured-minus-modelled gap to its bucket issues (depth per sync,
+    # accum syncs per step); feeds calibration meta / DEFAULT_DISPATCH_COST
+    from repro.core.simulator import fit_dispatch_cost
+
+    n_issues = depth * accum
+    dispatch_fit = fit_dispatch_cost(t_over, forced.t_step, n_issues)
+    print(f"[bench] dispatch-cost fit: {dispatch_fit * 1e6:.1f}us/issue "
+          f"over {n_issues} issues")
     return dict(
         bench="train_step_overlap",
         arch=cfg.name,
         accum_steps=accum,
         mesh=dict(pod=pods, data=n // pods, model=1),
+        dispatch_cost_fit_us=dispatch_fit * 1e6,
+        dispatch_fit_n_issues=n_issues,
         rows=rows,
         decision=dict(
             fmt=decision.fmt,
@@ -437,6 +448,11 @@ def main(argv=None) -> None:
                 json.dump(step_artifact, f, indent=2)
             print(f"[bench] step overlap trajectory -> {args.step_out} "
                   f"(regret {step_artifact['regret']:.3f})")
+            # carry the per-issue dispatch fit into the calibration so
+            # plan_pod_sync's overlap pricing sees the measured overhead
+            calib.meta["dispatch_cost"] = (
+                step_artifact["dispatch_cost_fit_us"] * 1e-6
+            )
     if args.save_calibration:
         comm.save_calibration(calib, args.save_calibration)
         print(f"[bench] calibration -> {args.save_calibration}")

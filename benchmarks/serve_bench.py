@@ -1,0 +1,103 @@
+"""Traffic-scale serving benchmark: the BENCH_serve.json artifact.
+
+Sweeps offered load over the named ``repro.sim`` scenarios and records
+throughput and latency percentiles per (scenario, rate_scale) point, so the
+serving trajectory is tracked across commits exactly like BENCH_comm /
+BENCH_step.  The simulator prices every step's tensor-parallel collective
+with the exact round model on the (optionally calibrated) 3-tier topology,
+making these numbers a function of the repo's own cost model -- a planner
+or model regression moves them deterministically (seeded workloads, no
+wall-clock reads).
+
+    python -m benchmarks.serve_bench --smoke --out BENCH_serve.json
+    python -m benchmarks.serve_bench --calibration calibration.json
+
+The artifact also records the smoke scenario's unloaded single-request
+latency as ``baseline_latency_s``; ``check_regret.py --serve-artifact``
+gates CI on the smoke p99 staying within a factor of it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+SMOKE_SCALES = [0.5, 1.0]
+FULL_SCALES = [0.5, 1.0, 2.0]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke scenario only, short sweep (the CI mode)")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated scenario names (default: all)")
+    ap.add_argument("--rate-scales", default="",
+                    help="comma-separated offered-load multipliers")
+    ap.add_argument("--calibration", default="",
+                    help="calibration JSON for the link tiers (same loader "
+                         "as CommContext.from_calibration)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    from repro.sim import SCENARIOS, get_scenario, run_scenario, unloaded_latency
+
+    if args.scenarios:
+        names = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    elif args.smoke:
+        names = ["smoke"]
+    else:
+        names = sorted(SCENARIOS)
+    if args.rate_scales:
+        scales = [float(s) for s in args.rate_scales.split(",")]
+    else:
+        scales = SMOKE_SCALES if args.smoke else FULL_SCALES
+    calibration = args.calibration or None
+
+    rows = []
+    smoke_row = None
+    for name in names:
+        sc = get_scenario(name)
+        for scale in scales:
+            m = run_scenario(
+                sc, "sim", calibration=calibration, rate_scale=scale
+            )
+            rows.append(m)
+            if name == "smoke" and scale == 1.0:
+                smoke_row = m
+            print(
+                f"[serve_bench] {name} x{scale:g}: "
+                f"{m['n_completed']}/{m['n_requests']} done, "
+                f"{m['throughput_rps']:.2f} rps, "
+                f"p50 {m['latency_p50_s'] * 1e3:.1f}ms, "
+                f"p99 {m['latency_p99_s'] * 1e3:.1f}ms"
+            )
+
+    baseline = unloaded_latency(get_scenario("smoke"), calibration)
+    artifact = dict(
+        bench="serve_sim",
+        smoke=args.smoke,
+        calibrated=calibration is not None,
+        scenarios=rows,
+        baseline_latency_s=baseline,
+        smoke_p99_s=(
+            smoke_row["latency_p99_s"] if smoke_row is not None else None
+        ),
+        smoke_p99_over_baseline=(
+            smoke_row["latency_p99_s"] / baseline
+            if smoke_row is not None and baseline else None
+        ),
+    )
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[serve_bench] {len(rows)} points -> {args.out} "
+          f"(baseline {baseline * 1e3:.1f}ms, smoke p99/baseline "
+          f"{artifact['smoke_p99_over_baseline']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -336,21 +336,25 @@ def simulate_choice(build, nbytes: float, n_chunks: int) -> PipelinedCost:
 # ----------------------------------------------------------------------
 
 def overlapped_time_affine(
-    stages, m: float, n_chunks: int, compute_time: float
+    stages, m: float, n_chunks: int, compute_time: float,
+    dispatch_cost: float = 0.0,
 ) -> float:
     """``simulate_overlapped`` total from per-stage affine coefficients.
 
     Exact O(S) twin of the simulator's closed form: buckets released
     uniformly over the ``compute_time`` backward shadow, comm pipelined
     behind the releases; only the comm escaping the shadow is charged.
-    ``compute_time = 0`` reduces to ``pipelined_time_affine`` exactly.
+    ``dispatch_cost`` stretches the shadow by one issue overhead per bucket
+    (see ``simulate_overlapped``).  ``compute_time = 0, dispatch_cost = 0``
+    reduces to ``pipelined_time_affine`` exactly.
     """
     chunk_m = m / n_chunks
     ts = [A + B * chunk_m for _, A, B in stages]
     t_chunk = sum(ts)
     b = max(ts, default=0.0)
+    shadow = compute_time + n_chunks * dispatch_cost
     return t_chunk + max(
-        compute_time, compute_time / n_chunks + (n_chunks - 1) * b
+        shadow, shadow / n_chunks + (n_chunks - 1) * b
     )
 
 
@@ -364,6 +368,7 @@ class OverlapChoice:
     t_overlapped: float       # compute + exposed comm at the chosen chunking
     t_serial: float           # compute + best post-backward pipelined sync
     stages: tuple
+    dispatch_cost: float = 0.0
 
     @property
     def t_exposed(self) -> float:
@@ -383,15 +388,18 @@ def choose_overlap(
     max_chunks: int = MAX_CHUNKS,
     n_chunks: int | None = None,
     stages=None,
+    dispatch_cost: float = 0.0,
 ) -> OverlapChoice:
     """Sweep chunk counts under the compute-overlapped view; return the best.
 
     Like ``choose_n_chunks`` but pricing ``overlapped_time_affine``: deeper
     chunking releases comm earlier into the backward shadow but pays more
-    per-message alphas; the fitted stage curves decide.  ``n_chunks`` pins
-    the chunk count instead of sweeping.  ``t_serial`` reports the best
-    UNoverlapped plan (compute, then the ``choose_n_chunks`` pipelined sync)
-    so callers can compare overlap on vs off at their respective optima.
+    per-message alphas (and, with ``dispatch_cost > 0``, one issue overhead
+    per bucket on the compute path); the fitted stage curves decide.
+    ``n_chunks`` pins the chunk count instead of sweeping.  ``t_serial``
+    reports the best UNoverlapped plan (compute, then the
+    ``choose_n_chunks`` pipelined sync, no dispatch charge) so callers can
+    compare overlap on vs off at their respective optima.
     """
     if stages is None:
         stages = stage_affine(build)
@@ -403,13 +411,17 @@ def choose_overlap(
     t_serial = compute_time + serial.t_pipelined
     if n_chunks is not None:
         best_n = max(1, int(n_chunks))
-        best_t = overlapped_time_affine(stages, nbytes, best_n, compute_time)
+        best_t = overlapped_time_affine(
+            stages, nbytes, best_n, compute_time, dispatch_cost
+        )
     else:
         best_n, best_t = 1, overlapped_time_affine(
-            stages, nbytes, 1, compute_time
+            stages, nbytes, 1, compute_time, dispatch_cost
         )
         for n in chunk_counts(nbytes, min_bucket_bytes, max_chunks)[1:]:
-            t = overlapped_time_affine(stages, nbytes, n, compute_time)
+            t = overlapped_time_affine(
+                stages, nbytes, n, compute_time, dispatch_cost
+            )
             if t < best_t:
                 best_n, best_t = n, t
     return OverlapChoice(
@@ -419,4 +431,5 @@ def choose_overlap(
         t_overlapped=best_t,
         t_serial=t_serial,
         stages=tuple((k, A + B * nbytes / best_n) for k, A, B in stages),
+        dispatch_cost=dispatch_cost,
     )

@@ -513,6 +513,7 @@ class PodSyncDecision:
     accum_steps: int = 1
     t_step: float = 0.0        # modelled step: compute + exposed comm
     t_step_serial: float = 0.0  # best serial plan's modelled step
+    dispatch_cost: float = 0.0  # per-issue overhead priced into t_step
 
     @property
     def bucketed(self) -> bool:
@@ -554,8 +555,29 @@ class PodSyncDecision:
         return msg
 
 
+def resolve_dispatch_cost(calibration: str | None = None) -> float:
+    """Per-issue dispatch overhead for overlap pricing, seconds.
+
+    An explicit ``calibration`` file's ``meta['dispatch_cost']`` wins, else
+    the file named by ``$REPRO_CALIBRATION``'s, else the fixture-fitted
+    ``core.simulator.DEFAULT_DISPATCH_COST`` (``fit_dispatch_cost`` on each
+    BENCH_step run refreshes the stored value).
+    """
+    from repro.core.simulator import DEFAULT_DISPATCH_COST
+
+    from .calibrate import CALIBRATION_ENV, load_calibration
+
+    path = calibration or os.environ.get(CALIBRATION_ENV)
+    if path:
+        v = (load_calibration(path).meta or {}).get("dispatch_cost")
+        if v is not None:
+            return max(0.0, float(v))
+    return DEFAULT_DISPATCH_COST
+
+
 def _overlap_exposure(
-    stages, grad_bytes: float, n: int, compute_time: float, accum_steps: int
+    stages, grad_bytes: float, n: int, compute_time: float,
+    accum_steps: int, dispatch_cost: float = 0.0,
 ) -> float:
     """Modelled comm seconds escaping the backward shadow for the overlapped
     trainer: ``accum_steps`` partial-mean syncs of the full gradient, sync k
@@ -570,15 +592,22 @@ def _overlap_exposure(
     Max of two exact bounds, each affine in the stage curves:
 
     * bucket-release bound: the final sync's comm that escapes its
-      ``compute_time / accum_steps`` window (``overlapped_time_affine``);
+      ``compute_time / accum_steps`` window (``overlapped_time_affine``,
+      which also charges that window's ``n`` bucket dispatches);
     * work conservation: the network must move ``accum_steps`` syncs but
       only ``accum_steps - 1`` backward windows can shadow them.
+
+    Each of the other ``accum_steps - 1`` syncs additionally stretches its
+    own shadow window by ``n * dispatch_cost`` of issue overhead, which
+    lands on the step's critical path on top of either bound.
     """
     w = compute_time / accum_steps
     t_pipe = bucketing.pipelined_time_affine(stages, grad_bytes, n)
-    last = bucketing.overlapped_time_affine(stages, grad_bytes, n, w) - w
+    last = bucketing.overlapped_time_affine(
+        stages, grad_bytes, n, w, dispatch_cost
+    ) - w
     conserve = accum_steps * t_pipe - (accum_steps - 1) * w
-    return max(last, conserve)
+    return max(last, conserve) + (accum_steps - 1) * n * dispatch_cost
 
 
 def plan_pod_sync(
@@ -597,6 +626,7 @@ def plan_pod_sync(
     accum_steps: int = 1,
     overlap: str | int = "off",
     formats=None,
+    dispatch_cost: float | None = None,
 ) -> PodSyncDecision:
     """Price every (wire format, bucket count, overlap depth) candidate.
 
@@ -621,9 +651,18 @@ def plan_pod_sync(
     1`` -- the trainer has no second backward to hide under otherwise --
     and ``compute_time`` (seconds of per-step forward+backward) to size the
     shadow.
+
+    ``dispatch_cost`` (per-issue overhead each interleaved bucket launch
+    adds to the compute path; see ``simulate_overlapped``) defaults to the
+    calibration's ``meta['dispatch_cost']`` when one is in play, else the
+    fixture-fitted ``DEFAULT_DISPATCH_COST``.  It penalizes only the
+    overlapped candidates, so a large fitted value makes 'auto' correctly
+    fall back to the serial plan.
     """
     if n_pods <= 1:
         return PodSyncDecision("flat", 0, 1, 0.0, 0.0, False)
+    if dispatch_cost is None:
+        dispatch_cost = resolve_dispatch_cost(calibration)
     if topo is None:
         topo = pod_sync_topology(n_pods, calibration, topology=topology)
     if formats is None:
@@ -701,7 +740,8 @@ def plan_pod_sync(
                 )
             for n in ns:
                 exposed = _overlap_exposure(
-                    stages, grad_bytes, n, compute_time, accum_steps
+                    stages, grad_bytes, n, compute_time, accum_steps,
+                    dispatch_cost,
                 )
                 cands.append(
                     PodSyncDecision(
@@ -718,6 +758,7 @@ def plan_pod_sync(
                         accum_steps=accum_steps,
                         t_step=compute_time + exposed,
                         t_step_serial=t_step_serial,
+                        dispatch_cost=dispatch_cost,
                     )
                 )
         for cand in cands:
@@ -763,6 +804,7 @@ __all__ = [
     "pod_sync_builder",
     "pod_sync_grads",
     "pod_sync_topology",
+    "resolve_dispatch_cost",
     "select_pod_sync",
     "CommContext",
 ]

@@ -1,30 +1,56 @@
-"""Serving launcher: batched prefill + decode with the sharded KV cache.
+"""Serving launcher: batched prefill + decode, live or simulated.
+
+Live single-batch generation (the original entry point):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \\
       --batch 4 --prompt-len 64 --gen 32
+
+Scenario mode drives ``repro.sim``'s named serving scenarios -- the same
+experiment either through the discrete-event simulator (``--mode sim``,
+optionally on fitted tiers via ``--calibration``) or replayed through the
+real engine on this host (``--mode live``):
+
+  PYTHONPATH=src python -m repro.launch.serve --scenario smoke --mode sim
+  PYTHONPATH=src python -m repro.launch.serve --scenario smoke --mode sim \\
+      --calibration calibration.json
+  PYTHONPATH=src python -m repro.launch.serve --scenario smoke --mode live
 """
 
 from __future__ import annotations
 
 import argparse
-
-import jax
-
-from repro.configs import get_config
-from repro.models import lm
-from repro.models.config import reduced_for_smoke
+import json
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+def _run_scenario(args) -> None:
+    from repro.sim import get_scenario, run_scenario
+
+    sc = get_scenario(args.scenario)
+    metrics = run_scenario(
+        sc, args.mode, calibration=args.calibration,
+        rate_scale=args.rate_scale,
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    print(f"[serve] scenario={sc.name} mode={args.mode} "
+          f"({sc.doc or 'no description'})")
+    for k in ("n_requests", "n_completed", "throughput_rps",
+              "throughput_tok_s", "latency_p50_s", "latency_p99_s",
+              "ttft_p50_s", "ttft_p99_s", "step_p50_s", "step_p99_s"):
+        v = metrics.get(k)
+        if isinstance(v, float):
+            print(f"[serve]   {k} = {v:.6g}")
+        else:
+            print(f"[serve]   {k} = {v}")
+
+
+def _run_live_batch(args) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.config import reduced_for_smoke
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -44,13 +70,49 @@ def main() -> None:
 
     eng = Engine(cfg, params, max_len=S + args.gen,
                  temperature=args.temperature, seed=args.seed)
-    res = eng.generate(prompts, args.gen, enc_embeds=enc)
-    print(f"[serve] arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
+    res = eng.generate(prompts, args.gen, enc_embeds=enc,
+                       stop_tokens=tuple(args.stop_token))
+    print(f"[serve] arch={cfg.name} batch={B} prompt={S} gen={args.gen}"
+          + (" (stopped early)" if res.stopped_early else ""))
     print(f"[serve] prefill: {res.prefill_s*1e3:.1f}ms "
           f"({B*S/res.prefill_s:,.0f} tok/s); decode: "
-          f"{res.decode_s*1e3/max(args.gen-1,1):.1f}ms/step "
+          f"{res.decode_s*1e3/max(res.steps-1,1):.1f}ms/step "
           f"({res.decode_tok_s:,.0f} tok/s)")
+    if res.step_latencies_s:
+        print(f"[serve] step latency p50 {res.step_p50_s*1e3:.1f}ms "
+              f"p99 {res.step_p99_s*1e3:.1f}ms over {res.steps} steps")
     print(f"[serve] sample tokens[0,:16]: {res.tokens[0,:16].tolist()}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    help="token id ending a sequence (repeatable)")
+    ap.add_argument("--scenario",
+                    help="run a repro.sim serving scenario instead of a "
+                         "single live batch")
+    ap.add_argument("--mode", choices=("sim", "live"), default="sim",
+                    help="scenario mode: discrete-event sim or live replay")
+    ap.add_argument("--calibration",
+                    help="calibration JSON for the sim's link tiers")
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="multiply the scenario's offered load")
+    ap.add_argument("--out", help="write scenario metrics JSON here")
+    args = ap.parse_args()
+
+    if args.scenario:
+        _run_scenario(args)
+        return
+    if not args.arch:
+        ap.error("either --arch (live batch) or --scenario is required")
+    _run_live_batch(args)
 
 
 if __name__ == "__main__":

@@ -3,12 +3,18 @@
 Wraps prefill + decode with sampling, stop handling, and jitted steps with
 donated caches (no per-token cache copies).  The decode_32k / long_500k
 dry-run cells lower exactly this ``decode_step``.
+
+``generate`` measures every decode step individually (one device sync per
+step -- the measurement serving latency reporting actually requires) and
+supports stop-token early exit, so a live run emits the same per-step
+p50/p99 metrics the discrete-event simulator (``repro.sim``) produces for
+the simulated cluster.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -17,17 +23,42 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 
 
+def _percentile(values, q: float) -> float:
+    """Nearest-rank-interpolated percentile, NaN on empty (mirrors
+    ``repro.sim.serving.percentile``; kept local so serve never imports
+    the simulator)."""
+    if not values:
+        return float("nan")
+    xs = sorted(values)
+    if len(xs) == 1:
+        return float(xs[0])
+    k = (q / 100.0) * (len(xs) - 1)
+    lo = int(k)
+    hi = min(lo + 1, len(xs) - 1)
+    return float(xs[lo] + (xs[hi] - xs[lo]) * (k - lo))
+
+
 @dataclass
 class GenerationResult:
-    tokens: jax.Array            # [B, gen_len]
+    tokens: jax.Array            # [B, steps]
     prefill_s: float
     decode_s: float
-    steps: int
+    steps: int                   # steps actually run (<= gen_len on stop)
+    step_latencies_s: list = field(default_factory=list)  # per decode step
+    stopped_early: bool = False
 
     @property
     def decode_tok_s(self) -> float:
         B = self.tokens.shape[0]
         return B * max(self.steps - 1, 1) / max(self.decode_s, 1e-9)
+
+    @property
+    def step_p50_s(self) -> float:
+        return _percentile(self.step_latencies_s, 50)
+
+    @property
+    def step_p99_s(self) -> float:
+        return _percentile(self.step_latencies_s, 99)
 
 
 class Engine:
@@ -38,12 +69,17 @@ class Engine:
         self.max_len = max_len
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(
-            lambda p, t, c, enc: lm.prefill(p, cfg, t, c, enc_embeds=enc)
-            if cfg.family == "encdec"
-            else lm.prefill(p, cfg, t, c),
-            static_argnames=(),
-        )
+        # branch OUTSIDE the lambda: the seed nested the conditional in the
+        # lambda body, producing a 4-arg prefill that broke every
+        # decoder-only call
+        if cfg.family == "encdec":
+            self._prefill = jax.jit(
+                lambda p, t, c, enc: lm.prefill(p, cfg, t, c, enc_embeds=enc)
+            )
+        else:
+            self._prefill = jax.jit(
+                lambda p, t, c: lm.prefill(p, cfg, t, c)
+            )
         self._decode = jax.jit(
             lambda p, t, c: lm.decode_step(p, cfg, t, c),
             donate_argnums=(2,),
@@ -56,11 +92,25 @@ class Engine:
         return jax.random.categorical(sub, logits / self.temperature, -1)
 
     def generate(self, prompts: jax.Array, gen_len: int,
-                 enc_embeds=None) -> GenerationResult:
+                 enc_embeds=None, stop_tokens=(),
+                 pad_token: int = 0) -> GenerationResult:
+        """Generate up to ``gen_len`` tokens per sequence.
+
+        stop_tokens:  token ids that finish a sequence.  A finished
+                      sequence keeps its slot (continuous batching at this
+                      granularity is the simulator's job) but emits
+                      ``pad_token`` from the next step on; decoding exits
+                      as soon as EVERY sequence has stopped, so short
+                      completions are not billed the full ``gen_len``.
+        """
         B, S = prompts.shape
         cache = lm.init_cache(
             self.cfg, B, min(S + gen_len, self.max_len),
             enc_len=enc_embeds.shape[1] if enc_embeds is not None else S,
+        )
+        stop = (
+            jnp.asarray(sorted(stop_tokens), jnp.int32)
+            if stop_tokens else None
         )
         t0 = time.perf_counter()
         if self.cfg.family == "encdec":
@@ -71,15 +121,31 @@ class Engine:
         t_pf = time.perf_counter() - t0
 
         tok = self._sample(logits)
+        done = (
+            jnp.isin(tok, stop) if stop is not None
+            else jnp.zeros((B,), bool)
+        )
         out = [tok]
+        step_latencies: list[float] = []
+        stopped_early = False
         t0 = time.perf_counter()
         for _ in range(gen_len - 1):
+            if stop is not None and bool(done.all()):
+                stopped_early = True
+                break
+            ts = time.perf_counter()
             logits, cache = self._decode(self.params, tok, cache)
             tok = self._sample(logits)
+            tok = jnp.where(done, pad_token, tok)
+            tok.block_until_ready()
+            step_latencies.append(time.perf_counter() - ts)
             out.append(tok)
+            if stop is not None:
+                done = done | jnp.isin(tok, stop)
         jax.block_until_ready(out[-1])
         t_dec = time.perf_counter() - t0
         return GenerationResult(
             tokens=jnp.stack(out, 1), prefill_s=t_pf, decode_s=t_dec,
-            steps=gen_len,
+            steps=len(out), step_latencies_s=step_latencies,
+            stopped_early=stopped_early,
         )

@@ -1,9 +1,11 @@
 """shard_map compatibility across jax versions.
 
-Newer jax exposes ``jax.shard_map`` with a ``check_vma`` flag; the pinned
-version only has ``jax.experimental.shard_map.shard_map`` with the older
-``check_rep`` spelling of the same knob.  Call sites use this wrapper so
-they read like the modern API either way.
+The pinned jax ships ``jax.experimental.shard_map.shard_map`` with the
+``check_rep`` knob; that is the API this repo targets.  Some newer
+releases promote it to a top-level ``jax.shard_map`` whose equivalent
+knob is spelled ``check_vma``, so this wrapper probes for the top-level
+name first and otherwise uses the experimental module.  Call sites read
+like the modern spelling either way.
 """
 
 from __future__ import annotations

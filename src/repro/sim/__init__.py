@@ -1,0 +1,54 @@
+"""repro.sim: discrete-event cluster simulator on the calibrated comm model.
+
+Layers (bottom up):
+
+* ``engine``   -- deterministic priority-queue event loop + Rule-3 link
+                  pools; no randomness, no wall clock.
+* ``cluster``  -- nodes (KV residency) and link pools over a
+                  ``ClusterTopology``; collective timing is the EXACT
+                  ``core.simulator.simulate_rounds`` round model, memoized.
+* ``workload`` -- seeded synthetic traces (Poisson / diurnal / burst).
+* ``serving``  -- prefill/decode lifecycles with continuous batching and
+                  collective-heavy step costs.
+* ``scenario`` -- named experiments runnable simulated or live.
+
+The sim core deliberately avoids jax: it prices cluster-scale serving from
+a calibration JSON on any host.  Only ``scenario``'s live mode imports the
+real serving engine, lazily.
+"""
+
+from .cluster import SimCluster, SimNode
+from .engine import Engine, Event, LinkPool, SimTimeError
+from .scenario import (
+    SCENARIOS,
+    Scenario,
+    build_cluster,
+    get_scenario,
+    run_scenario,
+    unloaded_latency,
+)
+from .serving import RequestRecord, ServingConfig, ServingSim, percentile
+from .workload import Request, Trace, WorkloadConfig, generate_trace
+
+__all__ = [
+    "Engine",
+    "Event",
+    "LinkPool",
+    "SimTimeError",
+    "SimCluster",
+    "SimNode",
+    "Request",
+    "Trace",
+    "WorkloadConfig",
+    "generate_trace",
+    "ServingConfig",
+    "ServingSim",
+    "RequestRecord",
+    "percentile",
+    "Scenario",
+    "SCENARIOS",
+    "get_scenario",
+    "build_cluster",
+    "run_scenario",
+    "unloaded_latency",
+]

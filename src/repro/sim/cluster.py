@@ -1,0 +1,242 @@
+"""Cluster entities for the event simulator, timed by the calibrated model.
+
+``SimCluster`` wraps a ``ClusterTopology`` (preset or calibrated via the
+same loader ``CommContext.from_calibration`` uses) and exposes exactly two
+timing primitives to the event layer:
+
+* ``transfer(src, dst, nbytes)`` -- one point-to-point message, charged
+  ``tier.transfer_time(nbytes) + assemble_cost`` on the tier separating the
+  endpoints, queued through per-``(tier, group)`` Rule-3 link pools sized by
+  ``ClusterTopology.degrees`` (0 = unlimited), the same keying
+  ``core.simulator.simulate_async`` uses.
+
+* ``collective_time(collective, nbytes)`` -- one whole-group collective,
+  priced by building the registry schedule and running the EXACT round
+  model ``core.simulator.simulate_rounds`` (not the affine interpolation
+  the planner caches), memoized per ``(collective, strategy, nbytes,
+  root)``.  This is what makes the simulator's single-collective timing
+  equal ``core.simulator.simulate(...)`` bit-for-bit, which the tests
+  assert with ``==``.
+
+Nodes carry KV-cache residency so the serving layer can model admission
+control: a request is only admitted when its KV footprint is reservable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..comm import registry
+from ..comm.calibrate import CalibrationResult, calibrated_cluster, load_calibration
+from ..comm.context import best_plan
+from ..core.simulator import simulate_rounds
+from ..core.topology import ClusterTopology, topology_preset
+from .engine import Engine, LinkPool
+
+
+class KVCapacityError(RuntimeError):
+    """Raised when releasing more KV bytes than are reserved."""
+
+
+@dataclass
+class SimNode:
+    """One processor: KV-cache residency accounting for admission control."""
+
+    node_id: int
+    kv_capacity_bytes: float = float("inf")
+    kv_used_bytes: float = 0.0
+
+    def can_reserve(self, nbytes: float) -> bool:
+        return self.kv_used_bytes + nbytes <= self.kv_capacity_bytes
+
+    def reserve(self, nbytes: float) -> bool:
+        """Reserve KV bytes; returns False (no side effect) if full."""
+        if not self.can_reserve(nbytes):
+            return False
+        self.kv_used_bytes += nbytes
+        return True
+
+    def release(self, nbytes: float) -> None:
+        if nbytes > self.kv_used_bytes + 1e-9:
+            raise KVCapacityError(
+                f"node {self.node_id}: releasing {nbytes} of "
+                f"{self.kv_used_bytes} reserved KV bytes"
+            )
+        self.kv_used_bytes = max(0.0, self.kv_used_bytes - nbytes)
+
+
+class SimCluster:
+    """Nodes + per-tier link pools over a calibrated ``ClusterTopology``."""
+
+    def __init__(
+        self,
+        engine: Engine,
+        topo: ClusterTopology,
+        *,
+        kv_capacity_bytes: float = float("inf"),
+    ) -> None:
+        self.engine = engine
+        self.topo = topo
+        self.nodes = [
+            SimNode(i, kv_capacity_bytes=kv_capacity_bytes)
+            for i in range(topo.n_procs)
+        ]
+        # Rule-3 pools, lazily created per (tier, group) and direction --
+        # the same keying simulate_async uses, but persistent across the
+        # whole simulated run instead of per-schedule.
+        self._out: dict[tuple[int, int], LinkPool] = {}
+        self._in: dict[tuple[int, int], LinkPool] = {}
+        # (collective, strategy, nbytes, root) -> exact simulate_rounds time
+        self._collective_cache: dict[tuple, float] = {}
+        self.bytes_moved = 0.0
+        self.n_transfers = 0
+        self.n_collectives = 0
+
+    # -- construction ---------------------------------------------------
+
+    @classmethod
+    def from_calibration(
+        cls,
+        engine: Engine,
+        source,
+        *,
+        fanout=None,
+        kv_capacity_bytes: float = float("inf"),
+    ) -> "SimCluster":
+        """Build from a calibration JSON path / dict / CalibrationResult.
+
+        Mirrors ``CommContext.from_calibration``: fitted per-tier
+        alpha/beta transplant onto ``fanout`` (defaults to the fitted
+        shape), so the simulator and the planner price links identically.
+        """
+        if isinstance(source, CalibrationResult):
+            calib = source
+        elif isinstance(source, dict):
+            calib = CalibrationResult.from_dict(source)
+        else:
+            calib = load_calibration(source)
+        topo = calibrated_cluster(calib, fanout=fanout)
+        return cls(engine, topo, kv_capacity_bytes=kv_capacity_bytes)
+
+    @classmethod
+    def from_preset(
+        cls,
+        engine: Engine,
+        name: str,
+        *,
+        n_machines: int = 2,
+        fanout=None,
+        kv_capacity_bytes: float = float("inf"),
+    ) -> "SimCluster":
+        topo = topology_preset(name, n_machines)
+        if fanout is not None:
+            topo = topo.with_shape(tuple(fanout))
+        return cls(engine, topo, kv_capacity_bytes=kv_capacity_bytes)
+
+    # -- point-to-point -------------------------------------------------
+
+    def _pool(self, pools, tix: int, group: int) -> LinkPool:
+        key = (tix, group)
+        pool = pools.get(key)
+        if pool is None:
+            pool = pools[key] = LinkPool(self.topo.tier_degree(tix))
+        return pool
+
+    def transfer(self, src: int, dst: int, nbytes: float,
+                 on_done=None, *args, priority: int = 0) -> float:
+        """Start a point-to-point transfer now; returns its end time.
+
+        Duration comes from the calibrated tier separating ``src`` and
+        ``dst`` (``alpha + nbytes*beta + assemble_cost``); the start is
+        delayed until an egress link of the source group and an ingress
+        link of the destination group are simultaneously free.
+        """
+        if src == dst:
+            raise ValueError(f"transfer src == dst == {src}")
+        topo = self.topo
+        now = self.engine.now
+        tix = topo.tier_index(src, dst)
+        dur = topo.tiers[tix].transfer_time(nbytes) + topo.assemble_cost
+        out = self._pool(self._out, tix, topo.group_of(src, tix))
+        inp = self._pool(self._in, tix, topo.group_of(dst, tix))
+        start = max(out.next_free(now), inp.next_free(now))
+        _, end_o = out.acquire(start, dur)
+        _, end_i = inp.acquire(start, dur)
+        end = max(end_o, end_i)
+        self.bytes_moved += nbytes
+        self.n_transfers += 1
+        if on_done is not None:
+            self.engine.at(end, on_done, *args, priority=priority)
+        return end
+
+    # -- collectives ----------------------------------------------------
+
+    def collective_time(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        strategy: str | None = None,
+        root: int = 0,
+        lossy_ok: bool = False,
+    ) -> float:
+        """Exact modelled time of one whole-topology collective, seconds.
+
+        Strategy selection (when ``strategy`` is None) uses the planner's
+        ``best_plan``; the returned TIME is then recomputed with the exact
+        round model on the chosen strategy's schedule, so a simulated
+        collective finishes precisely when ``simulate_rounds`` says --
+        no affine interpolation error.  Memoized: serving steps reprice
+        the same (collective, bytes) pair thousands of times.
+        """
+        if strategy is None:
+            strategy = best_plan(
+                self.topo, collective, nbytes, root=root, lossy_ok=lossy_ok
+            ).strategy
+        key = (collective, strategy, float(nbytes), root)
+        t = self._collective_cache.get(key)
+        if t is None:
+            spec = registry.get_spec(collective, strategy)
+            sched = spec.build_schedule(self.topo, float(nbytes), root=root)
+            t = simulate_rounds(sched, check=False)
+            self._collective_cache[key] = t
+        return t
+
+    def run_collective(
+        self,
+        collective: str,
+        nbytes: float,
+        on_done=None,
+        *args,
+        strategy: str | None = None,
+        root: int = 0,
+        lossy_ok: bool = False,
+        priority: int = 0,
+    ) -> float:
+        """Schedule a collective's completion; returns its end time."""
+        t = self.collective_time(
+            collective, nbytes, strategy=strategy, root=root,
+            lossy_ok=lossy_ok,
+        )
+        end = self.engine.now + t
+        self.n_collectives += 1
+        if on_done is not None:
+            self.engine.at(end, on_done, *args, priority=priority)
+        return end
+
+    # -- introspection --------------------------------------------------
+
+    @property
+    def kv_used_bytes(self) -> float:
+        return sum(n.kv_used_bytes for n in self.nodes)
+
+    def describe(self) -> dict:
+        return {
+            "n_procs": self.topo.n_procs,
+            "fanout": list(self.topo.fanout),
+            "tiers": [t.name for t in self.topo.tiers],
+            "degrees": list(self.topo.degrees),
+            "n_transfers": self.n_transfers,
+            "n_collectives": self.n_collectives,
+            "bytes_moved": self.bytes_moved,
+        }

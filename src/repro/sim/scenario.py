@@ -1,0 +1,204 @@
+"""Named serving scenarios, runnable simulated or live.
+
+A ``Scenario`` bundles (topology, workload, serving costs) so the same
+experiment can be driven three ways with one metric schema:
+
+* ``run_scenario(sc, mode="sim")`` -- the discrete-event simulator on the
+  preset tier parameters (or on fitted ones, via ``calibration=``: the
+  same JSON ``CommContext.from_calibration`` loads).
+* ``run_scenario(sc, mode="live")`` -- the real ``serve.Engine`` on a
+  reduced model, replaying the scenario's first requests on this host and
+  reporting the identical p50/p99 keys (parity smoke, not a cluster).
+* ``benchmarks/serve_bench.py`` -- sweeps ``rate_scale`` over a scenario
+  and writes ``BENCH_serve.json``.
+
+Scenario shapes are REDUCED fanouts of the ``tpu_v5e_3tier`` preset (same
+ici/pcie/dcn tier constants, fewer chips) so schedule construction stays
+fast enough for CI; pass ``fanout=`` to scale a scenario up.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from .cluster import SimCluster
+from .engine import Engine
+from .serving import ServingConfig, ServingSim
+from .workload import WorkloadConfig, generate_trace
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named serving experiment."""
+
+    name: str
+    topology: str = "v5e_3tier"          # preset name, see TOPOLOGY_PRESETS
+    fanout: tuple = (2, 4, 2)            # reduced v5e shape (16 procs)
+    workload: WorkloadConfig = WorkloadConfig()
+    serving: ServingConfig = ServingConfig()
+    doc: str = ""
+
+    def with_(self, **kw) -> "Scenario":
+        return replace(self, **kw)
+
+
+SCENARIOS = {
+    "smoke": Scenario(
+        name="smoke",
+        fanout=(2, 4, 2),
+        workload=WorkloadConfig(rate=2.0, horizon=10.0, arrival="poisson",
+                                mean_prompt_tokens=64, mean_gen_tokens=16,
+                                max_prompt_tokens=256, max_gen_tokens=64,
+                                seed=0),
+        serving=ServingConfig(max_batch=8),
+        doc="small Poisson load on a 16-chip 3-tier slice; the CI gate",
+    ),
+    "steady": Scenario(
+        name="steady",
+        fanout=(4, 8, 2),
+        workload=WorkloadConfig(rate=4.0, horizon=60.0, arrival="poisson",
+                                seed=1),
+        serving=ServingConfig(max_batch=16),
+        doc="steady Poisson load on a 64-chip slice",
+    ),
+    "diurnal": Scenario(
+        name="diurnal",
+        fanout=(4, 8, 2),
+        workload=WorkloadConfig(rate=4.0, horizon=120.0, arrival="diurnal",
+                                diurnal_amp=0.6, diurnal_period=60.0,
+                                seed=2),
+        serving=ServingConfig(max_batch=16),
+        doc="sinusoidally modulated load (daily cycle compressed)",
+    ),
+    "burst": Scenario(
+        name="burst",
+        fanout=(4, 8, 2),
+        workload=WorkloadConfig(rate=3.0, horizon=60.0, arrival="burst",
+                                burst_mult=5.0, seed=3),
+        serving=ServingConfig(max_batch=16),
+        doc="5x traffic spike over 10% of the horizon",
+    ),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r} (known: {sorted(SCENARIOS)})"
+        ) from None
+
+
+def build_cluster(sc: Scenario, calibration=None) -> SimCluster:
+    """SimCluster on the scenario's shape, preset or calibrated tiers."""
+    engine = Engine()
+    if calibration is not None:
+        return SimCluster.from_calibration(
+            engine, calibration, fanout=sc.fanout,
+            kv_capacity_bytes=sc.serving.kv_capacity_bytes,
+        )
+    return SimCluster.from_preset(
+        engine, sc.topology, fanout=sc.fanout,
+        kv_capacity_bytes=sc.serving.kv_capacity_bytes,
+    )
+
+
+def unloaded_latency(sc: Scenario, calibration=None) -> float:
+    """Latency of one lone mean-sized request -- the tail-gate baseline."""
+    cluster = build_cluster(sc, calibration)
+    wl = sc.workload
+    lone = WorkloadConfig(
+        rate=1e-6, horizon=1.0, arrival="poisson", seed=wl.seed,
+        mean_prompt_tokens=wl.mean_prompt_tokens,
+        mean_gen_tokens=wl.mean_gen_tokens, length_sigma=0.0,
+        max_prompt_tokens=wl.max_prompt_tokens,
+        max_gen_tokens=wl.max_gen_tokens,
+        prompt_quantum=wl.prompt_quantum,
+    )
+    sim = ServingSim(cluster, sc.serving)
+    # replay a single synthetic request directly (no Poisson draw needed)
+    from .workload import Request, Trace
+
+    trace = Trace(cfg=lone, requests=[Request(
+        rid=0, t_arrival=0.0,
+        prompt_tokens=wl.mean_prompt_tokens,
+        gen_tokens=wl.mean_gen_tokens,
+    )])
+    metrics = sim.run(trace)
+    return metrics["latency_p50_s"]
+
+
+def run_scenario(sc: Scenario, mode: str = "sim", *, calibration=None,
+                 rate_scale: float = 1.0, max_live_requests: int = 2) -> dict:
+    """Run a scenario and return its metrics dict (one schema, both modes)."""
+    if mode == "sim":
+        wl = replace(sc.workload, rate=sc.workload.rate * rate_scale)
+        cluster = build_cluster(sc, calibration)
+        trace = generate_trace(wl)
+        sim = ServingSim(cluster, sc.serving)
+        metrics = sim.run(trace)
+        metrics.update(
+            scenario=sc.name, mode="sim", rate_scale=rate_scale,
+            fanout=list(sc.fanout), n_procs=cluster.topo.n_procs,
+            calibrated=calibration is not None,
+        )
+        return metrics
+    if mode == "live":
+        return _run_live(sc, rate_scale, max_live_requests)
+    raise ValueError(f"mode must be 'sim' or 'live', got {mode!r}")
+
+
+def _run_live(sc: Scenario, rate_scale: float, max_requests: int) -> dict:
+    """Replay the scenario's first requests through the real serve.Engine.
+
+    Imported lazily: the simulator itself never touches jax, so ``sim``
+    stays importable on hosts without devices.
+    """
+    import jax
+    import numpy as np
+
+    from ..configs import get_config
+    from ..models import lm
+    from ..models.config import reduced_for_smoke
+    from ..serve.engine import Engine as ServeEngine
+
+    wl = replace(sc.workload, rate=sc.workload.rate * rate_scale)
+    trace = generate_trace(wl)
+    reqs = trace.requests[:max_requests]
+    if not reqs:
+        raise ValueError(f"scenario {sc.name!r} generated no requests")
+    cfg = reduced_for_smoke(get_config("llama3_2_1b")).with_(
+        compute_dtype="float32"
+    )
+    prompt_len = min(max(r.prompt_tokens for r in reqs),
+                     wl.max_prompt_tokens, 64)
+    gen_len = min(max(r.gen_tokens for r in reqs), wl.max_gen_tokens, 16)
+    rng = np.random.default_rng(wl.seed)
+    prompts = rng.integers(
+        0, cfg.vocab_size, (len(reqs), prompt_len), dtype=np.int32
+    )
+    params = lm.init_params(jax.random.PRNGKey(wl.seed), cfg)
+    eng = ServeEngine(cfg, params, max_len=prompt_len + gen_len + 1,
+                      seed=wl.seed)
+    res = eng.generate(prompts, gen_len)
+    from .serving import percentile
+
+    steps = list(res.step_latencies_s)
+    latency = res.prefill_s + res.decode_s
+    return {
+        "scenario": sc.name,
+        "mode": "live",
+        "rate_scale": rate_scale,
+        "n_requests": len(reqs),
+        "n_completed": len(reqs),
+        "throughput_rps": len(reqs) / latency if latency else 0.0,
+        "throughput_tok_s": res.decode_tok_s,
+        "latency_p50_s": latency,
+        "latency_p99_s": latency,
+        "ttft_p50_s": res.prefill_s,
+        "ttft_p99_s": res.prefill_s,
+        "step_p50_s": percentile(steps, 50),
+        "step_p99_s": percentile(steps, 99),
+        "n_steps": res.steps,
+    }

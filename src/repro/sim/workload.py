@@ -1,0 +1,155 @@
+"""Synthetic request traces: Poisson arrivals with diurnal/burst shaping.
+
+Traces are generated OUTSIDE the event engine from a seeded
+``random.Random`` -- the engine itself is randomness-free, so a scenario is
+fully determined by ``(seed, workload params, topology)`` and two runs with
+the same seed produce identical traces (the determinism test pins this).
+
+Arrival processes:
+
+* ``poisson``  -- homogeneous rate ``lam`` req/s.
+* ``diurnal``  -- nonhomogeneous rate ``lam * (1 + amp*sin(2*pi*t/period))``
+                  sampled by thinning (Lewis & Shedler): candidates at the
+                  peak rate, kept with probability rate(t)/peak.
+* ``burst``    -- homogeneous base rate with windows of ``burst_mult`` x
+                  intensity, modelling a traffic spike.
+
+Token lengths are integer-quantized lognormal-ish draws (exp of a normal),
+clamped to ``[1, max]``; quantizing prompt lengths keeps the set of
+distinct per-step collective sizes small, which the serving layer exploits
+to memoize exact schedule timings.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Request:
+    """One inference request: arrival time + prompt/generation lengths."""
+
+    rid: int
+    t_arrival: float
+    prompt_tokens: int
+    gen_tokens: int
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_tokens + self.gen_tokens
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    """Parameters of a synthetic trace (all times in seconds)."""
+
+    rate: float = 1.0                # mean offered load, requests/second
+    horizon: float = 60.0            # trace length
+    arrival: str = "poisson"         # poisson | diurnal | burst
+    seed: int = 0
+    # token-length distribution (lognormal-ish, quantized)
+    mean_prompt_tokens: int = 128
+    mean_gen_tokens: int = 64
+    length_sigma: float = 0.4        # 0 => deterministic lengths
+    max_prompt_tokens: int = 2048
+    max_gen_tokens: int = 1024
+    prompt_quantum: int = 16         # round prompts up to a multiple
+    # diurnal shaping
+    diurnal_amp: float = 0.5         # rate swing fraction, in [0, 1)
+    diurnal_period: float = 60.0
+    # burst shaping
+    burst_mult: float = 4.0
+    burst_start: float = 0.25        # fraction of horizon
+    burst_frac: float = 0.1          # burst width, fraction of horizon
+
+    def __post_init__(self) -> None:
+        if self.rate <= 0 or self.horizon <= 0:
+            raise ValueError("rate and horizon must be positive")
+        if self.arrival not in ("poisson", "diurnal", "burst"):
+            raise ValueError(f"unknown arrival process {self.arrival!r}")
+        if not 0.0 <= self.diurnal_amp < 1.0:
+            raise ValueError("diurnal_amp must be in [0, 1)")
+
+
+@dataclass
+class Trace:
+    """A generated trace plus the config that produced it."""
+
+    cfg: WorkloadConfig
+    requests: list = field(default_factory=list)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    @property
+    def offered_rate(self) -> float:
+        return self.n_requests / self.cfg.horizon
+
+
+def _rate_at(cfg: WorkloadConfig, t: float) -> float:
+    if cfg.arrival == "poisson":
+        return cfg.rate
+    if cfg.arrival == "diurnal":
+        return cfg.rate * (
+            1.0 + cfg.diurnal_amp
+            * math.sin(2.0 * math.pi * t / cfg.diurnal_period)
+        )
+    # burst: base rate with a multiplied window
+    t0 = cfg.burst_start * cfg.horizon
+    t1 = t0 + cfg.burst_frac * cfg.horizon
+    return cfg.rate * (cfg.burst_mult if t0 <= t < t1 else 1.0)
+
+
+def _peak_rate(cfg: WorkloadConfig) -> float:
+    if cfg.arrival == "poisson":
+        return cfg.rate
+    if cfg.arrival == "diurnal":
+        return cfg.rate * (1.0 + cfg.diurnal_amp)
+    return cfg.rate * cfg.burst_mult
+
+
+def _draw_length(rng: random.Random, mean: int, sigma: float,
+                 cap: int, quantum: int = 1) -> int:
+    """Integer length with the requested mean: exp(N(mu, sigma)) has mean
+    exp(mu + sigma^2/2), so mu = ln(mean) - sigma^2/2."""
+    if sigma <= 0.0:
+        n = mean
+    else:
+        mu = math.log(mean) - 0.5 * sigma * sigma
+        n = int(round(math.exp(rng.gauss(mu, sigma))))
+    n = max(1, min(n, cap))
+    if quantum > 1:
+        n = min(cap, ((n + quantum - 1) // quantum) * quantum)
+    return n
+
+
+def generate_trace(cfg: WorkloadConfig) -> Trace:
+    """Sample a full trace by thinning a peak-rate Poisson process."""
+    rng = random.Random(cfg.seed)
+    peak = _peak_rate(cfg)
+    requests = []
+    t = 0.0
+    rid = 0
+    while True:
+        t += rng.expovariate(peak)
+        if t >= cfg.horizon:
+            break
+        if rng.random() > _rate_at(cfg, t) / peak:
+            continue  # thinned out: candidate exceeds instantaneous rate
+        requests.append(Request(
+            rid=rid,
+            t_arrival=t,
+            prompt_tokens=_draw_length(
+                rng, cfg.mean_prompt_tokens, cfg.length_sigma,
+                cfg.max_prompt_tokens, cfg.prompt_quantum,
+            ),
+            gen_tokens=_draw_length(
+                rng, cfg.mean_gen_tokens, cfg.length_sigma,
+                cfg.max_gen_tokens,
+            ),
+        ))
+        rid += 1
+    return Trace(cfg=cfg, requests=requests)

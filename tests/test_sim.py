@@ -1,0 +1,413 @@
+"""Discrete-event simulator (repro.sim) + dispatch-cost model tests.
+
+Covers: event-loop ordering/tie-break/monotonicity invariants, link-pool
+contention, seeded-workload determinism, the exact single-collective
+cross-check against ``core.simulator.simulate``, a Little's-law sanity
+check on an M/M/1-style single-slot scenario, KV-residency admission,
+calibration-JSON plumbing, the per-issue dispatch-cost term, and the
+serving engine's stop-token / per-step-latency reporting.
+"""
+
+import math
+
+import pytest
+
+from repro.comm import bucketing, registry
+from repro.comm.calibrate import CalibrationResult, save_calibration
+from repro.comm.context import best_plan
+from repro.comm.grad_sync import plan_pod_sync, resolve_dispatch_cost
+from repro.core import schedules as S
+from repro.core import simulator as core_sim
+from repro.core.topology import tpu_v5e_3tier, tpu_v5e_cluster
+from repro.sim import (
+    Engine,
+    LinkPool,
+    Request,
+    ServingConfig,
+    ServingSim,
+    SimCluster,
+    SimTimeError,
+    Trace,
+    WorkloadConfig,
+    generate_trace,
+    get_scenario,
+    run_scenario,
+)
+
+
+# ----------------------------------------------------------------------
+# Event engine invariants
+# ----------------------------------------------------------------------
+
+def test_engine_fires_in_time_priority_insertion_order():
+    eng = Engine()
+    fired = []
+    eng.at(2.0, fired.append, "t2")
+    eng.at(1.0, fired.append, "t1-late-priority", priority=5)
+    eng.at(1.0, fired.append, "t1-first-inserted")
+    eng.at(1.0, fired.append, "t1-second-inserted")
+    eng.at(0.5, fired.append, "t0.5")
+    n = eng.run()
+    assert n == 5
+    assert fired == [
+        "t0.5", "t1-first-inserted", "t1-second-inserted",
+        "t1-late-priority", "t2",
+    ]
+    assert eng.now == 2.0
+
+
+def test_engine_time_is_monotonic_and_rejects_the_past():
+    eng = Engine()
+    seen = []
+    eng.at(1.0, lambda: seen.append(eng.now))
+    eng.at(3.0, lambda: seen.append(eng.now))
+    eng.run()
+    assert seen == [1.0, 3.0]
+    with pytest.raises(SimTimeError):
+        eng.at(2.0, lambda: None)       # now is 3.0
+    with pytest.raises(SimTimeError):
+        eng.schedule(-0.1, lambda: None)
+    with pytest.raises(SimTimeError):
+        eng.at(math.inf, lambda: None)
+
+
+def test_engine_run_until_and_cancel():
+    eng = Engine()
+    fired = []
+    eng.at(1.0, fired.append, "a")
+    ev = eng.at(2.0, fired.append, "cancelled")
+    eng.at(5.0, fired.append, "late")
+    ev.cancel()
+    eng.run(until=3.0)
+    assert fired == ["a"]
+    assert eng.now == 3.0               # advances to the horizon
+    eng.run()
+    assert fired == ["a", "late"]
+
+
+def test_linkpool_contention_and_unlimited():
+    pool = LinkPool(1)
+    s1, e1 = pool.acquire(0.0, 2.0)
+    s2, e2 = pool.acquire(0.0, 2.0)
+    assert (s1, e1) == (0.0, 2.0)
+    assert (s2, e2) == (2.0, 4.0)       # queued behind the single link
+    two = LinkPool(2)
+    assert two.acquire(0.0, 2.0) == (0.0, 2.0)
+    assert two.acquire(0.0, 2.0) == (0.0, 2.0)   # second link, no wait
+    unlimited = LinkPool(0)
+    for _ in range(4):
+        assert unlimited.acquire(1.0, 2.0) == (1.0, 3.0)
+
+
+def test_cluster_transfer_respects_tier_degree():
+    topo = tpu_v5e_cluster(2).with_shape((2, 2), degree=1)
+    eng = Engine()
+    cl = SimCluster(eng, topo)
+    # both cross-machine transfers leave machine 0: one egress link
+    dur = topo.tiers[-1].transfer_time(1024.0) + topo.assemble_cost
+    e1 = cl.transfer(0, 2, 1024.0)
+    e2 = cl.transfer(1, 3, 1024.0)
+    assert e1 == pytest.approx(dur)
+    assert e2 == pytest.approx(2 * dur)
+    # intra-machine transfer uses the local tier, no pool contention
+    e3 = cl.transfer(0, 1, 1024.0)
+    assert e3 == pytest.approx(
+        topo.tiers[0].transfer_time(1024.0) + topo.assemble_cost
+    )
+
+
+# ----------------------------------------------------------------------
+# Workload determinism + shaping
+# ----------------------------------------------------------------------
+
+def test_trace_is_seed_deterministic():
+    cfg = WorkloadConfig(rate=5.0, horizon=30.0, seed=7)
+    a, b = generate_trace(cfg), generate_trace(cfg)
+    assert a.requests == b.requests
+    c = generate_trace(WorkloadConfig(rate=5.0, horizon=30.0, seed=8))
+    assert c.requests != a.requests
+
+
+def test_trace_lengths_are_capped_and_quantized():
+    cfg = WorkloadConfig(
+        rate=20.0, horizon=20.0, seed=3, mean_prompt_tokens=100,
+        max_prompt_tokens=160, prompt_quantum=16, max_gen_tokens=48,
+    )
+    tr = generate_trace(cfg)
+    assert tr.n_requests > 100
+    for r in tr.requests:
+        assert 1 <= r.prompt_tokens <= 160
+        assert r.prompt_tokens % 16 == 0 or r.prompt_tokens == 160
+        assert 1 <= r.gen_tokens <= 48
+        assert 0.0 <= r.t_arrival < cfg.horizon
+
+
+def test_burst_and_diurnal_shape_the_arrival_rate():
+    base = dict(rate=10.0, horizon=100.0, seed=5)
+    burst = generate_trace(
+        WorkloadConfig(arrival="burst", burst_mult=6.0, burst_start=0.25,
+                       burst_frac=0.1, **base)
+    )
+    window = [r for r in burst.requests if 25.0 <= r.t_arrival < 35.0]
+    outside = [r for r in burst.requests if not 25.0 <= r.t_arrival < 35.0]
+    rate_in = len(window) / 10.0
+    rate_out = len(outside) / 90.0
+    assert rate_in > 3.0 * rate_out     # 6x burst, generous noise margin
+    diurnal = generate_trace(
+        WorkloadConfig(arrival="diurnal", diurnal_amp=0.8,
+                       diurnal_period=100.0, **base)
+    )
+    # first half-period rides the +sin peak, second the trough
+    first = sum(1 for r in diurnal.requests if r.t_arrival < 50.0)
+    second = diurnal.n_requests - first
+    assert first > second
+
+
+# ----------------------------------------------------------------------
+# The acceptance cross-check: sim timing == core.simulator, exactly
+# ----------------------------------------------------------------------
+
+def test_single_collective_completion_equals_core_simulate():
+    topo = tpu_v5e_3tier(2).with_shape((2, 4, 2))
+    eng = Engine()
+    cl = SimCluster(eng, topo)
+    nbytes = float(1 << 20)
+    done_at = []
+    end = cl.run_collective(
+        "all_reduce", nbytes, lambda: done_at.append(eng.now)
+    )
+    eng.run()
+    strategy = best_plan(topo, "all_reduce", nbytes).strategy
+    sched = registry.get_spec("all_reduce", strategy).build_schedule(
+        topo, nbytes
+    )
+    assert end == core_sim.simulate(sched)          # exact, not approx
+    assert done_at == [end]
+    # memoized repricing stays exact and identical
+    assert cl.collective_time("all_reduce", nbytes) == end
+
+
+def test_collective_time_exact_for_explicit_strategies():
+    topo = tpu_v5e_3tier(2).with_shape((2, 2, 2))
+    cl = SimCluster(Engine(), topo)
+    for strategy in ("hier_par", "hier_par_bw"):
+        for nbytes in (4096.0, 1 << 18):
+            spec = registry.get_spec("all_reduce", strategy)
+            want = core_sim.simulate_rounds(
+                spec.build_schedule(topo, float(nbytes))
+            )
+            got = cl.collective_time(
+                "all_reduce", nbytes, strategy=strategy
+            )
+            assert got == want
+
+
+# ----------------------------------------------------------------------
+# Serving: determinism, Little's law, KV admission
+# ----------------------------------------------------------------------
+
+def test_smoke_scenario_is_deterministic_and_completes():
+    a = run_scenario(get_scenario("smoke"), "sim")
+    b = run_scenario(get_scenario("smoke"), "sim")
+    assert a == b
+    assert a["n_completed"] == a["n_requests"] > 0
+    assert a["latency_p99_s"] >= a["latency_p50_s"] > 0
+    assert a["ttft_p50_s"] > 0
+    assert 0.0 < a["utilization"] < 1.0
+
+
+def test_littles_law_on_single_slot_queue():
+    """M/M/1-style sanity: with one batch slot, the time-averaged number
+    in system must equal arrival rate x mean sojourn time (Little's law;
+    the sim computes L and W through independent accountings)."""
+    topo = tpu_v5e_cluster(2).with_shape((2, 2))
+    eng = Engine()
+    cl = SimCluster(eng, topo)
+    sim = ServingSim(cl, ServingConfig(max_batch=1, decode_time_per_token=2e-3))
+    trace = generate_trace(
+        WorkloadConfig(rate=3.0, horizon=120.0, seed=11,
+                       mean_prompt_tokens=32, mean_gen_tokens=8,
+                       max_prompt_tokens=64, max_gen_tokens=16)
+    )
+    m = sim.run(trace)
+    assert m["n_completed"] == m["n_requests"]
+    lam = m["n_completed"] / m["span_s"]
+    lw = lam * m["latency_mean_s"]
+    assert m["mean_in_system"] == pytest.approx(lw, rel=1e-9)
+    assert 0.0 < m["utilization"] < 1.0
+
+
+def test_latency_grows_with_offered_load():
+    sc = get_scenario("smoke")
+    light = run_scenario(sc, "sim", rate_scale=0.25)
+    heavy = run_scenario(sc, "sim", rate_scale=4.0)
+    assert heavy["latency_p50_s"] > light["latency_p50_s"]
+    assert heavy["utilization"] > light["utilization"]
+
+
+def test_kv_capacity_gates_admission():
+    topo = tpu_v5e_cluster(2).with_shape((2, 2))
+    eng = Engine()
+    scfg = ServingConfig(
+        max_batch=8, kv_bytes_per_token=4096.0,
+        # room for ~one 48-token request's shards per node, not two
+        kv_capacity_bytes=4096.0 / topo.n_procs * 60,
+    )
+    cl = SimCluster(eng, topo, kv_capacity_bytes=scfg.kv_capacity_bytes)
+    sim = ServingSim(cl, scfg)
+    reqs = [
+        Request(rid=0, t_arrival=0.0, prompt_tokens=40, gen_tokens=8),
+        Request(rid=1, t_arrival=0.001, prompt_tokens=40, gen_tokens=8),
+    ]
+    cfg = WorkloadConfig(rate=1.0, horizon=1.0, seed=0)
+    m = sim.run(Trace(cfg=cfg, requests=reqs))
+    assert m["n_completed"] == 2
+    first, second = sim.records
+    # the second request's KV did not fit until the first one released
+    assert second.t_admitted >= first.t_finish
+    assert all(n.kv_used_bytes == 0.0 for n in cl.nodes)
+
+
+def test_sim_from_calibration_json(tmp_path):
+    """The sim consumes the same calibration JSON CommContext does, and
+    transplants the fitted tiers onto the scenario shape."""
+    calib = CalibrationResult(
+        topology=tpu_v5e_3tier(2),
+        measurements=(),
+        rel_rmse=0.01,
+        n_iterations=3,
+        meta={"dispatch_cost": 2.5e-6},
+    )
+    p = tmp_path / "calibration.json"
+    save_calibration(calib, p)
+    eng = Engine()
+    cl = SimCluster.from_calibration(eng, str(p), fanout=(2, 4, 2))
+    assert cl.topo.n_procs == 16
+    assert [t.name for t in cl.topo.tiers] == ["ici", "pcie", "dcn"]
+    assert cl.topo.tiers[2].beta == pytest.approx(
+        tpu_v5e_3tier(2).tiers[2].beta
+    )
+    m = run_scenario(get_scenario("smoke"), "sim", calibration=str(p))
+    assert m["calibrated"] is True
+    assert m["n_completed"] == m["n_requests"]
+    # the stored dispatch fit is what overlap pricing resolves
+    assert resolve_dispatch_cost(str(p)) == 2.5e-6
+
+
+# ----------------------------------------------------------------------
+# Per-issue dispatch cost (simulate_overlapped satellite)
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def overlap_build():
+    topo = tpu_v5e_cluster(2).with_shape((4, 2))
+    return lambda m: S.allreduce_hier_par_bw(topo, m, payloads=False)
+
+
+def test_dispatch_cost_zero_is_the_old_model(overlap_build):
+    a = core_sim.simulate_overlapped(overlap_build, 1 << 22, 8, 0.01)
+    b = core_sim.simulate_overlapped(
+        overlap_build, 1 << 22, 8, 0.01, dispatch_cost=0.0
+    )
+    assert a.t_overlapped == b.t_overlapped
+    assert a.dispatch_cost == 0.0
+
+
+def test_dispatch_cost_penalizes_only_the_overlapped_path(overlap_build):
+    base = core_sim.simulate_overlapped(overlap_build, 1 << 22, 8, 0.01)
+    taxed = core_sim.simulate_overlapped(
+        overlap_build, 1 << 22, 8, 0.01, dispatch_cost=1e-3
+    )
+    # compute-bound regime: 8 issues x 1ms land fully on the shadow
+    assert taxed.t_overlapped == pytest.approx(base.t_overlapped + 8e-3)
+    assert taxed.t_serial == base.t_serial      # serial pays no dispatch
+    with pytest.raises(ValueError):
+        core_sim.simulate_overlapped(
+            overlap_build, 1 << 22, 8, 0.01, dispatch_cost=-1.0
+        )
+
+
+def test_dispatch_cost_feature_decomposition_stays_exact(overlap_build):
+    m, n, ct, dc = float(1 << 22), 8, 0.01, 1e-3
+    cost = core_sim.simulate_overlapped(
+        overlap_build, m, n, ct, dispatch_cost=dc
+    )
+    feats, c0 = core_sim.overlapped_cost_features(
+        overlap_build, m, n, ct, dispatch_cost=dc
+    )
+    params = overlap_build(m).topo.param_vector()
+    t = sum(f * p for f, p in zip(feats, params)) + c0
+    assert t == pytest.approx(cost.t_overlapped, rel=1e-12)
+
+
+def test_overlapped_time_affine_matches_simulator(overlap_build):
+    stages = bucketing.stage_affine(overlap_build)
+    for dc in (0.0, 5e-4):
+        for n in (1, 4, 16):
+            want = core_sim.simulate_overlapped(
+                overlap_build, 1 << 22, n, 0.02, dispatch_cost=dc
+            ).t_overlapped
+            got = bucketing.overlapped_time_affine(
+                stages, 1 << 22, n, 0.02, dc
+            )
+            assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_fit_dispatch_cost():
+    assert core_sim.fit_dispatch_cost(0.10, 0.09, 2) == pytest.approx(5e-3)
+    # measured faster than modelled -> no observable overhead (the
+    # committed BENCH_step fixture's regime, hence the 0.0 default)
+    assert core_sim.fit_dispatch_cost(0.08, 0.09, 2) == 0.0
+    assert core_sim.DEFAULT_DISPATCH_COST == 0.0
+    with pytest.raises(ValueError):
+        core_sim.fit_dispatch_cost(0.1, 0.1, 0)
+
+
+def test_large_dispatch_cost_flips_auto_overlap_to_serial():
+    topo = tpu_v5e_cluster(2).with_shape((2, 2))
+    kw = dict(compute_time=0.05, accum_steps=4, overlap="auto", topo=topo)
+    free = plan_pod_sync(2, 1 << 24, dispatch_cost=0.0, **kw)
+    taxed = plan_pod_sync(2, 1 << 24, dispatch_cost=0.05, **kw)
+    assert free.overlap > 0
+    assert taxed.overlap == 0           # overhead makes overlap a loss
+    assert taxed.t_step <= free.t_step + 0.05 * free.accum_steps * free.overlap
+    # default resolution (no calibration anywhere) is the fixture fit
+    assert plan_pod_sync(2, 1 << 24, **kw) == free
+
+
+# ----------------------------------------------------------------------
+# Live engine parity (stop tokens + per-step latencies)
+# ----------------------------------------------------------------------
+
+def test_serve_engine_stop_tokens_and_step_latencies():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.config import reduced_for_smoke
+    from repro.serve.engine import Engine as ServeEngine
+
+    cfg = reduced_for_smoke(get_config("llama3_2_1b")).with_(
+        compute_dtype="float32"
+    )
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    eng = ServeEngine(cfg, params, max_len=32)
+    free = eng.generate(prompts, 6)
+    assert free.steps == 6
+    assert not free.stopped_early
+    assert len(free.step_latencies_s) == 5          # one per decode step
+    assert all(t > 0 for t in free.step_latencies_s)
+    assert free.step_p99_s >= free.step_p50_s > 0
+
+    # greedy decode is deterministic: stopping on every token the free run
+    # emitted in its first two steps must end generation by step 2
+    stop = {int(t) for t in free.tokens[:, :2].reshape(-1)}
+    eng2 = ServeEngine(cfg, params, max_len=32)
+    stopped = eng2.generate(prompts, 6, stop_tokens=stop, pad_token=-1)
+    assert stopped.stopped_early
+    assert stopped.steps <= 2
+    assert len(stopped.step_latencies_s) == stopped.steps - 1
+    assert bool(jnp.all(stopped.tokens[:, 0] == free.tokens[:, 0]))
