@@ -21,6 +21,13 @@ complete every request and its p99 latency must stay within
 ``--max-p99-ratio`` of the artifact's unloaded single-request baseline.
 The simulator is seeded and wall-clock-free, so a breach is a genuine
 cost-model or serving-loop regression, not noise.
+
+``--fault-artifact BENCH_fault.json`` gates the fault-tolerance loop
+(``fault_bench --smoke``): the kill_recovery scenario must record a
+completed recovery (watchdog detection -> shrunk-topology re-plan ->
+restore -> resume, every request served), and re-planning collectives on
+a degraded topology must never price worse than keeping the stale
+healthy plan (re-plan regret <= 0).
 """
 
 from __future__ import annotations
@@ -114,6 +121,63 @@ def evaluate_serve(artifact: dict, max_p99_ratio: float) -> tuple[dict, list[str
     return out, failures
 
 
+def evaluate_fault(artifact: dict,
+                   max_replan_regret: float = 1e-9) -> tuple[dict, list[str]]:
+    """Gate the BENCH_fault.json artifact: the kill_recovery scenario's
+    full detect -> shrink -> re-plan -> restore -> resume loop must
+    complete (every request served, at least one recorded recovery), and
+    re-planning on a degraded topology must never price worse than keeping
+    the stale healthy plan (regret <= 0 within float tolerance)."""
+    kill = artifact.get("kill_recovery")
+    replan = artifact.get("replan_regret", [])
+    max_regret = max((r["regret"] for r in replan), default=0.0)
+    worst = max(replan, key=lambda r: r["regret"], default=None)
+    out = dict(
+        kill_recovery=kill,
+        n_replan_rows=len(replan),
+        max_replan_regret=max_regret,
+        n_plan_flips=sum(1 for r in replan if r.get("flipped")),
+        max_replan_regret_limit=max_replan_regret,
+        worst_replan=(
+            dict(
+                degradation=worst["degradation"],
+                nbytes=worst["nbytes"],
+                strategy_stale=worst["strategy_stale"],
+                strategy_replanned=worst["strategy_replanned"],
+                regret=worst["regret"],
+            ) if worst else None
+        ),
+    )
+    failures = []
+    if kill is None:
+        failures.append("no kill_recovery scenario in fault artifact")
+    else:
+        if kill.get("n_recoveries", 0) < 1:
+            failures.append(
+                "kill_recovery recorded no recovery (watchdog never "
+                "detected the node loss?)"
+            )
+        elif kill.get("recovery_time_s", 0.0) <= 0.0:
+            failures.append(
+                f"kill_recovery recovery_time_s="
+                f"{kill.get('recovery_time_s')} (recovery never finished)"
+            )
+        if kill.get("n_completed") != kill.get("n_requests"):
+            failures.append(
+                f"kill_recovery completed only {kill.get('n_completed')}"
+                f"/{kill.get('n_requests')} requests after the node loss"
+            )
+    if not replan:
+        failures.append("no replan_regret rows in fault artifact")
+    if max_regret > max_replan_regret:
+        failures.append(
+            f"replan regret {max_regret:+.4f} > 0: re-planning on the "
+            f"degraded topology priced WORSE than the stale plan "
+            f"(worst: {out['worst_replan']})"
+        )
+    return out, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("artifact", help="BENCH_comm.json from collective_bench")
@@ -131,6 +195,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-p99-ratio", type=float, default=4.0,
                     help="fail when the smoke scenario's p99 latency "
                          "exceeds this multiple of the unloaded baseline")
+    ap.add_argument("--fault-artifact", default="",
+                    help="BENCH_fault.json from fault_bench: also gate the "
+                         "kill_recovery loop completing and the degraded-"
+                         "topology re-plan regret staying <= 0")
+    ap.add_argument("--max-replan-regret", type=float, default=1e-9,
+                    help="fail when re-planning on a degraded topology "
+                         "prices worse than the stale plan by more than "
+                         "this (regret is <= 0 for a consistent planner)")
     args = ap.parse_args(argv)
 
     with open(args.artifact) as f:
@@ -150,6 +222,23 @@ def main(argv=None) -> int:
             f"[regret] serve smoke p99/baseline="
             f"{serve_out['smoke_p99_over_baseline']} "
             f"(limit {args.max_p99_ratio:g})"
+        )
+    if args.fault_artifact:
+        with open(args.fault_artifact) as f:
+            fault_artifact = json.load(f)
+        fault_out, fault_failures = evaluate_fault(
+            fault_artifact, args.max_replan_regret
+        )
+        out["fault"] = fault_out
+        failures.extend(fault_failures)
+        kill = fault_out["kill_recovery"] or {}
+        print(
+            f"[regret] fault kill_recovery: "
+            f"{kill.get('n_recoveries', 0)} recoveries in "
+            f"{kill.get('recovery_time_s', 0.0):.3f}s, replan "
+            f"{','.join(kill.get('plan_flips', [])) or 'none'}; "
+            f"max replan regret {fault_out['max_replan_regret']:+.4f} "
+            f"({fault_out['n_plan_flips']} flips)"
         )
     if args.summary_out:
         with open(args.summary_out, "w") as f:

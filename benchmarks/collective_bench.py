@@ -227,19 +227,30 @@ def _bench_overlap_step(repeats: int, accum: int = 4):
     regret = (measured[chosen] - t_best) / t_best
     # one-point dispatch-cost fit: attribute the overlapped step's
     # measured-minus-modelled gap to its bucket issues (depth per sync,
-    # accum syncs per step); feeds calibration meta / DEFAULT_DISPATCH_COST
+    # accum syncs per step).  The fit MUST be taken against the
+    # dispatch-FREE model: ``forced.t_step`` above already carries the
+    # previously fitted cost (resolve_dispatch_cost reads the committed
+    # fixture), so fitting against it would double-count the overhead and
+    # drift the fixture upward on every regeneration.
+    from repro.comm.grad_sync import resolve_dispatch_cost
     from repro.core.simulator import fit_dispatch_cost
 
+    forced0 = train_steps.plan_pod_sync(
+        cfg, over, pods, chips_per_pod=mesh.devices.size // pods,
+        dispatch_cost=0.0,
+    )
     n_issues = depth * accum
-    dispatch_fit = fit_dispatch_cost(t_over, forced.t_step, n_issues)
+    dispatch_fit = fit_dispatch_cost(t_over, forced0.t_step, n_issues)
     print(f"[bench] dispatch-cost fit: {dispatch_fit * 1e6:.1f}us/issue "
-          f"over {n_issues} issues")
+          f"over {n_issues} issues "
+          f"(planning default {resolve_dispatch_cost() * 1e6:.1f}us)")
     return dict(
         bench="train_step_overlap",
         arch=cfg.name,
         accum_steps=accum,
         mesh=dict(pod=pods, data=n // pods, model=1),
         dispatch_cost_fit_us=dispatch_fit * 1e6,
+        dispatch_cost_used_us=resolve_dispatch_cost() * 1e6,
         dispatch_fit_n_issues=n_issues,
         rows=rows,
         decision=dict(

@@ -1,0 +1,197 @@
+"""Fault-tolerance benchmark: the BENCH_fault.json artifact.
+
+Runs every fault scenario twice -- once with its faults armed and once as
+its ``healthy()`` twin on the identical seeded trace -- so the artifact
+tracks the *cost of the fault* (p99 under fault over healthy p99, shed and
+retried requests, recovery wall-clock) across commits, exactly like
+BENCH_comm / BENCH_step / BENCH_serve track their trajectories.  The
+``kill_recovery`` scenario exercises the full loop in-sim: node kill ->
+watchdog detection -> shrunk-topology re-plan (the recorded
+``plan_before``/``plan_after`` strategies flip) -> KV/state restore ->
+resume.
+
+The artifact also carries a **re-plan regret** table: for each degraded
+topology (DCN brownout, node loss) it prices the healthy plan's strategy
+on the degraded links against the re-planned best, per payload size.
+Regret is ``(t_replanned - t_stale) / t_stale`` -- <= 0 by construction
+when the planner is consistent, so ``check_regret.py --fault-artifact``
+gates it at zero: a positive value means re-planning made things WORSE,
+i.e. the cost model's strategy ranking broke on degraded parameters.
+
+    python -m benchmarks.fault_bench --smoke --out BENCH_fault.json
+    python -m benchmarks.fault_bench --calibration calibration.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+FAULT_SCENARIOS = ["kill_recovery", "brownout_burst", "straggler"]
+SMOKE_SCENARIOS = ["kill_recovery"]
+
+# payload sizes for the re-plan regret table: spans the alpha-dominated
+# regime (64KB, the serving sync scale where node loss flips the
+# strategy) through the beta-dominated one where bandwidth brownouts bite
+REGRET_SIZES = [1 << 16, 1 << 20, 1 << 24, 1 << 27]
+
+
+def _scenario_rows(names, calibration):
+    from repro.sim import get_scenario, run_scenario
+
+    rows = []
+    for name in names:
+        sc = get_scenario(name)
+        faulted = run_scenario(sc, "sim", calibration=calibration)
+        healthy = run_scenario(sc.healthy(), "sim", calibration=calibration)
+        p99_ratio = (
+            faulted["latency_p99_s"] / healthy["latency_p99_s"]
+            if healthy["latency_p99_s"] else None
+        )
+        recoveries = faulted.get("recoveries", [])
+        row = dict(
+            scenario=name,
+            fault_kinds=[f["spec"]["kind"] for f in faulted.get("faults", [])
+                         if f.get("action") == "apply"],
+            n_requests=faulted["n_requests"],
+            n_completed=faulted["n_completed"],
+            n_shed=faulted.get("n_shed", 0),
+            n_retries=faulted.get("n_retries", 0),
+            n_slow_steps=faulted.get("n_slow_steps", 0),
+            n_recoveries=faulted.get("n_recoveries", 0),
+            recovery_time_s=faulted.get("recovery_time_s", 0.0),
+            recoveries=recoveries,
+            latency_p50_s=faulted["latency_p50_s"],
+            latency_p99_s=faulted["latency_p99_s"],
+            healthy_p50_s=healthy["latency_p50_s"],
+            healthy_p99_s=healthy["latency_p99_s"],
+            p99_over_healthy=p99_ratio,
+            throughput_rps=faulted["throughput_rps"],
+            healthy_throughput_rps=healthy["throughput_rps"],
+        )
+        rows.append(row)
+        flips = [f"{r['plan_before']}->{r['plan_after']}" for r in recoveries]
+        print(
+            f"[fault_bench] {name}: p99 {faulted['latency_p99_s']:.3f}s vs "
+            f"healthy {healthy['latency_p99_s']:.3f}s "
+            f"(x{p99_ratio:.2f}), shed={row['n_shed']} "
+            f"retries={row['n_retries']} recoveries={row['n_recoveries']}"
+            + (f" replan={','.join(flips)}" if flips else "")
+            + (f" recovery={row['recovery_time_s']:.3f}s"
+               if row['n_recoveries'] else "")
+        )
+    return rows
+
+
+def _replan_regret_rows(calibration, fanout=(2, 4, 2), sizes=REGRET_SIZES):
+    """Price stale-plan vs re-planned collectives on degraded topologies."""
+    from repro.sim import Engine, SimCluster
+
+    def cluster_for(topo=None):
+        eng = Engine()
+        if calibration is not None:
+            cl = SimCluster.from_calibration(eng, calibration, fanout=fanout)
+        else:
+            cl = SimCluster.from_preset(eng, "v5e_3tier", fanout=fanout)
+        if topo is not None:
+            cl = SimCluster(eng, topo)
+        return cl
+
+    base = cluster_for()
+    variants = [
+        ("dcn_brownout",
+         base.topo.degraded(tier="dcn", beta_scale=8.0, alpha_add=20e-3)),
+        ("node_loss", base.topo.shrunk([0])),
+    ]
+    rows = []
+    for label, topo in variants:
+        degraded = cluster_for(topo)
+        for nbytes in sizes:
+            stale = base.plan_for("all_reduce", float(nbytes))
+            replanned = degraded.plan_for("all_reduce", float(nbytes))
+            t_stale = degraded.collective_time(
+                "all_reduce", float(nbytes), strategy=stale
+            )
+            t_replanned = degraded.collective_time(
+                "all_reduce", float(nbytes), strategy=replanned
+            )
+            regret = (t_replanned - t_stale) / t_stale if t_stale else 0.0
+            rows.append(dict(
+                degradation=label,
+                collective="all_reduce",
+                nbytes=nbytes,
+                strategy_stale=stale,
+                strategy_replanned=replanned,
+                flipped=replanned != stale,
+                t_stale_us=t_stale * 1e6,
+                t_replanned_us=t_replanned * 1e6,
+                regret=regret,
+            ))
+            print(
+                f"[fault_bench] replan {label} {nbytes >> 10}KB: "
+                f"{stale} ({t_stale * 1e6:.1f}us) -> "
+                f"{replanned} ({t_replanned * 1e6:.1f}us) "
+                f"regret {regret:+.3f}"
+            )
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="kill_recovery scenario only (the CI mode)")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated fault scenario names")
+    ap.add_argument("--calibration", default="",
+                    help="calibration JSON for the link tiers")
+    ap.add_argument("--out", default="BENCH_fault.json")
+    args = ap.parse_args(argv)
+
+    if args.scenarios:
+        names = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    else:
+        names = SMOKE_SCENARIOS if args.smoke else FAULT_SCENARIOS
+    calibration = args.calibration or None
+
+    rows = _scenario_rows(names, calibration)
+    replan = _replan_regret_rows(calibration)
+
+    kill = next((r for r in rows if r["scenario"] == "kill_recovery"), None)
+    artifact = dict(
+        bench="fault_sim",
+        smoke=args.smoke,
+        calibrated=calibration is not None,
+        scenarios=rows,
+        replan_regret=replan,
+        max_replan_regret=max((r["regret"] for r in replan), default=0.0),
+        n_plan_flips=sum(1 for r in replan if r["flipped"]),
+        kill_recovery=(
+            dict(
+                n_recoveries=kill["n_recoveries"],
+                recovery_time_s=kill["recovery_time_s"],
+                n_completed=kill["n_completed"],
+                n_requests=kill["n_requests"],
+                p99_over_healthy=kill["p99_over_healthy"],
+                plan_flips=[
+                    f"{r['plan_before']}->{r['plan_after']}"
+                    for r in kill["recoveries"]
+                ],
+            ) if kill else None
+        ),
+    )
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(
+        f"[fault_bench] {len(rows)} scenarios + {len(replan)} replan rows "
+        f"-> {args.out} (max replan regret "
+        f"{artifact['max_replan_regret']:+.3f}, "
+        f"{artifact['n_plan_flips']} flips)"
+    )
+
+
+if __name__ == "__main__":
+    main()

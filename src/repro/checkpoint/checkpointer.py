@@ -27,11 +27,24 @@ import json
 import shutil
 import threading
 import time
+import zipfile
 import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(IOError):
+    """A committed checkpoint failed validation (truncated arrays, missing
+    manifest entries, CRC mismatch).  Names the bad step so operators can
+    quarantine it; ``restore`` falls back to the previous complete step
+    automatically when the step wasn't explicitly requested."""
+
+    def __init__(self, step: int, reason: str):
+        super().__init__(f"checkpoint step {step} is corrupt: {reason}")
+        self.step = step
+        self.reason = reason
 
 
 def _flatten(tree):
@@ -120,23 +133,78 @@ class Checkpointer:
         return max(steps) if steps else None
 
     def restore(self, tree_like, step: int | None = None, validate: bool = True):
-        """Restore into the structure of ``tree_like`` (arrays or SDS)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        """Restore into the structure of ``tree_like`` (arrays or SDS).
+
+        With ``step=None`` (the usual resume path), a checkpoint that
+        committed but is damaged on disk -- truncated ``arrays.npz``,
+        missing manifest or array entries, CRC mismatch -- is skipped with
+        a fallback to the next-older complete step, so one bad snapshot
+        (e.g. a crash racing the final fsync) never bricks a resume.  An
+        explicitly requested ``step`` raises ``CheckpointCorruptError``
+        instead: the caller asked for that exact state.
+        """
+        if step is not None:
+            return self._restore_step(tree_like, step, validate)
+        candidates = sorted(self._complete_steps(), reverse=True)
+        if not candidates:
             raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        errors: list[CheckpointCorruptError] = []
+        for cand in candidates:
+            try:
+                return self._restore_step(tree_like, cand, validate)
+            except CheckpointCorruptError as exc:
+                errors.append(exc)
+        raise CheckpointCorruptError(
+            errors[0].step,
+            "every complete checkpoint failed validation: "
+            + "; ".join(e.reason for e in errors),
+        )
+
+    def _restore_step(self, tree_like, step: int, validate: bool):
         d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        data = np.load(d / "arrays.npz")
-        flat, treedef = _flatten(tree_like)
+        if not (d / "manifest.json").exists():
+            raise FileNotFoundError(f"no checkpoint for step {step} in {self.dir}")
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            raise CheckpointCorruptError(step, f"unreadable manifest: {exc}")
+        try:
+            data = np.load(d / "arrays.npz")
+            npz_keys = set(data.files)
+        except (OSError, ValueError, zipfile.BadZipFile) as exc:
+            raise CheckpointCorruptError(
+                step, f"unreadable arrays.npz (truncated write?): {exc}"
+            )
+        flat, _ = _flatten(tree_like)
         leaves = []
         for key, like in flat.items():
-            arr = data[key]
-            meta = manifest["leaves"][key]
+            meta = manifest["leaves"].get(key)
+            if meta is None:
+                raise CheckpointCorruptError(
+                    step, f"manifest is missing leaf {key!r}"
+                )
+            if key not in npz_keys:
+                raise CheckpointCorruptError(
+                    step, f"arrays.npz is missing leaf {key!r}"
+                )
+            try:
+                arr = data[key]
+            except (OSError, ValueError, zipfile.BadZipFile) as exc:
+                raise CheckpointCorruptError(
+                    step, f"leaf {key!r} is unreadable (truncated?): {exc}"
+                )
+            if list(arr.shape) != list(meta["shape"]):
+                raise CheckpointCorruptError(
+                    step,
+                    f"leaf {key!r} truncated: manifest says {meta['shape']}, "
+                    f"file holds {list(arr.shape)}",
+                )
             if validate:
                 crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
                 if crc != meta["crc"]:
-                    raise IOError(f"checksum mismatch for {key} at step {step}")
+                    raise CheckpointCorruptError(
+                        step, f"checksum mismatch for {key}"
+                    )
             if tuple(arr.shape) != tuple(like.shape):
                 raise ValueError(
                     f"shape mismatch for {key}: ckpt {arr.shape} vs {like.shape}"

@@ -72,6 +72,12 @@ from .grad_sync import (  # noqa: F401
     pod_sync_topology,
     select_pod_sync,
 )
+from .health import (  # noqa: F401
+    ReplanMonitor,
+    RetryPolicy,
+    StepWatchdog,
+    retry_with_backoff,
+)
 from .impls import (  # noqa: F401
     Q8_BLOCK,
     Q8_GLOBAL_FACTOR,

@@ -1,0 +1,191 @@
+"""Runtime health for planned communication: watchdog, retry, replan.
+
+The planner prices a step before it runs; this module watches what the
+step *actually* took and reacts when reality drifts from the model --
+the robustness counterpart of calibration.  Three pieces, all plain
+Python (no jax) so the simulator and the live trainer share them:
+
+* ``StepWatchdog`` -- an EWMA drift detector seeded from the *modelled*
+  step time.  ``observe(t)`` classifies each step as ``ok`` (within the
+  drift band), ``slow`` (over the band: the fitted parameters have
+  drifted and a refit/re-plan is warranted), or ``lost`` (over the
+  timeout threshold: a participant is presumed dead -- the elastic
+  recovery path, not a re-plan, is the answer).  ``timeout_s`` is the
+  detection latency a fault scenario charges for a node kill.
+
+* ``RetryPolicy`` / ``retry_with_backoff`` -- bounded exponential backoff
+  around executable collectives.  Transient failures (a dropped
+  connection mid all-reduce) retry up to ``max_attempts`` with
+  deterministic delays; anything still failing propagates.  The
+  simulator prices the same delays via ``RetryPolicy.delay`` without
+  sleeping.
+
+* ``ReplanMonitor`` -- glues a watchdog to a ``replan`` callback with
+  hysteresis: ``patience`` consecutive slow steps trigger one replan,
+  then observation restarts against the new expectation.  The trainer
+  and the serving loop both drive their degraded-topology re-planning
+  through this object.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff: attempt k waits base * backoff**k."""
+
+    max_attempts: int = 4
+    base_delay_s: float = 0.05
+    backoff: float = 2.0
+    max_delay_s: float = 2.0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_delay_s < 0 or self.max_delay_s < 0:
+            raise ValueError("delays must be >= 0")
+        if self.backoff < 1.0:
+            raise ValueError("backoff must be >= 1")
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (0 = first retry)."""
+        return min(self.base_delay_s * self.backoff ** attempt,
+                   self.max_delay_s)
+
+    def total_delay(self, n_retries: int) -> float:
+        """Summed backoff across ``n_retries`` consecutive retries --
+        what the simulator charges a step that hit transient drops."""
+        return sum(self.delay(k) for k in range(n_retries))
+
+
+def retry_with_backoff(fn, policy: RetryPolicy = RetryPolicy(), *,
+                       retriable=(RuntimeError, OSError),
+                       sleep=_time.sleep, on_retry=None):
+    """Run ``fn()``; on a retriable exception, back off and retry.
+
+    Raises the last exception after ``policy.max_attempts`` total
+    attempts.  ``on_retry(attempt, exc)`` is called before each backoff
+    (logging / metrics hook); ``sleep`` is injectable so tests and the
+    simulator stay wall-clock-free.
+    """
+    last = None
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn()
+        except retriable as exc:
+            last = exc
+            if attempt + 1 >= policy.max_attempts:
+                break
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            sleep(policy.delay(attempt))
+    raise last
+
+
+@dataclass
+class StepWatchdog:
+    """EWMA drift detector + node-loss timeout over per-step times.
+
+    ``expected_s`` seeds the EWMA with the *modelled* step time, so the
+    very first observation already has a meaningful reference; the EWMA
+    then tracks slow drift (thermal, congestion) without tripping on it,
+    while the ``drift_band`` catches genuine regime change.
+    """
+
+    expected_s: float
+    alpha: float = 0.2            # EWMA smoothing weight for new samples
+    drift_band: float = 1.5       # slow when t > band * max(ewma, expected)
+    timeout_factor: float = 5.0   # lost when t > factor * max(ewma, expected)
+    ewma_s: float = field(init=False)
+    n_observed: int = field(init=False, default=0)
+    n_slow: int = field(init=False, default=0)
+
+    def __post_init__(self) -> None:
+        if self.expected_s <= 0:
+            raise ValueError(f"expected_s must be > 0, got {self.expected_s}")
+        if not 0 < self.alpha <= 1:
+            raise ValueError("alpha must be in (0, 1]")
+        if not 1 < self.drift_band < self.timeout_factor:
+            raise ValueError(
+                "need 1 < drift_band < timeout_factor, got "
+                f"{self.drift_band} / {self.timeout_factor}"
+            )
+        self.ewma_s = float(self.expected_s)
+
+    @property
+    def reference_s(self) -> float:
+        """What a healthy step should take right now."""
+        return max(self.ewma_s, self.expected_s)
+
+    @property
+    def slow_threshold_s(self) -> float:
+        return self.drift_band * self.reference_s
+
+    @property
+    def timeout_s(self) -> float:
+        """Give-up threshold: past this, a participant is presumed lost.
+        This is the detection latency charged for a node kill."""
+        return self.timeout_factor * self.reference_s
+
+    def observe(self, t_step: float) -> str:
+        """Classify one step time: 'ok' | 'slow' | 'lost'.
+
+        Only non-pathological samples feed the EWMA -- a timeout must not
+        drag the reference up and mask the next fault.
+        """
+        self.n_observed += 1
+        if t_step > self.timeout_s:
+            return "lost"
+        verdict = "ok"
+        if t_step > self.slow_threshold_s:
+            self.n_slow += 1
+            verdict = "slow"
+        self.ewma_s += self.alpha * (t_step - self.ewma_s)
+        return verdict
+
+    def rebase(self, expected_s: float) -> None:
+        """Reset against a new modelled step time (after a re-plan)."""
+        if expected_s <= 0:
+            raise ValueError(f"expected_s must be > 0, got {expected_s}")
+        self.expected_s = float(expected_s)
+        self.ewma_s = float(expected_s)
+        self.n_slow = 0
+
+
+class ReplanMonitor:
+    """Watchdog + hysteresis + a replan callback.
+
+    ``observe(t)`` forwards to the watchdog; after ``patience``
+    *consecutive* slow steps it calls ``replan()`` once and rebases the
+    watchdog on the value ``replan`` returns (the newly modelled step
+    time).  'lost' verdicts pass straight through -- node loss needs the
+    recovery path, not a refit.
+    """
+
+    def __init__(self, watchdog: StepWatchdog, replan, *,
+                 patience: int = 3) -> None:
+        if patience < 1:
+            raise ValueError("patience must be >= 1")
+        self.watchdog = watchdog
+        self.replan = replan
+        self.patience = patience
+        self.slow_streak = 0
+        self.n_replans = 0
+
+    def observe(self, t_step: float) -> str:
+        verdict = self.watchdog.observe(t_step)
+        if verdict == "slow":
+            self.slow_streak += 1
+            if self.slow_streak >= self.patience:
+                new_expected = self.replan()
+                self.n_replans += 1
+                self.slow_streak = 0
+                if new_expected is not None:
+                    self.watchdog.rebase(float(new_expected))
+                verdict = "replanned"
+        elif verdict == "ok":
+            self.slow_streak = 0
+        return verdict

@@ -270,12 +270,13 @@ def simulate_pipelined(build, m: float, n_chunks: int,
 
 # Per-issue dispatch overhead charged on the compute path for every bucket
 # launched during an overlapped sync (host-side enqueue of an interleaved
-# collective).  Default fit from the committed BENCH_step.json fixture:
-# ``fit_dispatch_cost`` on its overlapped row gives
-# max(0, (83810.6us - 92781.4us) / 2) = 0 -- the fake-mesh measurement runs
-# FASTER than the model, so no positive overhead is observable there.  Real
-# hardware fits land in calibration meta ("dispatch_cost") and override
-# this via ``comm.grad_sync.plan_pod_sync``.
+# collective).  This constant is the LAST-RESORT fallback only: overlap
+# pricing resolves the cost through ``comm.grad_sync.resolve_dispatch_cost``,
+# which prefers calibration meta ("dispatch_cost"), then the committed
+# BENCH_step.json fixture's ``dispatch_cost_fit_us`` (refreshed by each
+# bench run via ``fit_dispatch_cost`` against the dispatch-free model).
+# With neither available -- installed package, fresh clone -- assume zero
+# overhead rather than invent one.
 DEFAULT_DISPATCH_COST = 0.0
 
 

@@ -347,6 +347,119 @@ class ClusterTopology:
             degrees=tuple(degrees) if degrees is not None else None,
         )
 
+    # ------------------------------------------------------------------
+    # degraded-topology functional updates (the fault layer's surface)
+    # ------------------------------------------------------------------
+    def degraded(
+        self,
+        tier: int | str = -1,
+        *,
+        beta_scale: float = 1.0,
+        alpha_add: float = 0.0,
+        degree_drop: int = 0,
+    ) -> "ClusterTopology":
+        """This topology with one tier's links degraded.
+
+        ``tier`` selects the degraded level by index (negative indices OK)
+        or by name; ``beta_scale`` divides the tier's bandwidth (2.0 = half
+        bandwidth), ``alpha_add`` adds startup latency (a latency spike),
+        and ``degree_drop`` removes that many of the tier's Rule-3 parallel
+        links (only meaningful where ``degrees[tier] > 0``).
+
+        A degraded inner tier also bounds every message routed over the
+        tiers outside it, so outer tiers are lifted to stay at least as
+        slow (Rule-2 monotonicity is preserved instead of violated).
+        Re-planning on the returned topology is the whole point: strategy
+        crossovers shift when per-tier alpha/beta shift.
+        """
+        if beta_scale < 1.0 or alpha_add < 0.0:
+            raise ValueError(
+                "degraded() only degrades: beta_scale >= 1 and "
+                f"alpha_add >= 0, got {beta_scale}/{alpha_add}"
+            )
+        tix = self._tier_index_of(tier)
+        tiers = list(self.tiers)
+        t = tiers[tix]
+        tiers[tix] = LinkTier(
+            t.name, alpha=t.alpha + alpha_add, beta=t.beta * beta_scale
+        )
+        for j in range(tix + 1, len(tiers)):
+            outer = tiers[j]
+            tiers[j] = LinkTier(
+                outer.name,
+                alpha=max(outer.alpha, tiers[j - 1].alpha),
+                beta=max(outer.beta, tiers[j - 1].beta),
+            )
+        degrees = list(self.degrees)
+        if degree_drop:
+            if degrees[tix] == 0:
+                raise ValueError(
+                    f"tier {tix} has unlimited links; degree_drop needs a "
+                    "finite Rule-3 degree"
+                )
+            degrees[tix] = max(1, degrees[tix] - int(degree_drop))
+        return ClusterTopology(
+            tiers=tuple(tiers),
+            fanout=self.fanout,
+            degree=degrees[-1],
+            write_cost=self.write_cost,
+            assemble_cost=self.assemble_cost,
+            degrees=tuple(degrees),
+        )
+
+    def shrunk(self, lost_nodes, level: int | None = None) -> "ClusterTopology":
+        """The surviving topology after losing whole outermost groups.
+
+        ``lost_nodes`` is either a count of lost level-``level`` groups
+        (default: outermost -- machines/pods) or an iterable of lost *proc*
+        ids, which are mapped to the distinct groups containing them (a
+        homogeneous topology only cares how many survive, not which).  The
+        elastic-recovery path plans pod sync on this shape after node loss.
+        """
+        if level is None:
+            level = self.n_tiers - 1
+        if not 0 <= level < self.n_tiers:
+            raise ValueError(f"level {level} out of range")
+        if isinstance(lost_nodes, int):
+            n_lost = lost_nodes
+        else:
+            n_lost = len({self.group_of(int(p), level) for p in lost_nodes})
+        if n_lost < 0:
+            raise ValueError(f"lost_nodes must be >= 0, got {n_lost}")
+        survivors = self.fanout[level] - n_lost
+        if survivors < 1:
+            raise ValueError(
+                f"cannot lose {n_lost} of {self.fanout[level]} "
+                f"level-{level} groups: no survivors"
+            )
+        fanout = list(self.fanout)
+        fanout[level] = survivors
+        return ClusterTopology(
+            tiers=self.tiers,
+            fanout=tuple(fanout),
+            degree=self.degree,
+            write_cost=self.write_cost,
+            assemble_cost=self.assemble_cost,
+            degrees=self.degrees,
+        )
+
+    def _tier_index_of(self, tier: int | str) -> int:
+        """Resolve a tier selector (index, negative index, or name)."""
+        if isinstance(tier, str):
+            for i, t in enumerate(self.tiers):
+                if t.name == tier:
+                    return i
+            raise ValueError(
+                f"no tier named {tier!r} "
+                f"(have {[t.name for t in self.tiers]})"
+            )
+        tix = int(tier)
+        if tix < 0:
+            tix += self.n_tiers
+        if not 0 <= tix < self.n_tiers:
+            raise ValueError(f"tier index {tier} out of range")
+        return tix
+
     def with_shape(self, fanout, degree: int | None = None) -> "ClusterTopology":
         """Same tier parameters on a different shape.
 

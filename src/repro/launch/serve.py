@@ -29,20 +29,25 @@ def _run_scenario(args) -> None:
     metrics = run_scenario(
         sc, args.mode, calibration=args.calibration,
         rate_scale=args.rate_scale,
+        live_timeout_s=args.live_timeout or None,
     )
     if args.out:
         with open(args.out, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
     print(f"[serve] scenario={sc.name} mode={args.mode} "
           f"({sc.doc or 'no description'})")
-    for k in ("n_requests", "n_completed", "throughput_rps",
+    for k in ("n_requests", "n_completed", "n_errors", "throughput_rps",
               "throughput_tok_s", "latency_p50_s", "latency_p99_s",
               "ttft_p50_s", "ttft_p99_s", "step_p50_s", "step_p99_s"):
         v = metrics.get(k)
+        if v is None and k == "n_errors":
+            continue
         if isinstance(v, float):
             print(f"[serve]   {k} = {v:.6g}")
         else:
             print(f"[serve]   {k} = {v}")
+    for row in metrics.get("errors", []):
+        print(f"[serve]   ERROR rid={row['rid']}: {row['error']}")
 
 
 def _run_live_batch(args) -> None:
@@ -104,6 +109,11 @@ def main() -> None:
                     help="calibration JSON for the sim's link tiers")
     ap.add_argument("--rate-scale", type=float, default=1.0,
                     help="multiply the scenario's offered load")
+    ap.add_argument("--live-timeout", type=float, default=0.0,
+                    help="per-request deadline in seconds for --mode live: "
+                         "a generate call exceeding it is recorded as an "
+                         "error row instead of wedging the replay "
+                         "(0 = no deadline)")
     ap.add_argument("--out", help="write scenario metrics JSON here")
     args = ap.parse_args()
 

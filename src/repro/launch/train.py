@@ -69,6 +69,13 @@ def main() -> None:
                          "'v5e_3tier' = ICI / host-PCIe / DCN hierarchy)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--kill-pod-at", type=int, default=-1,
+                    help="inject a pod loss at this step and exercise the "
+                         "elastic recovery path: restore the newest "
+                         "checkpoint, re-mesh onto the surviving pods, "
+                         "re-plan the pod sync on the shrunk topology, and "
+                         "continue (needs --pods >= 2; --global-batch must "
+                         "divide by pods-1)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 pod mesh (requires 256 devices)")
     ap.add_argument("--pods", type=int, default=1,
@@ -156,23 +163,82 @@ def main() -> None:
         global_batch=args.global_batch, seed=args.seed,
     ))
 
-    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    # the mesh and jitted step live in a mutable holder so the elastic
+    # recovery path can swap both under the same stepper closure
+    holder = {"mesh": mesh, "jitted": jax.jit(step_fn, donate_argnums=(0, 1))}
 
     def stepper(p, o, b):
         # Trace inside the mesh context so the pod-sync sharding
         # constraints (PartitionSpecs over 'pod') resolve instead of
         # falling back (see comm.grad_sync._pin).
-        with mesh:
-            return jitted(p, o, b)
+        with holder["mesh"]:
+            return holder["jitted"](p, o, b)
+
+    recover = None
+    if args.kill_pod_at >= 0:
+        if n_pods < 2:
+            raise SystemExit("--kill-pod-at needs --pods >= 2")
+        if args.global_batch % max(n_pods - 1, 1):
+            raise SystemExit(
+                f"--global-batch {args.global_batch} must divide by the "
+                f"surviving pod count {n_pods - 1}"
+            )
+
+        def recover(params, opt_state):
+            from jax.sharding import Mesh
+            from jax.sharding import PartitionSpec as P
+
+            from repro.checkpoint.checkpointer import elastic_reshard
+
+            # pod 0 died: keep the survivors' devices, same axis names
+            old = holder["mesh"]
+            surv = old.devices.shape[0] - 1
+            new_mesh = Mesh(old.devices[1:], old.axis_names)
+            # re-plan the pod sync on the shrunk topology from the USER'S
+            # requested format (a planner pick on N pods shouldn't pin the
+            # choice on N-1: crossovers flip as the DCN group shrinks)
+            tcfg_req = dataclasses.replace(
+                tcfg, pod_sync=args.pod_sync,
+                bucket_bytes=args.bucket_bytes, overlap=overlap,
+            )
+            decision2 = train_steps.plan_pod_sync(
+                cfg, tcfg_req, surv,
+                chips_per_pod=new_mesh.devices.size // surv,
+            )
+            tcfg2 = dataclasses.replace(
+                tcfg_req, pod_sync=decision2.fmt,
+                bucket_bytes=decision2.bucket_bytes,
+                overlap=decision2.overlap,
+            )
+            print(f"[train] re-planned on {surv} pod(s): "
+                  f"{decision2.describe()}")
+            step2, _ = train_steps.make_train_step(
+                cfg, tcfg2, ocfg, new_mesh, pol
+            )
+            pspecs = rules.param_specs(cfg, params, pol)
+            params = elastic_reshard(params, new_mesh, pspecs)
+            opt_state = elastic_reshard(
+                opt_state, new_mesh,
+                type(opt_state)(step=P(), m=pspecs, v=pspecs),
+            )
+            holder["mesh"] = new_mesh
+            holder["jitted"] = jax.jit(step2, donate_argnums=(0, 1))
+            return stepper, params, opt_state
 
     lcfg = train_loop.LoopConfig(
         total_steps=args.steps, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, log_every=10,
+        lose_node_at_step=args.kill_pod_at,
     )
     t0 = time.time()
-    state = train_loop.run(stepper, params, opt_state, data, lcfg)
+    state = train_loop.run(stepper, params, opt_state, data, lcfg,
+                           recover=recover)
     dt = time.time() - t0
     tok_s = args.steps * args.global_batch * args.seq / dt
+    for rec in state.recoveries:
+        print(f"[train] elastic recovery: lost a pod at step "
+              f"{rec['lost_at_step']}, resumed at {rec['resumed_at_step']} "
+              f"in {rec['recovery_time_s']:.2f}s")
     print(f"[train] done: {args.steps} steps in {dt:.1f}s "
           f"({tok_s:,.0f} tok/s); loss {state.losses[0]:.3f} -> {state.losses[-1]:.3f}")
 

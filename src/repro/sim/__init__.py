@@ -19,6 +19,13 @@ real serving engine, lazily.
 
 from .cluster import SimCluster, SimNode
 from .engine import Engine, Event, LinkPool, SimTimeError
+from .faults import (
+    FAULT_KINDS,
+    FaultInjector,
+    FaultSpec,
+    random_faults,
+    scale_faults,
+)
 from .scenario import (
     SCENARIOS,
     Scenario,
@@ -37,6 +44,11 @@ __all__ = [
     "SimTimeError",
     "SimCluster",
     "SimNode",
+    "FAULT_KINDS",
+    "FaultSpec",
+    "FaultInjector",
+    "random_faults",
+    "scale_faults",
     "Request",
     "Trace",
     "WorkloadConfig",

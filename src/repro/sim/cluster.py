@@ -77,16 +77,25 @@ class SimCluster:
     ) -> None:
         self.engine = engine
         self.topo = topo
+        # the pristine baseline the fault layer composes degradations onto
+        self.healthy_topo = topo
+        self.topo_version = 0
         self.nodes = [
             SimNode(i, kv_capacity_bytes=kv_capacity_bytes)
             for i in range(topo.n_procs)
         ]
+        self.dead_nodes: set[int] = set()
+        self._compute_scale: dict[int, float] = {}
+        self._drops_remaining = 0
+        self._drops_until = 0.0
         # Rule-3 pools, lazily created per (tier, group) and direction --
         # the same keying simulate_async uses, but persistent across the
         # whole simulated run instead of per-schedule.
         self._out: dict[tuple[int, int], LinkPool] = {}
         self._in: dict[tuple[int, int], LinkPool] = {}
-        # (collective, strategy, nbytes, root) -> exact simulate_rounds time
+        # (version, collective, strategy, nbytes, root) -> exact
+        # simulate_rounds time; the version component makes every topology
+        # change (degrade, shrink, restore) invalidate stale prices.
         self._collective_cache: dict[tuple, float] = {}
         self.bytes_moved = 0.0
         self.n_transfers = 0
@@ -132,6 +141,127 @@ class SimCluster:
         if fanout is not None:
             topo = topo.with_shape(tuple(fanout))
         return cls(engine, topo, kv_capacity_bytes=kv_capacity_bytes)
+
+    # -- fault surface ---------------------------------------------------
+
+    def set_topology(self, topo: ClusterTopology) -> None:
+        """Swap in a (typically degraded) topology view.
+
+        Bumps ``topo_version`` so memoized collective prices are stale, and
+        resizes existing Rule-3 pools whose tier degree changed, preserving
+        in-flight reservations.  ``healthy_topo`` is untouched: the fault
+        layer always composes degradations onto the pristine baseline.
+        """
+        if topo.n_procs != self.topo.n_procs:
+            raise ValueError(
+                f"set_topology cannot change the proc count "
+                f"({self.topo.n_procs} -> {topo.n_procs}); kill nodes or "
+                "rebuild the cluster for a shrunk shape"
+            )
+        self.topo = topo
+        self.topo_version += 1
+        now = self.engine.now
+        for pools in (self._out, self._in):
+            for (tix, _), pool in pools.items():
+                pool.set_capacity(now, topo.tier_degree(tix))
+
+    def degrade_tier(self, tier: int | str = -1, *, beta_scale: float = 1.0,
+                     alpha_add: float = 0.0) -> None:
+        """Degrade one tier of the CURRENT topology view (composable)."""
+        self.set_topology(
+            self.topo.degraded(tier, beta_scale=beta_scale,
+                               alpha_add=alpha_add)
+        )
+
+    def restore_topology(self) -> None:
+        """Back to the healthy baseline (link faults only; nodes separate)."""
+        self.set_topology(self.healthy_topo)
+
+    def shrink_to(self, topo: ClusterTopology) -> None:
+        """Rebuild onto the surviving shape after node loss (elastic
+        recovery).  Unlike ``set_topology`` this DOES change the proc
+        count: nodes are recreated (callers re-admit and re-reserve KV),
+        the dead set clears (the shrunk shape contains only survivors),
+        and ``healthy_topo`` rebases so later link faults compose onto
+        the surviving cluster."""
+        if topo.n_procs > self.topo.n_procs:
+            raise ValueError(
+                f"shrink_to grows the cluster ({self.topo.n_procs} -> "
+                f"{topo.n_procs}); recovery only shrinks"
+            )
+        kv_cap = (
+            self.nodes[0].kv_capacity_bytes if self.nodes else float("inf")
+        )
+        self.topo = topo
+        self.healthy_topo = topo
+        self.topo_version += 1
+        self.nodes = [
+            SimNode(i, kv_capacity_bytes=kv_cap)
+            for i in range(topo.n_procs)
+        ]
+        self.dead_nodes = set()
+        self._compute_scale = {}
+        self._out.clear()
+        self._in.clear()
+        self._collective_cache.clear()
+
+    def kill_node(self, node: int) -> None:
+        """Mark a node dead.  Pricing keeps the full-shape schedules until a
+        recovery path installs a shrunk topology -- detection is the health
+        layer's job, not the cluster's."""
+        if not 0 <= node < len(self.nodes):
+            raise ValueError(f"no node {node} (have {len(self.nodes)})")
+        self.dead_nodes.add(node)
+        self.topo_version += 1
+
+    def restore_node(self, node: int) -> None:
+        self.dead_nodes.discard(node)
+        self.topo_version += 1
+
+    @property
+    def alive_nodes(self) -> list[SimNode]:
+        return [n for n in self.nodes if n.node_id not in self.dead_nodes]
+
+    @property
+    def n_alive(self) -> int:
+        return len(self.nodes) - len(self.dead_nodes)
+
+    def set_compute_scale(self, node: int, scale: float) -> None:
+        """Per-node compute slowdown (straggler).  1.0 clears it."""
+        if scale < 1.0:
+            raise ValueError(f"compute scale must be >= 1, got {scale}")
+        if scale == 1.0:
+            self._compute_scale.pop(node, None)
+        else:
+            self._compute_scale[node] = float(scale)
+
+    def compute_multiplier(self) -> float:
+        """Step-level compute slowdown: data-parallel work finishes with
+        the slowest ALIVE participant (a dead straggler stops mattering)."""
+        scales = [
+            s for n, s in self._compute_scale.items()
+            if n not in self.dead_nodes
+        ]
+        return max(scales, default=1.0)
+
+    def add_drops(self, n: int, until: float) -> None:
+        """Arm ``n`` transient collective failures valid until ``until``."""
+        now = self.engine.now
+        if until < now:
+            raise ValueError(f"drop window ends at {until}, now is {now}")
+        if self._drops_remaining and self._drops_until >= now:
+            self._drops_remaining += int(n)
+            self._drops_until = max(self._drops_until, float(until))
+        else:
+            self._drops_remaining = int(n)
+            self._drops_until = float(until)
+
+    def consume_drop(self) -> bool:
+        """True (and decrements) if a collective should fail right now."""
+        if self._drops_remaining <= 0 or self.engine.now > self._drops_until:
+            return False
+        self._drops_remaining -= 1
+        return True
 
     # -- point-to-point -------------------------------------------------
 
@@ -193,7 +323,7 @@ class SimCluster:
             strategy = best_plan(
                 self.topo, collective, nbytes, root=root, lossy_ok=lossy_ok
             ).strategy
-        key = (collective, strategy, float(nbytes), root)
+        key = (self.topo_version, collective, strategy, float(nbytes), root)
         t = self._collective_cache.get(key)
         if t is None:
             spec = registry.get_spec(collective, strategy)
@@ -201,6 +331,14 @@ class SimCluster:
             t = simulate_rounds(sched, check=False)
             self._collective_cache[key] = t
         return t
+
+    def plan_for(self, collective: str, nbytes: float, *, root: int = 0,
+                 lossy_ok: bool = False) -> str:
+        """The strategy ``collective_time`` would pick right now -- exposed
+        so fault scenarios can record when a degradation flips the plan."""
+        return best_plan(
+            self.topo, collective, nbytes, root=root, lossy_ok=lossy_ok
+        ).strategy
 
     def run_collective(
         self,
@@ -239,4 +377,7 @@ class SimCluster:
             "n_transfers": self.n_transfers,
             "n_collectives": self.n_collectives,
             "bytes_moved": self.bytes_moved,
+            "topo_version": self.topo_version,
+            "dead_nodes": sorted(self.dead_nodes),
+            "compute_multiplier": self.compute_multiplier(),
         }

@@ -153,6 +153,38 @@ class LinkPool:
             return now
         return max(now, min(self._free))
 
+    def set_capacity(self, now: float, capacity: int) -> None:
+        """Degrade (or restore) the pool to ``capacity`` links at ``now``.
+
+        Existing reservations are preserved: shrinking keeps the
+        *busiest* links' next-free times (the in-flight transfers don't
+        vanish, the idle links do); growing adds links free at ``now``.
+        Capacity 0 means unlimited, matching the constructor.
+        """
+        capacity = int(capacity)
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        if capacity == self.capacity:
+            return
+        if capacity == 0:
+            self.capacity, self._free = 0, None
+            return
+        free = sorted(self._free or [], reverse=True)[:capacity]
+        free += [float(now)] * (capacity - len(free))
+        self.capacity, self._free = capacity, free
+
+    def fail_until(self, now: float, t_restore: float) -> None:
+        """Mark every link unavailable until ``t_restore`` (a hard outage:
+        nothing can start before then; in-flight work already reserved past
+        ``t_restore`` keeps its later end time)."""
+        if t_restore < now:
+            raise ValueError(
+                f"t_restore {t_restore} is before now {now}"
+            )
+        if not self.capacity:
+            raise ValueError("an unlimited pool cannot fail wholesale")
+        self._free = [max(f, float(t_restore)) for f in self._free]
+
     def acquire(self, now: float, duration: float) -> tuple[float, float]:
         """Reserve one link: returns (start, end) with start >= now."""
         if duration < 0:

@@ -1,0 +1,254 @@
+"""Seeded fault injection for the discrete-event cluster simulator.
+
+``FaultSpec`` describes one scheduled fault; ``FaultInjector`` arms a set of
+specs on an ``Engine`` + ``SimCluster`` pair, applying each fault at its
+start time and reverting it when its window closes.  Four kinds:
+
+* ``link_degrade`` -- one tier's bandwidth is cut (``beta_scale``) and/or
+  its startup latency spikes (``alpha_add``) for ``duration`` seconds.  The
+  injector swaps a ``ClusterTopology.degraded(...)`` view into the cluster,
+  so every collective priced inside the window re-plans and re-prices on
+  the degraded parameters -- strategy crossovers can genuinely flip.
+* ``straggler`` -- one node computes ``compute_scale`` x slower.  Compute is
+  data-parallel across the instance, so a serving/training step runs at the
+  pace of its slowest node (``SimCluster.compute_multiplier``).
+* ``transient_drop`` -- the next ``n_drops`` collectives inside the window
+  fail once each and must be retried (the health layer's bounded backoff
+  prices the retries).
+* ``node_kill`` -- a node dies at ``t_start`` (default: permanently).  The
+  serving layer detects it via its step watchdog and runs the elastic
+  recovery path: shrink, re-plan, restore, resume.
+
+Faults compose: the injector recomputes the *effective* topology from the
+healthy baseline plus every link fault active at that instant, so
+overlapping brownouts stack instead of clobbering each other.
+
+Everything is deterministic.  ``random_faults`` draws a schedule from a
+seed (same seed => identical ``FaultSpec`` list, which the tests pin), and
+the injector itself adds no randomness at all.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, replace
+
+from .cluster import SimCluster
+from .engine import Engine
+
+FAULT_KINDS = ("link_degrade", "straggler", "transient_drop", "node_kill")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.  Fields are kind-specific (see module doc)."""
+
+    kind: str
+    t_start: float
+    duration: float = float("inf")
+    # link_degrade
+    tier: int | str = -1
+    beta_scale: float = 1.0
+    alpha_add: float = 0.0
+    # straggler / node_kill
+    node: int = 0
+    compute_scale: float = 1.0
+    # transient_drop
+    n_drops: int = 1
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} (known: {FAULT_KINDS})"
+            )
+        if self.t_start < 0 or self.duration < 0:
+            raise ValueError(
+                f"fault times must be >= 0, got t_start={self.t_start} "
+                f"duration={self.duration}"
+            )
+        if self.kind == "link_degrade" and (
+            self.beta_scale <= 1.0 and self.alpha_add <= 0.0
+        ):
+            raise ValueError(
+                "link_degrade needs beta_scale > 1 and/or alpha_add > 0"
+            )
+        if self.kind == "straggler" and self.compute_scale <= 1.0:
+            raise ValueError("straggler needs compute_scale > 1")
+        if self.kind == "transient_drop" and self.n_drops < 1:
+            raise ValueError("transient_drop needs n_drops >= 1")
+
+    @property
+    def t_end(self) -> float:
+        return self.t_start + self.duration
+
+    def describe(self) -> dict:
+        out = {"kind": self.kind, "t_start": self.t_start}
+        if self.duration != float("inf"):
+            out["duration"] = self.duration
+        if self.kind == "link_degrade":
+            out.update(tier=self.tier, beta_scale=self.beta_scale,
+                       alpha_add=self.alpha_add)
+        elif self.kind in ("straggler", "node_kill"):
+            out["node"] = self.node
+            if self.kind == "straggler":
+                out["compute_scale"] = self.compute_scale
+        else:
+            out["n_drops"] = self.n_drops
+        return out
+
+
+class FaultInjector:
+    """Arms ``FaultSpec``s on an engine/cluster pair and logs every action.
+
+    ``log`` records ``(time, action, spec)`` tuples in firing order --
+    ``action`` is ``"apply"`` or ``"revert"`` -- so tests can assert that
+    the same seed yields the identical schedule.  Observers registered via
+    ``on_fault`` are called as ``fn(action, spec)`` right after the cluster
+    state changed; the serving layer uses this to notice node kills.
+    """
+
+    def __init__(self, engine: Engine, cluster: SimCluster,
+                 specs=()) -> None:
+        self.engine = engine
+        self.cluster = cluster
+        self.specs = list(specs)
+        self.log: list[tuple[float, str, FaultSpec]] = []
+        self._observers: list = []
+        self._active_links: list[FaultSpec] = []
+        self._armed = False
+
+    def on_fault(self, fn) -> None:
+        self._observers.append(fn)
+
+    def arm(self) -> None:
+        """Schedule every spec's apply (and finite revert) on the engine.
+
+        Fault events carry priority -1 so a fault taking effect at time t
+        is visible to every ordinary event at the same instant.
+        """
+        if self._armed:
+            raise RuntimeError("FaultInjector.arm() called twice")
+        self._armed = True
+        for spec in sorted(self.specs, key=lambda s: (s.t_start, s.kind)):
+            self.engine.at(spec.t_start, self._apply, spec, priority=-1)
+            if spec.duration != float("inf"):
+                self.engine.at(spec.t_end, self._revert, spec, priority=-1)
+
+    # -- state transitions ----------------------------------------------
+
+    def _effective_topology(self):
+        """Healthy baseline + every currently-active link fault."""
+        topo = self.cluster.healthy_topo
+        for spec in self._active_links:
+            topo = topo.degraded(
+                spec.tier, beta_scale=spec.beta_scale,
+                alpha_add=spec.alpha_add,
+            )
+        return topo
+
+    def _apply(self, spec: FaultSpec) -> None:
+        cluster = self.cluster
+        if spec.kind == "link_degrade":
+            self._active_links.append(spec)
+            cluster.set_topology(self._effective_topology())
+        elif spec.kind == "straggler":
+            cluster.set_compute_scale(spec.node, spec.compute_scale)
+        elif spec.kind == "transient_drop":
+            cluster.add_drops(spec.n_drops, until=spec.t_end)
+        elif spec.kind == "node_kill":
+            cluster.kill_node(spec.node)
+        self._record("apply", spec)
+
+    def _revert(self, spec: FaultSpec) -> None:
+        cluster = self.cluster
+        if spec.kind == "link_degrade":
+            self._active_links.remove(spec)
+            cluster.set_topology(self._effective_topology())
+        elif spec.kind == "straggler":
+            cluster.set_compute_scale(spec.node, 1.0)
+        elif spec.kind == "transient_drop":
+            pass  # expiry is enforced by the drop window itself
+        elif spec.kind == "node_kill":
+            cluster.restore_node(spec.node)
+        self._record("revert", spec)
+
+    def refresh(self) -> None:
+        """Re-compose the active link faults onto the cluster's (possibly
+        rebased) healthy topology -- the recovery path calls this after
+        ``shrink_to`` so a brownout outlives a node loss."""
+        if self._active_links:
+            self.cluster.set_topology(self._effective_topology())
+
+    def _record(self, action: str, spec: FaultSpec) -> None:
+        self.log.append((self.engine.now, action, spec))
+        for fn in self._observers:
+            fn(action, spec)
+
+    def schedule(self) -> list[dict]:
+        """The armed schedule as plain dicts (for artifacts and tests)."""
+        rows = []
+        for spec in sorted(self.specs, key=lambda s: (s.t_start, s.kind)):
+            rows.append(spec.describe())
+        return rows
+
+
+def random_faults(
+    seed: int,
+    horizon: float,
+    *,
+    n_faults: int = 3,
+    kinds=("link_degrade", "straggler", "transient_drop"),
+    n_nodes: int = 1,
+    n_tiers: int = 2,
+    mean_duration: float | None = None,
+) -> list[FaultSpec]:
+    """A deterministic random fault schedule: same seed, same list.
+
+    Start times are uniform over the first 80% of the horizon, durations
+    exponential with mean ``mean_duration`` (default ``horizon / 10``),
+    severities drawn from modest ranges (2-8x bandwidth cut, 1.5-4x
+    straggle).  ``node_kill`` is excluded by default -- recovery scenarios
+    compose it explicitly rather than by lottery.
+    """
+    if n_faults < 0:
+        raise ValueError(f"n_faults must be >= 0, got {n_faults}")
+    rng = random.Random(seed)
+    mean_dur = horizon / 10.0 if mean_duration is None else mean_duration
+    specs = []
+    for _ in range(n_faults):
+        kind = rng.choice(list(kinds))
+        t_start = rng.uniform(0.0, 0.8 * horizon)
+        duration = min(rng.expovariate(1.0 / mean_dur), horizon - t_start)
+        if kind == "link_degrade":
+            specs.append(FaultSpec(
+                kind, t_start, duration,
+                tier=rng.randrange(n_tiers),
+                beta_scale=rng.uniform(2.0, 8.0),
+                alpha_add=rng.uniform(0.0, 100e-6),
+            ))
+        elif kind == "straggler":
+            specs.append(FaultSpec(
+                kind, t_start, duration,
+                node=rng.randrange(n_nodes),
+                compute_scale=rng.uniform(1.5, 4.0),
+            ))
+        elif kind == "transient_drop":
+            specs.append(FaultSpec(
+                kind, t_start, duration, n_drops=rng.randint(1, 3),
+            ))
+        elif kind == "node_kill":
+            specs.append(FaultSpec(kind, t_start, duration,
+                                   node=rng.randrange(n_nodes)))
+        else:
+            raise ValueError(f"unknown fault kind {kind!r}")
+    return sorted(specs, key=lambda s: (s.t_start, s.kind))
+
+
+def scale_faults(specs, t_scale: float) -> list[FaultSpec]:
+    """Shift a fault schedule onto a stretched/compressed horizon."""
+    return [
+        replace(s, t_start=s.t_start * t_scale,
+                duration=(s.duration * t_scale
+                          if s.duration != float("inf") else s.duration))
+        for s in specs
+    ]

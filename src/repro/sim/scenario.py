@@ -23,6 +23,7 @@ from dataclasses import dataclass, replace
 
 from .cluster import SimCluster
 from .engine import Engine
+from .faults import FaultInjector, FaultSpec
 from .serving import ServingConfig, ServingSim
 from .workload import WorkloadConfig, generate_trace
 
@@ -36,10 +37,15 @@ class Scenario:
     fanout: tuple = (2, 4, 2)            # reduced v5e shape (16 procs)
     workload: WorkloadConfig = WorkloadConfig()
     serving: ServingConfig = ServingConfig()
+    faults: tuple = ()                   # FaultSpecs injected into sim runs
     doc: str = ""
 
     def with_(self, **kw) -> "Scenario":
         return replace(self, **kw)
+
+    def healthy(self) -> "Scenario":
+        """The same experiment with no faults (the comparison baseline)."""
+        return replace(self, faults=())
 
 
 SCENARIOS = {
@@ -77,6 +83,44 @@ SCENARIOS = {
                                 burst_mult=5.0, seed=3),
         serving=ServingConfig(max_batch=16),
         doc="5x traffic spike over 10% of the horizon",
+    ),
+    # -- fault scenarios: same machinery, FaultSpecs armed ---------------
+    "kill_recovery": Scenario(
+        name="kill_recovery",
+        fanout=(2, 4, 2),
+        workload=WorkloadConfig(rate=2.0, horizon=10.0, arrival="poisson",
+                                mean_prompt_tokens=64, mean_gen_tokens=16,
+                                max_prompt_tokens=256, max_gen_tokens=64,
+                                seed=0),
+        serving=ServingConfig(max_batch=8, restore_overhead_s=0.5),
+        faults=(FaultSpec("node_kill", t_start=3.0, node=0),),
+        doc="a node dies mid-trace: watchdog detects, the cluster shrinks "
+            "to the surviving pod, in-flight requests restart, serving "
+            "resumes -- the CI full-loop recovery gate",
+    ),
+    "brownout_burst": Scenario(
+        name="brownout_burst",
+        fanout=(4, 8, 2),
+        workload=WorkloadConfig(rate=3.0, horizon=60.0, arrival="burst",
+                                burst_mult=5.0, seed=3),
+        serving=ServingConfig(max_batch=16, max_queue_wait_s=10.0),
+        faults=(FaultSpec("link_degrade", t_start=15.0, duration=20.0,
+                          tier="dcn", beta_scale=8.0, alpha_add=20e-3),),
+        doc="the DCN tier browns out during the burst (1/8 bandwidth, "
+            "+20ms latency from congestion); steps re-price on the "
+            "degraded topology and requests waiting past 10s are shed "
+            "instead of queueing forever",
+    ),
+    "straggler": Scenario(
+        name="straggler",
+        fanout=(4, 8, 2),
+        workload=WorkloadConfig(rate=4.0, horizon=60.0, arrival="poisson",
+                                seed=1),
+        serving=ServingConfig(max_batch=16),
+        faults=(FaultSpec("straggler", t_start=20.0, duration=20.0,
+                          node=0, compute_scale=3.0),),
+        doc="one node computes 3x slower for a 20s window; every step "
+            "runs at the straggler's pace until the window closes",
     ),
 }
 
@@ -130,31 +174,45 @@ def unloaded_latency(sc: Scenario, calibration=None) -> float:
 
 
 def run_scenario(sc: Scenario, mode: str = "sim", *, calibration=None,
-                 rate_scale: float = 1.0, max_live_requests: int = 2) -> dict:
+                 rate_scale: float = 1.0, max_live_requests: int = 2,
+                 live_timeout_s: float | None = None) -> dict:
     """Run a scenario and return its metrics dict (one schema, both modes)."""
     if mode == "sim":
         wl = replace(sc.workload, rate=sc.workload.rate * rate_scale)
         cluster = build_cluster(sc, calibration)
         trace = generate_trace(wl)
         sim = ServingSim(cluster, sc.serving)
+        injector = None
+        if sc.faults:
+            injector = FaultInjector(cluster.engine, cluster, sc.faults)
+            sim.attach_faults(injector)
+            injector.arm()
         metrics = sim.run(trace)
         metrics.update(
             scenario=sc.name, mode="sim", rate_scale=rate_scale,
             fanout=list(sc.fanout), n_procs=cluster.topo.n_procs,
             calibrated=calibration is not None,
+            faults=injector.schedule() if injector else [],
         )
         return metrics
     if mode == "live":
-        return _run_live(sc, rate_scale, max_live_requests)
+        return _run_live(sc, rate_scale, max_live_requests, live_timeout_s)
     raise ValueError(f"mode must be 'sim' or 'live', got {mode!r}")
 
 
-def _run_live(sc: Scenario, rate_scale: float, max_requests: int) -> dict:
+def _run_live(sc: Scenario, rate_scale: float, max_requests: int,
+              timeout_s: float | None = None) -> dict:
     """Replay the scenario's first requests through the real serve.Engine.
 
-    Imported lazily: the simulator itself never touches jax, so ``sim``
-    stays importable on hosts without devices.
+    Each request is generated independently; with ``timeout_s`` set, a
+    generate call that hangs past the deadline FAILS that request (an
+    error row in the metrics) instead of wedging the whole replay loop --
+    the generation keeps running in its worker thread, but the loop moves
+    on and reports.  Imported lazily: the simulator itself never touches
+    jax, so ``sim`` stays importable on hosts without devices.
     """
+    import concurrent.futures as cf
+
     import jax
     import numpy as np
 
@@ -181,24 +239,48 @@ def _run_live(sc: Scenario, rate_scale: float, max_requests: int) -> dict:
     params = lm.init_params(jax.random.PRNGKey(wl.seed), cfg)
     eng = ServeEngine(cfg, params, max_len=prompt_len + gen_len + 1,
                       seed=wl.seed)
-    res = eng.generate(prompts, gen_len)
     from .serving import percentile
 
-    steps = list(res.step_latencies_s)
-    latency = res.prefill_s + res.decode_s
+    latencies, ttfts, steps, tok_s = [], [], [], []
+    errors = []
+    n_steps = 0
+    with cf.ThreadPoolExecutor(max_workers=1) as pool:
+        for req, prompt in zip(reqs, prompts):
+            fut = pool.submit(eng.generate, prompt[None, :], gen_len)
+            try:
+                res = fut.result(timeout=timeout_s)
+            except cf.TimeoutError:
+                errors.append({
+                    "rid": req.rid,
+                    "error": f"generate exceeded {timeout_s:g}s timeout",
+                })
+                continue
+            except Exception as exc:  # noqa: BLE001 -- error row, not a crash
+                errors.append({"rid": req.rid, "error": repr(exc)})
+                continue
+            latencies.append(res.prefill_s + res.decode_s)
+            ttfts.append(res.prefill_s)
+            steps.extend(res.step_latencies_s)
+            tok_s.append(res.decode_tok_s)
+            n_steps += res.steps
+    wall = sum(latencies)
     return {
         "scenario": sc.name,
         "mode": "live",
         "rate_scale": rate_scale,
         "n_requests": len(reqs),
-        "n_completed": len(reqs),
-        "throughput_rps": len(reqs) / latency if latency else 0.0,
-        "throughput_tok_s": res.decode_tok_s,
-        "latency_p50_s": latency,
-        "latency_p99_s": latency,
-        "ttft_p50_s": res.prefill_s,
-        "ttft_p99_s": res.prefill_s,
+        "n_completed": len(latencies),
+        "n_errors": len(errors),
+        "errors": errors,
+        "throughput_rps": len(latencies) / wall if wall else 0.0,
+        "throughput_tok_s": (
+            sum(tok_s) / len(tok_s) if tok_s else 0.0
+        ),
+        "latency_p50_s": percentile(latencies, 50),
+        "latency_p99_s": percentile(latencies, 99),
+        "ttft_p50_s": percentile(ttfts, 50),
+        "ttft_p99_s": percentile(ttfts, 99),
         "step_p50_s": percentile(steps, 50),
         "step_p99_s": percentile(steps, 99),
-        "n_steps": res.steps,
+        "n_steps": n_steps,
     }

@@ -33,6 +33,7 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
+from ..comm.health import RetryPolicy, StepWatchdog
 from .cluster import SimCluster
 from .workload import Request, Trace
 
@@ -64,12 +65,20 @@ class ServingConfig:
     collective: str = "all_reduce"
     strategy: str | None = None            # None => planner's best_plan
     sync_quantum_bytes: float = 16384.0    # payload quantization grid
+    # fault handling (see ``attach_faults``)
+    restore_overhead_s: float = 0.5        # checkpoint-restore constant
+    restore_bytes: float = 64e6            # state re-materialized on recovery
+    max_queue_wait_s: float = float("inf")  # shed queued requests past this
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.sync_quantum_bytes <= 0:
             raise ValueError("sync_quantum_bytes must be positive")
+        if self.restore_overhead_s < 0 or self.restore_bytes < 0:
+            raise ValueError("restore costs must be >= 0")
+        if self.max_queue_wait_s <= 0:
+            raise ValueError("max_queue_wait_s must be positive")
 
 
 @dataclass
@@ -82,6 +91,8 @@ class RequestRecord:
     t_finish: float = float("nan")
     tokens_done: int = 0
     step_latencies: list = field(default_factory=list)
+    shed: bool = False        # dropped by admission control, never served
+    n_restarts: int = 0       # times restarted by an elastic recovery
 
     @property
     def latency(self) -> float:
@@ -119,6 +130,139 @@ class ServingSim:
         )
         for node in cluster.nodes:
             node.kv_capacity_bytes = cfg.kv_capacity_bytes
+        # fault state -- inert until ``attach_faults`` is called
+        self.injector = None
+        self.retry = RetryPolicy()
+        self.watchdog = StepWatchdog(expected_s=self._expected_step_s())
+        self._halted = False          # node lost: detection/recovery pending
+        self._step_event = None       # cancellable handle of the step's end
+        self._t_kill = float("nan")
+        self._last_sync_bytes = cfg.sync_quantum_bytes
+        self.n_shed = 0
+        self.n_retries = 0
+        self.n_slow_steps = 0
+        self.recoveries: list[dict] = []
+
+    # -- faults ----------------------------------------------------------
+
+    def _expected_step_s(self) -> float:
+        """Modelled healthy single-decode step: the watchdog's seed."""
+        return (
+            self.cfg.step_overhead
+            + self.cfg.decode_time_per_token
+            + self.cluster.collective_time(
+                self.cfg.collective, self.cfg.sync_quantum_bytes,
+                strategy=self.cfg.strategy,
+            )
+        )
+
+    def attach_faults(self, injector, retry: RetryPolicy | None = None) -> None:
+        """Subscribe to a ``FaultInjector``'s events (before ``run``).
+
+        Link degradations and stragglers need no subscription -- their
+        price shows up in the next step automatically -- but node kills
+        drive the detection/recovery state machine here.
+        """
+        self.injector = injector
+        if retry is not None:
+            self.retry = retry
+        injector.on_fault(self._on_fault)
+
+    def _on_fault(self, action: str, spec) -> None:
+        if spec.kind == "node_kill" and action == "apply":
+            self._begin_node_loss()
+
+    def _begin_node_loss(self) -> None:
+        """A node just died.  The in-flight step hangs; the watchdog's
+        timeout is the detection latency before recovery starts."""
+        if self._halted:
+            return  # already detecting/recovering; fold into this episode
+        self._halted = True
+        self._t_kill = self.cluster.engine.now
+        if self._step_event is not None:
+            self._step_event.cancel()
+            self._step_event = None
+        self.cluster.engine.schedule(
+            self.watchdog.timeout_s, self._on_node_loss_detected
+        )
+
+    def _on_node_loss_detected(self) -> None:
+        """Shrink to survivors, re-plan, pay the restore, then resume."""
+        cluster = self.cluster
+        t_detected = cluster.engine.now
+        self._account(0)
+        self._step_running = False
+        # in-flight requests lost their KV shards on the dead node: they
+        # restart from prefill, ahead of everything queued behind them
+        restarted = list(self.active)
+        for rec in restarted:
+            self._release_kv(rec.req)
+            rec.tokens_done = 0
+            rec.n_restarts += 1
+            rec.t_admitted = float("nan")
+        self.queue.extendleft(reversed(restarted))
+        self.active = []
+        self._prefilling = []
+        plan_before = cluster.plan_for(
+            self.cfg.collective, self._last_sync_bytes
+        )
+        new_topo = cluster.healthy_topo.shrunk(sorted(cluster.dead_nodes))
+        cluster.shrink_to(new_topo)
+        if self.injector is not None:
+            self.injector.refresh()  # re-compose active link faults
+        self._kv_per_node_token = (
+            self.cfg.kv_bytes_per_token / new_topo.n_procs
+        )
+        for node in cluster.nodes:
+            node.kv_capacity_bytes = self.cfg.kv_capacity_bytes
+        plan_after = cluster.plan_for(
+            self.cfg.collective, self._last_sync_bytes
+        )
+        t_reshard = cluster.collective_time(
+            self.cfg.collective, self.cfg.restore_bytes,
+            strategy=self.cfg.strategy,
+        )
+        self.recoveries.append({
+            "t_kill_s": self._t_kill,
+            "t_detected_s": t_detected,
+            "detect_latency_s": t_detected - self._t_kill,
+            "restore_s": self.cfg.restore_overhead_s + t_reshard,
+            "n_restarted": len(restarted),
+            "n_procs_after": new_topo.n_procs,
+            "plan_before": plan_before,
+            "plan_after": plan_after,
+        })
+        cluster.engine.schedule(
+            self.cfg.restore_overhead_s + t_reshard, self._finish_recovery
+        )
+
+    def _finish_recovery(self) -> None:
+        now = self.cluster.engine.now
+        rec = self.recoveries[-1]
+        rec["t_resumed_s"] = now
+        rec["recovery_time_s"] = now - rec["t_kill_s"]
+        self._halted = False
+        self._t_kill = float("nan")
+        self.watchdog.rebase(self._expected_step_s())
+        if self.active or self.queue:
+            self._start_step()
+
+    def _should_shed(self, rec: RequestRecord) -> bool:
+        """Admission shedding: a request that can NEVER fit the shrunk KV
+        budget, or has waited past the queue-wait ceiling, is dropped
+        rather than left blocking the head of the queue forever."""
+        per_node = self._kv_footprint(rec.req)
+        if per_node > min(
+            n.kv_capacity_bytes for n in self.cluster.nodes
+        ):
+            return True
+        wait = self.cluster.engine.now - rec.req.t_arrival
+        return wait > self.cfg.max_queue_wait_s
+
+    def _shed(self, rec: RequestRecord) -> None:
+        rec.shed = True
+        self.n_shed += 1
+        self._account(-1)
 
     # -- bookkeeping ----------------------------------------------------
 
@@ -159,14 +303,20 @@ class ServingSim:
         self.records.append(rec)
         self.queue.append(rec)
         self._account(+1)
-        if not self._step_running:
+        if not self._step_running and not self._halted:
             self._start_step()
 
     def _start_step(self) -> None:
+        if self._halted:
+            return  # a node is lost; nothing runs until recovery finishes
         # continuous batching: top the batch up at every step boundary
         admitted = []
         while self.queue and len(self.active) < self.cfg.max_batch:
             rec = self.queue[0]
+            if self._should_shed(rec):
+                self.queue.popleft()
+                self._shed(rec)
+                continue
             if not self._reserve_kv(rec.req):
                 break  # head-of-line blocks until KV frees (FIFO fairness)
             self.queue.popleft()
@@ -185,21 +335,35 @@ class ServingSim:
             self.cfg.step_overhead
             + self.cfg.prefill_time_per_token * prompt_tokens
             + self.cfg.decode_time_per_token * n_decoding
-        )
+        ) * self.cluster.compute_multiplier()  # stragglers pace the step
         q = self.cfg.sync_quantum_bytes
         sync_bytes = max(
             q, q * round(self.cfg.tp_sync_bytes_per_token * n_tokens / q)
         )
+        self._last_sync_bytes = sync_bytes
         t_sync = self.cluster.collective_time(
             self.cfg.collective, sync_bytes, strategy=self.cfg.strategy
         )
-        t_step = compute + t_sync
+        # transient drops: each failed collective is retried after a
+        # bounded backoff, re-paying the sync (health-layer pricing)
+        n_retries = 0
+        while (n_retries < self.retry.max_attempts - 1
+               and self.cluster.consume_drop()):
+            n_retries += 1
+        self.n_retries += n_retries
+        t_step = (compute + t_sync
+                  + n_retries * t_sync + self.retry.total_delay(n_retries))
         self.step_durations.append(t_step)
         self.cluster.n_collectives += 1
-        self.cluster.engine.schedule(t_step, self._end_step, t_step)
+        self._step_event = self.cluster.engine.schedule(
+            t_step, self._end_step, t_step
+        )
 
     def _end_step(self, t_step: float) -> None:
         now = self.cluster.engine.now
+        self._step_event = None
+        if self.watchdog.observe(t_step) == "slow":
+            self.n_slow_steps += 1
         self._account(0)  # flush the step's busy time before going idle
         self._step_running = False
         still_active = []
@@ -255,4 +419,14 @@ class ServingSim:
             "utilization": self._busy_area / span if span else 0.0,
             "n_steps": len(self.step_durations),
             "n_events": self.cluster.engine.n_processed,
+            # fault/recovery metrics (all zero on a healthy run)
+            "n_shed": self.n_shed,
+            "n_retries": self.n_retries,
+            "n_slow_steps": self.n_slow_steps,
+            "n_recoveries": len(self.recoveries),
+            "n_restarted": sum(r["n_restarted"] for r in self.recoveries),
+            "recovery_time_s": sum(
+                r.get("recovery_time_s", 0.0) for r in self.recoveries
+            ),
+            "recoveries": list(self.recoveries),
         }

@@ -4,12 +4,18 @@ Wraps the jitted train step with the operational machinery a 1000-node job
 needs:
 
   * checkpoint-restart: resume from the newest complete checkpoint
-    (``Checkpointer`` commits atomically, validates CRCs);
+    (``Checkpointer`` commits atomically, validates CRCs, and falls back
+    past a corrupt snapshot);
   * periodic async snapshots (no step-time stall beyond device->host copy);
   * straggler / hang mitigation: a per-step deadline; steps exceeding it are
-    logged and counted -- on real pods the runner would trigger the
-    re-mesh path (here: surfaced via metrics and exercised in tests with an
-    injected slow step);
+    logged and counted, and an optional ``comm.health.ReplanMonitor``
+    watches the same timings to trigger a re-plan when drift persists;
+  * elastic recovery: a step that raises ``NodeLossError`` (injected via
+    ``lose_node_at_step`` or raised by a real runner's health checks)
+    restores the newest checkpoint and hands control to the caller's
+    ``recover`` hook, which re-meshes onto the survivors and returns a new
+    step function -- training continues on the shrunk cluster, and the
+    wall-clock recovery time lands in ``LoopState.recoveries``;
   * crash injection hooks for tests (``fail_at_step``).
 """
 
@@ -22,6 +28,10 @@ from dataclasses import dataclass, field
 from repro.checkpoint.checkpointer import Checkpointer
 
 
+class NodeLossError(RuntimeError):
+    """A participant died mid-step: trigger the elastic recovery path."""
+
+
 @dataclass
 class LoopConfig:
     total_steps: int = 100
@@ -31,6 +41,7 @@ class LoopConfig:
     log_every: int = 10
     step_deadline_s: float = 0.0      # 0 = disabled
     fail_at_step: int = -1            # test hook: raise mid-run
+    lose_node_at_step: int = -1       # test hook: NodeLossError mid-run
 
 
 @dataclass
@@ -38,6 +49,7 @@ class LoopState:
     step: int = 0
     losses: list = field(default_factory=list)
     slow_steps: list = field(default_factory=list)
+    recoveries: list = field(default_factory=list)
 
 
 def run(
@@ -47,8 +59,19 @@ def run(
     pipeline,
     lcfg: LoopConfig,
     log=print,
+    *,
+    recover=None,
+    monitor=None,
 ) -> LoopState:
-    """Run (or resume) training.  Returns the loop state."""
+    """Run (or resume) training.  Returns the loop state.
+
+    ``recover(params, opt_state)`` is the elastic hook: called after a
+    ``NodeLossError`` with the checkpoint-restored state, it must return
+    ``(train_step, params, opt_state)`` re-meshed onto the surviving
+    devices.  Without it, node loss propagates like any crash.
+    ``monitor`` is an optional ``comm.health.ReplanMonitor`` fed every
+    step's wall-clock time.
+    """
     ckpt = Checkpointer(lcfg.ckpt_dir, keep=lcfg.keep)
     state = LoopState()
 
@@ -58,18 +81,56 @@ def run(
         state.step = step0
         log(f"[loop] resumed from step {step0}")
 
+    pending_loss = lcfg.lose_node_at_step
     while state.step < lcfg.total_steps:
         batch = pipeline.batch(state.step)
         t0 = time.time()
         if state.step == lcfg.fail_at_step:
             raise RuntimeError(f"injected failure at step {state.step}")
-        params, opt_state, metrics = train_step(params, opt_state, batch)
+        try:
+            if state.step == pending_loss:
+                raise NodeLossError(
+                    f"injected node loss at step {state.step}"
+                )
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+        except NodeLossError as exc:
+            if recover is None:
+                raise
+            pending_loss = -1  # fires once; the shrunk cluster runs on
+            t_rec = time.time()
+            lost_at = state.step
+            log(f"[loop] NODE LOSS at step {lost_at}: {exc}")
+            ckpt.wait()        # join any in-flight snapshot before scanning
+            restored_from = ckpt.latest_step()
+            if restored_from is not None:
+                (params, opt_state), step0 = ckpt.restore(
+                    (params, opt_state)
+                )
+                state.step = step0
+                # the rewound steps' losses get recomputed after resume
+                n_rewound = min(lost_at - step0, len(state.losses))
+                if n_rewound > 0:
+                    del state.losses[-n_rewound:]
+            train_step, params, opt_state = recover(params, opt_state)
+            dt_rec = time.time() - t_rec
+            state.recoveries.append({
+                "lost_at_step": lost_at,
+                "restored_from_step": restored_from,
+                "resumed_at_step": state.step,
+                "recovery_time_s": dt_rec,
+            })
+            log(f"[loop] recovered in {dt_rec:.2f}s: resumed at step "
+                f"{state.step} from ckpt {restored_from}")
+            continue
         loss = float(metrics["loss"])
         dt = time.time() - t0
         if lcfg.step_deadline_s and dt > lcfg.step_deadline_s:
             state.slow_steps.append((state.step, dt))
             log(f"[loop] STRAGGLER step {state.step}: {dt:.2f}s "
                 f"(deadline {lcfg.step_deadline_s:.2f}s)")
+        if monitor is not None and monitor.observe(dt) == "replanned":
+            log(f"[loop] REPLAN at step {state.step}: step time drifted "
+                f"to {dt * 1e3:.0f}ms")
         state.step += 1
         state.losses.append(loss)
         if state.step % lcfg.log_every == 0:

@@ -236,6 +236,7 @@ def plan_pod_sync(
     tcfg: "TrainConfig",
     n_pods: int,
     chips_per_pod: int | None = None,
+    dispatch_cost: float | None = None,
 ) -> "comm.PodSyncDecision":
     """Resolve the pod-tier sync decision (format + bucket size + overlap).
 
@@ -248,7 +249,10 @@ def plan_pod_sync(
     ``tcfg.overlap`` enabled the planner additionally weighs the
     compute-overlapped step (per-microbatch partial-mean syncs hidden
     under backward; ``tcfg.compute_time`` sizes the shadow) against the
-    serial one -- also for a pinned wire format.
+    serial one -- also for a pinned wire format.  ``dispatch_cost``
+    overrides the per-issue overhead (None = resolve from calibration /
+    the committed BENCH_step fixture; benchmarks pass 0.0 to price the
+    dispatch-free model they fit against).
     """
     overlap = parse_overlap(tcfg.overlap)
     manual = n_pods > 1 and tcfg.pod_mode == "manual"
@@ -276,6 +280,7 @@ def plan_pod_sync(
                 accum_steps=tcfg.accum_steps,
                 overlap=overlap,
                 formats=[tcfg.pod_sync],
+                dispatch_cost=dispatch_cost,
             )
         return comm.PodSyncDecision(
             fmt=tcfg.pod_sync,
@@ -296,6 +301,7 @@ def plan_pod_sync(
         compute_time=tcfg.compute_time,
         accum_steps=tcfg.accum_steps,
         overlap=overlap if overlap_wanted else "off",
+        dispatch_cost=dispatch_cost,
     )
 
 

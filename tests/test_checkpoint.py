@@ -60,6 +60,71 @@ def test_corruption_detected(tmp_path):
         ck.restore(t)
 
 
+def test_truncated_arrays_falls_back_to_previous_step(tmp_path):
+    """A committed-but-truncated arrays.npz (crash racing the final fsync)
+    must not brick the resume: restore skips it and loads the next-older
+    complete checkpoint."""
+    ck = Checkpointer(tmp_path, keep=3)
+    t = _tree()
+    ck.save(1, t, blocking=True)
+    ck.save(2, _tree(2), blocking=True)
+    f = Path(tmp_path) / "step_00000002" / "arrays.npz"
+    f.write_bytes(f.read_bytes()[: f.stat().st_size // 2])
+    got, step = ck.restore(t)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(_tree()), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_missing_manifest_entry_is_corrupt(tmp_path):
+    import json
+
+    from repro.checkpoint.checkpointer import CheckpointCorruptError
+
+    ck = Checkpointer(tmp_path)
+    ck.save(4, _tree(), blocking=True)
+    mf = Path(tmp_path) / "step_00000004" / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    del manifest["leaves"]["nested/b"]
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointCorruptError, match="step 4") as exc:
+        ck.restore(_tree(), step=4)
+    assert exc.value.step == 4
+    assert "nested/b" in exc.value.reason
+
+
+def test_explicit_step_raises_instead_of_falling_back(tmp_path):
+    """An explicitly requested step must fail loudly (naming the bad step)
+    rather than silently loading older state."""
+    from repro.checkpoint.checkpointer import CheckpointCorruptError
+
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    ck.save(1, t, blocking=True)
+    ck.save(2, t, blocking=True)
+    f = Path(tmp_path) / "step_00000002" / "arrays.npz"
+    data = bytearray(f.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    f.write_bytes(bytes(data))
+    with pytest.raises(CheckpointCorruptError, match="step 2"):
+        ck.restore(t, step=2)
+    # ... while the default resume path falls back to step 1
+    _, step = ck.restore(t)
+    assert step == 1
+
+
+def test_every_checkpoint_corrupt_aggregates(tmp_path):
+    from repro.checkpoint.checkpointer import CheckpointCorruptError
+
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    for s in (1, 2):
+        ck.save(s, t, blocking=True)
+        (Path(tmp_path) / f"step_{s:08d}" / "arrays.npz").write_bytes(b"x")
+    with pytest.raises(CheckpointCorruptError, match="every complete"):
+        ck.restore(t)
+
+
 def test_incomplete_checkpoint_ignored(tmp_path):
     ck = Checkpointer(tmp_path)
     ck.save(1, _tree(), blocking=True)

@@ -1,0 +1,377 @@
+"""Fault injection, degraded-topology re-planning, and elastic recovery."""
+
+import json
+
+import pytest
+
+from repro.comm.health import (
+    ReplanMonitor,
+    RetryPolicy,
+    StepWatchdog,
+    retry_with_backoff,
+)
+from repro.core.topology import topology_preset
+from repro.sim import (
+    Engine,
+    FaultInjector,
+    FaultSpec,
+    SimCluster,
+    get_scenario,
+    random_faults,
+    run_scenario,
+    scale_faults,
+)
+
+
+def _topo(fanout=(2, 4, 2)):
+    return topology_preset("v5e_3tier", 2).with_shape(fanout)
+
+
+# ----------------------------------------------------------------------
+# Degraded / shrunk topology views
+# ----------------------------------------------------------------------
+
+def test_degraded_topology_prices_worse_and_stays_valid():
+    topo = _topo()
+    deg = topo.degraded(tier="dcn", beta_scale=8.0, alpha_add=20e-3)
+    # Rule-2 monotonicity survived (construction validates); params moved
+    tix = len(topo.tiers) - 1
+    assert deg.tiers[tix].beta == pytest.approx(topo.tiers[tix].beta * 8.0)
+    assert deg.tiers[tix].alpha == pytest.approx(
+        topo.tiers[tix].alpha + 20e-3
+    )
+    healthy = SimCluster(Engine(), topo)
+    degraded = SimCluster(Engine(), deg)
+    for nbytes in (1 << 16, 1 << 24):
+        assert degraded.collective_time(
+            "all_reduce", float(nbytes)
+        ) > healthy.collective_time("all_reduce", float(nbytes))
+
+
+def test_degraded_inner_tier_lifts_outer_tiers_for_rule2():
+    topo = _topo()
+    # degrade the INNERMOST tier past the outer tiers' params: the outer
+    # tiers must be lifted (max-clamped) or Rule-2 validation would reject
+    deg = topo.degraded(tier=0, beta_scale=1e6, alpha_add=1.0)
+    for inner, outer in zip(deg.tiers, deg.tiers[1:]):
+        assert inner.alpha <= outer.alpha
+        assert inner.beta <= outer.beta
+
+
+def test_degraded_validation():
+    topo = _topo()
+    with pytest.raises(ValueError):
+        topo.degraded(tier="dcn", beta_scale=0.5)
+    with pytest.raises(ValueError):
+        topo.degraded(tier="dcn", alpha_add=-1.0)
+    with pytest.raises(ValueError):
+        topo.degraded(tier="nope", beta_scale=2.0)
+
+
+def test_shrunk_topology_by_ids_and_count():
+    topo = _topo()                      # fanout (2, 4, 2), 16 procs
+    by_ids = topo.shrunk([0])           # node 0 lives in outer group 0
+    assert by_ids.n_procs == 8
+    assert by_ids.fanout[-1] == 1
+    by_count = topo.shrunk(1)
+    assert by_count.n_procs == by_ids.n_procs
+    with pytest.raises(ValueError):
+        topo.shrunk(list(range(topo.n_procs)))   # no survivors
+
+
+def test_shrunk_topology_flips_the_plan():
+    """The acceptance-criterion flip: losing an outer group changes the
+    best all_reduce strategy at serving payload sizes."""
+    topo = _topo()
+    healthy = SimCluster(Engine(), topo)
+    shrunk = SimCluster(Engine(), topo.shrunk([0]))
+    nbytes = float(1 << 16)
+    assert healthy.plan_for("all_reduce", nbytes) != shrunk.plan_for(
+        "all_reduce", nbytes
+    )
+
+
+# ----------------------------------------------------------------------
+# FaultSpec / FaultInjector
+# ----------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor_strike", t_start=1.0)
+    with pytest.raises(ValueError):
+        FaultSpec("link_degrade", t_start=-1.0, beta_scale=2.0)
+    with pytest.raises(ValueError):
+        FaultSpec("link_degrade", t_start=0.0)      # no degradation given
+    with pytest.raises(ValueError):
+        FaultSpec("straggler", t_start=0.0, compute_scale=1.0)
+    with pytest.raises(ValueError):
+        FaultSpec("transient_drop", t_start=0.0, n_drops=0)
+
+
+def test_injector_applies_and_reverts_link_fault():
+    eng = Engine()
+    cluster = SimCluster(eng, _topo())
+    t_healthy = cluster.collective_time("all_reduce", 1e6)
+    spec = FaultSpec("link_degrade", t_start=1.0, duration=2.0,
+                     tier="dcn", beta_scale=8.0, alpha_add=1e-3)
+    inj = FaultInjector(eng, cluster, [spec])
+    inj.arm()
+    with pytest.raises(RuntimeError):
+        inj.arm()                                   # double-arm refused
+
+    seen = []
+    eng.at(2.0, lambda: seen.append(
+        cluster.collective_time("all_reduce", 1e6)))
+    eng.at(4.0, lambda: seen.append(
+        cluster.collective_time("all_reduce", 1e6)))
+    eng.run()
+    t_degraded, t_after = seen
+    assert t_degraded > t_healthy                   # repriced in-window
+    assert t_after == pytest.approx(t_healthy)      # reverted after
+    assert [(t, a) for t, a, _ in inj.log] == [
+        (1.0, "apply"), (3.0, "revert")
+    ]
+
+
+def test_overlapping_link_faults_compose():
+    eng = Engine()
+    cluster = SimCluster(eng, _topo())
+    specs = [
+        FaultSpec("link_degrade", t_start=1.0, duration=4.0,
+                  tier="dcn", beta_scale=4.0),
+        FaultSpec("link_degrade", t_start=2.0, duration=1.0,
+                  tier="dcn", beta_scale=2.0),
+    ]
+    inj = FaultInjector(eng, cluster, specs)
+    inj.arm()
+    betas = {}
+    base = cluster.topo.tiers[-1].beta
+    for t in (1.5, 2.5, 3.5, 6.0):
+        eng.at(t, lambda t=t: betas.update(
+            {t: cluster.topo.tiers[-1].beta}))
+    eng.run()
+    assert betas[1.5] == pytest.approx(base * 4.0)
+    assert betas[2.5] == pytest.approx(base * 8.0)  # stacked, not clobbered
+    assert betas[3.5] == pytest.approx(base * 4.0)
+    assert betas[6.0] == pytest.approx(base)
+
+
+def test_random_faults_deterministic():
+    a = random_faults(7, 60.0, n_faults=5, n_nodes=4, n_tiers=3)
+    b = random_faults(7, 60.0, n_faults=5, n_nodes=4, n_tiers=3)
+    assert a == b
+    assert a != random_faults(8, 60.0, n_faults=5, n_nodes=4, n_tiers=3)
+    assert all(s.t_start + min(s.duration, 0.0) <= 60.0 for s in a)
+    doubled = scale_faults(a, 2.0)
+    assert [s.t_start for s in doubled] == [2 * s.t_start for s in a]
+
+
+def test_same_seed_same_schedule_same_metrics():
+    """S3 acceptance: one seed fully determines the fault schedule AND the
+    resulting metrics rows -- two runs are byte-identical."""
+    sc = get_scenario("kill_recovery")
+    m1 = run_scenario(sc, "sim")
+    m2 = run_scenario(sc, "sim")
+    assert m1["faults"] == m2["faults"]
+    assert json.dumps(m1, sort_keys=True) == json.dumps(m2, sort_keys=True)
+
+
+# ----------------------------------------------------------------------
+# Serving under faults: the full recovery loop + conservation laws
+# ----------------------------------------------------------------------
+
+def test_kill_recovery_full_loop():
+    """Node kill -> watchdog detect -> shrunk-topology re-plan (strategy
+    flips) -> restore -> resume, with every request eventually served."""
+    m = run_scenario(get_scenario("kill_recovery"), "sim")
+    assert m["n_completed"] == m["n_requests"]
+    assert m["n_recoveries"] == 1
+    rec = m["recoveries"][0]
+    assert rec["t_detected_s"] > rec["t_kill_s"]
+    assert rec["detect_latency_s"] > 0
+    assert rec["n_procs_after"] < 16
+    assert rec["plan_before"] != rec["plan_after"]   # the re-plan flipped
+    assert m["recovery_time_s"] > 0
+    assert rec["t_resumed_s"] > rec["t_detected_s"]
+
+
+def test_littles_law_holds_across_recovery():
+    """L = lambda * W must survive a node kill + restart: the time-integral
+    of requests in system equals completions/span x mean latency when
+    nothing is shed (restarted requests stay in-system from first arrival
+    to final finish)."""
+    for name in ("smoke", "kill_recovery"):
+        m = run_scenario(get_scenario(name), "sim")
+        assert m["n_shed"] == 0
+        assert m["n_completed"] == m["n_requests"]
+        assert m["mean_in_system"] == pytest.approx(
+            m["throughput_rps"] * m["latency_mean_s"], rel=1e-6
+        ), name
+
+
+def test_straggler_slows_steps():
+    m = run_scenario(get_scenario("straggler"), "sim")
+    healthy = run_scenario(get_scenario("straggler").healthy(), "sim")
+    assert m["n_slow_steps"] > 0
+    assert m["latency_p99_s"] > healthy["latency_p99_s"]
+
+
+def test_transient_drops_cost_retries():
+    sc = get_scenario("smoke").with_(faults=(
+        FaultSpec("transient_drop", t_start=1.0, duration=8.0, n_drops=5),
+    ))
+    m = run_scenario(sc, "sim")
+    healthy = run_scenario(sc.healthy(), "sim")
+    assert m["n_retries"] >= 1
+    assert m["n_completed"] == m["n_requests"]       # retried, not lost
+    assert m["latency_p99_s"] >= healthy["latency_p99_s"]
+
+
+def test_brownout_sheds_instead_of_queueing_forever():
+    m = run_scenario(get_scenario("brownout_burst"), "sim")
+    assert m["n_shed"] > 0
+    assert m["n_completed"] + m["n_shed"] == m["n_requests"]
+
+
+# ----------------------------------------------------------------------
+# comm.health: watchdog, retry, replan monitor
+# ----------------------------------------------------------------------
+
+def test_watchdog_verdicts_and_ewma():
+    wd = StepWatchdog(expected_s=1.0, alpha=0.5, drift_band=1.5,
+                      timeout_factor=5.0)
+    assert wd.observe(1.0) == "ok"
+    assert wd.observe(2.0) == "slow"              # > 1.5 x reference
+    assert wd.observe(100.0) == "lost"            # > timeout_s
+    ewma_before = wd.ewma_s
+    assert wd.ewma_s == ewma_before               # lost samples excluded
+    assert wd.n_slow == 1
+    wd.rebase(0.5)
+    assert wd.reference_s == 0.5
+    assert wd.observe(0.5) == "ok"
+
+
+def test_watchdog_timeout_tracks_ewma():
+    wd = StepWatchdog(expected_s=1.0, alpha=1.0, timeout_factor=3.0)
+    assert wd.timeout_s == pytest.approx(3.0)
+    wd.observe(2.0)                               # ewma jumps to 2.0
+    assert wd.timeout_s == pytest.approx(6.0)
+
+
+def test_retry_policy_backoff():
+    pol = RetryPolicy(max_attempts=4, base_delay_s=0.1, backoff=2.0,
+                      max_delay_s=0.3)
+    assert [pol.delay(i) for i in range(4)] == pytest.approx(
+        [0.1, 0.2, 0.3, 0.3]                      # capped at max_delay_s
+    )
+    assert pol.total_delay(3) == pytest.approx(0.6)
+
+
+def test_retry_with_backoff_retries_then_raises():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    slept = []
+    assert retry_with_backoff(
+        flaky, RetryPolicy(max_attempts=4, base_delay_s=0.01),
+        sleep=slept.append,
+    ) == "ok"
+    assert calls["n"] == 3 and len(slept) == 2
+
+    def always_fails():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError, match="permanent"):
+        retry_with_backoff(
+            always_fails, RetryPolicy(max_attempts=2, base_delay_s=0.0),
+            sleep=lambda _: None,
+        )
+
+    def wrong_kind():
+        raise KeyError("not retriable")
+
+    with pytest.raises(KeyError):                 # no retry on other types
+        retry_with_backoff(
+            wrong_kind, RetryPolicy(max_attempts=5, base_delay_s=0.0),
+            sleep=lambda _: None,
+        )
+
+
+def test_replan_monitor_triggers_after_patience():
+    replans = []
+    wd = StepWatchdog(expected_s=1.0, alpha=0.01, drift_band=1.5)
+
+    def replan():
+        replans.append(True)
+        return 2.0                                # new expected step time
+
+    mon = ReplanMonitor(wd, replan, patience=2)
+    assert mon.observe(1.0) == "ok"
+    assert mon.observe(2.0) == "slow"
+    assert mon.observe(2.0) == "replanned"        # patience hit
+    assert len(replans) == 1
+    assert wd.reference_s == 2.0                  # rebased onto the replan
+    assert mon.observe(2.0) == "ok"               # healthy at the new pace
+
+
+# ----------------------------------------------------------------------
+# Elastic recovery in the training loop
+# ----------------------------------------------------------------------
+
+def test_loop_node_loss_recovers_via_hook(tmp_path):
+    import repro.train.loop as tl
+
+    calls = {"old": 0, "new": 0, "recover": 0}
+
+    def old_step(p, o, b):
+        calls["old"] += 1
+        return p, o, {"loss": 1.0, "grad_norm": 0.0}
+
+    def new_step(p, o, b):
+        calls["new"] += 1
+        return p, o, {"loss": 0.5, "grad_norm": 0.0}
+
+    def recover(params, opt_state):
+        calls["recover"] += 1
+        return new_step, params, opt_state
+
+    class Data:
+        def batch(self, step):
+            return {}
+
+    import numpy as np
+
+    st = tl.run(old_step, {"w": np.zeros(2)}, {"m": np.zeros(2)}, Data(),
+                tl.LoopConfig(total_steps=8, ckpt_every=3, log_every=100,
+                              ckpt_dir=str(tmp_path), lose_node_at_step=5),
+                recover=recover)
+    assert st.step == 8 and len(st.losses) == 8
+    assert calls["recover"] == 1
+    rec = st.recoveries[0]
+    assert rec["lost_at_step"] == 5
+    assert rec["restored_from_step"] == 3         # rewound to the ckpt
+    assert rec["resumed_at_step"] == 3
+    # steps 3..7 re-ran on the new (post-recovery) step function
+    assert calls["new"] == 5
+    assert st.losses[-1] == 0.5
+
+
+def test_loop_node_loss_without_hook_propagates(tmp_path):
+    import repro.train.loop as tl
+
+    class Data:
+        def batch(self, step):
+            return {}
+
+    def step(p, o, b):
+        return p, o, {"loss": 1.0, "grad_norm": 0.0}
+
+    with pytest.raises(tl.NodeLossError):
+        tl.run(step, {}, {}, Data(),
+               tl.LoopConfig(total_steps=5, ckpt_every=100, log_every=100,
+                             ckpt_dir=str(tmp_path), lose_node_at_step=2))

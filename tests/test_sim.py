@@ -355,12 +355,32 @@ def test_overlapped_time_affine_matches_simulator(overlap_build):
 
 def test_fit_dispatch_cost():
     assert core_sim.fit_dispatch_cost(0.10, 0.09, 2) == pytest.approx(5e-3)
-    # measured faster than modelled -> no observable overhead (the
-    # committed BENCH_step fixture's regime, hence the 0.0 default)
+    # measured faster than modelled -> no observable overhead
     assert core_sim.fit_dispatch_cost(0.08, 0.09, 2) == 0.0
+    # the in-code constant is the LAST-RESORT fallback (no fixture, no
+    # calibration): assume zero overhead rather than invent one
     assert core_sim.DEFAULT_DISPATCH_COST == 0.0
     with pytest.raises(ValueError):
         core_sim.fit_dispatch_cost(0.1, 0.1, 0)
+
+
+def test_resolve_dispatch_cost_prefers_committed_fixture(monkeypatch):
+    """With no calibration in play, overlap pricing resolves the committed
+    BENCH_step.json fixture's fit -- the bench's measured overhead reaches
+    planning defaults without any env plumbing."""
+    import json
+    from pathlib import Path
+
+    from repro.comm import grad_sync
+    from repro.comm.calibrate import CALIBRATION_ENV
+
+    monkeypatch.delenv(CALIBRATION_ENV, raising=False)
+    # drop the module-level cache: an earlier test may have resolved the
+    # fixture before this one read the file
+    monkeypatch.setattr(grad_sync, "_FIXTURE_DISPATCH", [])
+    fixture = Path(__file__).resolve().parents[1] / "BENCH_step.json"
+    want = json.loads(fixture.read_text())["dispatch_cost_fit_us"] * 1e-6
+    assert resolve_dispatch_cost() == pytest.approx(want)
 
 
 def test_large_dispatch_cost_flips_auto_overlap_to_serial():
@@ -372,7 +392,9 @@ def test_large_dispatch_cost_flips_auto_overlap_to_serial():
     assert taxed.overlap == 0           # overhead makes overlap a loss
     assert taxed.t_step <= free.t_step + 0.05 * free.accum_steps * free.overlap
     # default resolution (no calibration anywhere) is the fixture fit
-    assert plan_pod_sync(2, 1 << 24, **kw) == free
+    assert plan_pod_sync(2, 1 << 24, **kw) == plan_pod_sync(
+        2, 1 << 24, dispatch_cost=resolve_dispatch_cost(), **kw
+    )
 
 
 # ----------------------------------------------------------------------
